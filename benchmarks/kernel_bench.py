@@ -1,0 +1,83 @@
+"""Micro-benchmarks of the compute layers' CPU-reference paths (the pure
+jnp implementations the dry-run lowers; the Pallas kernels are TPU-target
+and validated in interpret mode — timing interpret mode is meaningless, so
+what's timed here is the jnp math at small shapes for regression tracking).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timed_jit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def attention_bench():
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.layers import _chunked_attention
+    rows = []
+    key = jax.random.key(0)
+    for (bh, s, d) in [(8, 512, 64), (8, 1024, 64)]:
+        q = jax.random.normal(key, (bh, s, d), jnp.bfloat16)
+        k = jax.random.normal(key, (bh, s, d), jnp.bfloat16)
+        v = jax.random.normal(key, (bh, s, d), jnp.bfloat16)
+        us_ref = _timed_jit(jax.jit(
+            lambda q, k, v: attention_ref(q, k, v, mask_kind="causal")),
+            q, k, v)
+        qq = q[:, :, None, :].reshape(1, s, bh, d)
+        pos = jnp.arange(s)
+        us_chunk = _timed_jit(jax.jit(
+            lambda q, k, v: _chunked_attention(
+                q, k, v, pos, pos, "causal", 0, 256)),
+            qq, qq, qq)
+        flops = 4 * bh * s * s * d
+        rows.append((f"attn_dense/bhsd={bh}x{s}x{d}", us_ref,
+                     f"gflops_s={flops / us_ref / 1e3:.1f}"))
+        rows.append((f"attn_chunked/bhsd={bh}x{s}x{d}", us_chunk,
+                     f"gflops_s={flops / us_chunk / 1e3:.1f}"))
+    return rows
+
+
+def ssd_bench():
+    from repro.models.layers import ssd_scan_chunked
+    rows = []
+    key = jax.random.key(1)
+    B, S, H, P, N = 2, 1024, 8, 64, 64
+    x = jax.random.normal(key, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, H)))
+    A = -jnp.exp(jax.random.normal(key, (H,)))
+    B_ = jax.random.normal(key, (B, S, N))
+    C_ = jax.random.normal(key, (B, S, N))
+    f = jax.jit(lambda *a: ssd_scan_chunked(*a, 128)[0])
+    us = _timed_jit(f, x, dt, A, B_, C_)
+    rows.append((f"ssd_chunked/BSHPN={B}x{S}x{H}x{P}x{N}", us,
+                 f"tokens_s={B * S / us * 1e6:.0f}"))
+    return rows
+
+
+def cckp_bench():
+    from repro.core.amdp import solve_cckp
+    rows = []
+    for (m, T_int, n_l) in [(2, 2000, 100), (3, 4000, 300)]:
+        rng = np.random.default_rng(0)
+        p = rng.integers(5, 50, size=m)
+        a = np.sort(rng.uniform(0.3, 0.8, size=m))
+        t0 = time.perf_counter()
+        solve_cckp(p, a, T_int, n_l)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"cckp_dp/m={m}/T={T_int}/n={n_l}", us,
+                     f"cells_s={(m * n_l * T_int * n_l) / us:.0f}M"))
+    return rows
+
+
+ALL = [attention_bench, ssd_bench, cckp_bench]

@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.jsonl).
+
+Reads every recorded (arch x shape x mesh) cell and emits the three terms,
+the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs — the source of
+EXPERIMENTS.md §Roofline.  Run `python -m repro.launch.dryrun --all
+--both-meshes --out results/dryrun.jsonl` first (CI keeps the committed
+artifact current).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PATH = os.environ.get("DRYRUN_JSONL", "results/dryrun.jsonl")
+
+
+def rows():
+    if not os.path.exists(PATH):
+        return [("roofline/missing", 0.0,
+                 f"no {PATH}; run repro.launch.dryrun --all first")]
+    out = []
+    for line in open(PATH):
+        r = json.loads(line)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            out.append((name, 0.0, f"status={r['status']}"))
+            continue
+        t = r["terms"]
+        step_us = t["step_lower_bound_s"] * 1e6
+        out.append((name, step_us,
+                    f"compute_ms={t['compute_s'] * 1e3:.2f};"
+                    f"memory_ms={t['memory_s'] * 1e3:.2f};"
+                    f"collective_ms={t['collective_s'] * 1e3:.2f};"
+                    f"dominant={t['dominant']};"
+                    f"roofline_frac={t['roofline_fraction']:.3f};"
+                    f"useful_flops={r['useful_flop_ratio']:.3f}"))
+    return out
+
+
+ALL = [rows]

@@ -1,0 +1,23 @@
+"""Benchmark harness — one section per paper table/figure plus the kernel
+micro-benches and the roofline report.  Prints ``name,us_per_call,derived``
+CSV (the format tests/CI consume)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figs, roofline_report
+
+    sections = (paper_figs.ALL + kernel_bench.ALL + roofline_report.ALL)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in sections:
+        if only and only not in fn.__module__ + "." + fn.__name__:
+            continue
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver example: a ~10M-param mamba2-family model for
+a few hundred steps on the synthetic pipeline, with async checkpoints,
+grad compression, and a mid-run preemption + resume — the full
+fault-tolerance path exercised on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(The same driver launches the full assigned configs on a real fleet:
+ `python -m repro.launch.train --arch internlm2-20b --steps ...`.)
+"""
+import argparse
+import os
+import shutil
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+
+def run(args, extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "mamba2-130m", "--smoke",
+           "--steps", str(args.steps),
+           "--global-batch", "8", "--seq", "64",
+           "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "25",
+           "--compress-grads"] + extra
+    return subprocess.run(cmd, env=env).returncode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    # phase 1: run and "preempt" by touching the sentinel after a while
+    sentinel = os.path.join(args.ckpt_dir, "PREEMPT")
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    import threading
+    import time
+
+    def preempt_later():
+        time.sleep(30)
+        open(sentinel, "w").close()
+
+    threading.Thread(target=preempt_later, daemon=True).start()
+    rc = run(args, ["--preempt-file", sentinel])
+    print(f"[example] first run exited rc={rc} (42 = preempted+saved)")
+
+    # phase 2: resume to completion
+    os.remove(sentinel)
+    rc = run(args, ["--resume"])
+    print(f"[example] resumed run exited rc={rc}")
+
+
+if __name__ == "__main__":
+    main()

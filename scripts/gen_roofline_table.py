@@ -1,0 +1,52 @@
+"""Render EXPERIMENTS.md's roofline table from results/dryrun.jsonl."""
+import json
+import sys
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(path="results/dryrun.jsonl"):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    lines = [
+        "| arch | shape | dominant | compute | memory | collective | "
+        "roofline frac | useful flops | peak GiB | multi-pod |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    archs = sorted({a for (a, _, _) in recs})
+    for a in archs:
+        for s in SHAPES:
+            r = recs.get((a, s, "16x16"))
+            if r is None:
+                continue
+            mp = recs.get((a, s, "2x16x16"), {})
+            mp_status = "✓" if mp.get("status") == "ok" else mp.get(
+                "status", "—")
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | — | — | — | — | "
+                             f"skip ({r['reason'][:28]}…) |")
+                continue
+            t = r["terms"]
+            m = r["memory"]
+            peak = (m["argument_bytes"] + m["output_bytes"]
+                    - m["alias_bytes"] + m["temp_bytes"]) / 2**30
+            lines.append(
+                f"| {a} | {s} | **{t['dominant']}** | "
+                f"{t['compute_s']*1e3:.1f} ms | {t['memory_s']*1e3:.1f} ms | "
+                f"{t['collective_s']*1e3:.1f} ms | "
+                f"{100*t['roofline_fraction']:.1f}% | "
+                f"{r['useful_flop_ratio']:.2f} | {peak:.1f} | {mp_status} |")
+    print("\n".join(lines))
+    # patch EXPERIMENTS.md in place
+    exp = open("EXPERIMENTS.md").read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in exp:
+        exp = exp.replace(marker, "\n".join(lines))
+        open("EXPERIMENTS.md", "w").write(exp)
+        print("\n[patched EXPERIMENTS.md]", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,3 @@
+from .manager import (save, restore, latest_step, rotate, AsyncCheckpointer)
+
+__all__ = ["save", "restore", "latest_step", "rotate", "AsyncCheckpointer"]

@@ -1,0 +1,41 @@
+"""Assigned architecture registry: `get_config(arch_id)` / `--arch <id>`.
+
+Each module defines CONFIG (full size, dry-run only) and SMOKE (reduced,
+same family, runs a CPU forward/train step in tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS: List[str] = [
+    "granite_moe_3b_a800m",
+    "granite_moe_1b_a400m",
+    "internlm2_20b",
+    "deepseek_coder_33b",
+    "h2o_danube_1_8b",
+    "gemma3_1b",
+    "internvl2_76b",
+    "whisper_base",
+    "recurrentgemma_9b",
+    "mamba2_130m",
+    "paper_edge",          # the paper's own MobileNet-ladder analogue
+]
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.SMOKE
+
+
+def all_archs() -> List[str]:
+    return [a for a in ARCHS if a != "paper_edge"]

@@ -1,0 +1,20 @@
+"""internvl2-76b [vlm]: 80L d8192 64H (GQA kv=8) d_ff=28672, vocab 128256 —
+InternViT + LLM backbone. The ViT frontend is a STUB per the assignment:
+input_specs feeds 256 precomputed patch embeddings that replace the first
+256 token positions. [arXiv:2404.16821]"""
+import dataclasses
+from repro.models import dense_lm
+
+CONFIG = dataclasses.replace(
+    dense_lm("internvl2-76b", layers=80, d_model=8192, heads=64, kv_heads=8,
+             d_ff=28672, vocab=128256),
+    num_patches=256)
+# 80L x 32k x b128 GQA-8 cache is 5.4 GiB/chip in bf16 — an fp8 cache is the
+# standard way a 76B serves this shape on one v5e pod (DESIGN.md).
+CONFIG = dataclasses.replace(CONFIG, family="vlm",
+                             kv_cache_dtype="float8_e4m3fn")
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="internvl2-smoke", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256, num_patches=4,
+    attn_impl="dense")

@@ -1,0 +1,178 @@
+"""AMDP — Accuracy Maximization using Dynamic Programming (paper §VI).
+
+For identical jobs (p_{ij} = p_i):
+  Lemma 3 : an optimal schedule sends n_c = floor(T / p_{m+1}) jobs to the ES.
+  Lemma 4 : the remaining n_l = n - n_c jobs reduce to a Cardinality-
+            Constrained Knapsack (CCKP) over m "item groups" with n_l copies.
+  Thm 3   : greedy ES fill + exact CCKP DP is optimal for P_I.
+
+The DP runs per-model as a (max,+) convolution over the count q of jobs given
+to that model, carried on a (T+1) x (n_l+1) value grid — a `lax.scan` over q
+inside a Python loop over the m models (m is small; per-model shift offsets
+stay static so the scan body is a fixed-shape elementwise kernel).  Per-model
+argmax-count tables make backtracking O(m).
+
+`kernels/cckp_dp` provides the TPU Pallas version of the same per-model scan
+(the paper reimplements this DP in C for speed on the Pi; we do the TPU-native
+equivalent); `impl="pallas"` routes through it.
+
+Times are integerized at `resolution` seconds with ceil() so integer
+feasibility implies real feasibility.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import OffloadInstance, Schedule
+
+NEG = -1e30  # -inf stand-in that survives float32 arithmetic
+
+
+@partial(jax.jit, static_argnames=("p_i", "n_steps"))
+def _model_dp(y: jnp.ndarray, p_i: int, a_i: float, n_steps: int):
+    """One CCKP group: Y'[t, k] = max_q Y[t - q*p_i, k - q] + q*a_i.
+
+    Returns (Y', bestq) with bestq the argmax count table for backtracking.
+    """
+
+    def step(carry, q):
+        best, bestq, s = carry
+        val = s + q.astype(s.dtype) * a_i
+        take = val > best
+        best = jnp.where(take, val, best)
+        bestq = jnp.where(take, q.astype(jnp.int32), bestq)
+        s2 = jnp.full_like(s, NEG)
+        if p_i > 0:
+            s2 = s2.at[p_i:, 1:].set(s[:-p_i, :-1])
+        else:
+            s2 = s2.at[:, 1:].set(s[:, :-1])
+        return (best, bestq, s2), None
+
+    init = (jnp.full_like(y, NEG), jnp.zeros(y.shape, jnp.int32), y)
+    (best, bestq, _), _ = jax.lax.scan(step, init, jnp.arange(n_steps))
+    return best, bestq
+
+
+def solve_cckp(p: np.ndarray, a: np.ndarray, T_int: int, n_l: int,
+               impl: str = "jnp") -> Tuple[Optional[np.ndarray], float]:
+    """Exact CCKP: choose counts q_i >= 0, sum q_i == n_l,
+    sum q_i * p_i <= T_int, maximizing sum q_i * a_i.
+
+    Returns (counts (m,), value) or (None, -inf) when infeasible.
+    """
+    m = len(p)
+    y = np.full((T_int + 1, n_l + 1), NEG, dtype=np.float32)
+    y[:, 0] = 0.0
+    y = jnp.asarray(y)
+    tables = []
+    if impl == "pallas":
+        from ..kernels.cckp_dp import ops as _cckp_ops
+        model_dp = _cckp_ops.model_dp
+    else:
+        model_dp = _model_dp
+    for i in range(m):
+        y, bestq = model_dp(y, int(p[i]), float(a[i]), n_l + 1)
+        tables.append(np.asarray(bestq))
+    yf = np.asarray(y)
+    if yf[T_int, n_l] <= NEG / 2:
+        return None, -math.inf
+    counts = np.zeros(m, dtype=np.int64)
+    t, k = T_int, n_l
+    for i in range(m - 1, -1, -1):
+        q = int(tables[i][t, k])
+        counts[i] = q
+        t -= q * int(p[i])
+        k -= q
+    assert k == 0 and t >= 0, "CCKP backtrack inconsistent"
+    return counts, float(yf[T_int, n_l])
+
+
+def amdp(inst: OffloadInstance, *, resolution: float = 1e-3,
+         impl: str = "jnp") -> Schedule:
+    """Optimal schedule for identical jobs (problem P_I)."""
+    if not inst.is_identical():
+        raise ValueError("AMDP requires identical jobs; use amr2() instead")
+    n, m, T = inst.n, inst.m, inst.T
+    p_ed = inst.p_ed[0]              # (m,)
+    p_es = float(inst.p_es[0])
+
+    # Lemma 3: greedy ES fill.
+    n_c = n if p_es <= 0 else min(n, int(math.floor(T / p_es + 1e-12)))
+    n_l = n - n_c
+    assignment = np.full(n, inst.m, dtype=np.int64)   # default: ES
+    if n_l == 0:
+        return Schedule(assignment=assignment, instance=inst,
+                        solver="amdp", status="ok")
+
+    p_int = np.maximum(np.ceil(p_ed / resolution - 1e-9).astype(np.int64), 0)
+    T_int = int(math.floor(T / resolution + 1e-9))
+    counts, _ = solve_cckp(p_int, inst.acc[:m], T_int, n_l, impl=impl)
+    if counts is None:
+        # P_I infeasible: best effort — everything local on the fastest model.
+        fastest = int(np.argmin(p_ed))
+        assignment[:n_l] = fastest
+        return Schedule(assignment=assignment, instance=inst,
+                        solver="amdp", status="infeasible")
+
+    j = 0
+    for i in range(m):
+        assignment[j: j + counts[i]] = i
+        j += counts[i]
+    assert j == n_l
+    return Schedule(assignment=assignment, instance=inst, solver="amdp",
+                    status="ok")
+
+
+def amdp_hetero_comm(p_ed_models: np.ndarray, p_es_proc: float,
+                     comm: np.ndarray, acc: np.ndarray, T: float, *,
+                     resolution: float = 1e-3) -> Schedule:
+    """Paper §VI remark: identical processing times but per-job comm times.
+
+    Offload in increasing order of c_j until the ES budget is exhausted
+    (optimal because swap-arguments apply when processing is identical),
+    then CCKP the remainder.
+    """
+    comm = np.asarray(comm, dtype=np.float64)
+    n = len(comm)
+    m = len(p_ed_models)
+    order = np.argsort(comm, kind="stable")
+    es_total = 0.0
+    offload = []
+    for j in order:
+        t = comm[j] + p_es_proc
+        if es_total + t <= T + 1e-12:
+            offload.append(j)
+            es_total += t
+        else:
+            break
+    offload = set(offload)
+    local = [j for j in range(n) if j not in offload]
+
+    p_es_full = comm + p_es_proc
+    inst = OffloadInstance(
+        p_ed=np.tile(p_ed_models, (n, 1)), p_es=p_es_full, acc=acc, T=T)
+    assignment = np.full(n, m, dtype=np.int64)
+    if local:
+        n_l = len(local)
+        p_int = np.maximum(
+            np.ceil(np.asarray(p_ed_models) / resolution - 1e-9), 0
+        ).astype(np.int64)
+        T_int = int(math.floor(T / resolution + 1e-9))
+        counts, _ = solve_cckp(p_int, np.asarray(acc)[:m], T_int, n_l)
+        if counts is None:
+            assignment[local] = int(np.argmin(p_ed_models))
+            return Schedule(assignment=assignment, instance=inst,
+                            solver="amdp_hetero", status="infeasible")
+        k = 0
+        for i in range(m):
+            for _ in range(counts[i]):
+                assignment[local[k]] = i
+                k += 1
+    return Schedule(assignment=assignment, instance=inst,
+                    solver="amdp_hetero", status="ok")

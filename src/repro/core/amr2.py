@@ -1,0 +1,203 @@
+"""AMR^2 — Accuracy Maximization using LP-Relaxation and Rounding (paper §IV).
+
+Pipeline (Algorithm 1):
+  1. Solve the LP relaxation of P with a *basic* solver (simplex, `lp.py`).
+     Lemma 1: a basic optimal solution has at most two fractional jobs.
+  2. Keep the integer part of the LP solution verbatim.
+  3. Round the <=2 fractional jobs:
+       * one fractional  -> argmax_{i in M} { a_i : p_{i,j} <= T }   (line 4)
+       * two fractional  -> exact 2-job sub-ILP (Algorithm 2 / Lemma 2);
+         we solve it by exhaustive (m+1)^2 enumeration, which *is* optimal
+         for the sub-ILP (the paper's case tree computes the same optimum).
+
+Guarantees (validated in tests/test_amr2.py):
+  Thm 1:  makespan(x†) <= 2T        whenever P is feasible.
+  Thm 2:  A* <= A† + 2(a_{m+1} - a_1).
+  Cor 1:  A* <= A† + (a_{m+1} - a_1) when all p_{(m+1)j} <= T.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .lp import INFEASIBLE, OPTIMAL, solve_lp
+from .types import OffloadInstance, Schedule
+
+_FRAC_TOL = 1e-4
+
+
+# --------------------------------------------------------------------------
+# LP relaxation of P
+# --------------------------------------------------------------------------
+def build_lp_arrays(inst: OffloadInstance):
+    """Variables x[j, i] flattened j-major, i in 0..m (i == m is the ES)."""
+    n, m = inst.n, inst.m
+    mp1 = m + 1
+    nv = n * mp1
+    c = -np.tile(inst.acc, n)                      # maximize -> minimize -A
+
+    A_ub = np.zeros((2, nv))
+    for j in range(n):
+        A_ub[0, j * mp1: j * mp1 + m] = inst.p_ed[j]   # constraint (1): ED budget
+        A_ub[1, j * mp1 + m] = inst.p_es[j]            # constraint (2): ES budget
+    b_ub = np.array([inst.T, inst.T])
+
+    A_eq = np.zeros((n, nv))
+    for j in range(n):
+        A_eq[j, j * mp1: (j + 1) * mp1] = 1.0          # constraint (3)
+    b_eq = np.ones(n)
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+def solve_lp_relaxation(inst: OffloadInstance, *, backend: str = "numpy"):
+    """Returns (xbar (n, m+1), A*_LP, status)."""
+    c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays(inst)
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    xbar = res.x.reshape(inst.n, inst.m + 1)
+    return xbar, -res.fun, res.status
+
+
+# --------------------------------------------------------------------------
+# Fractional-job bookkeeping (Lemma 1)
+# --------------------------------------------------------------------------
+def fractional_jobs(xbar: np.ndarray, tol: float = _FRAC_TOL) -> np.ndarray:
+    """Indices j whose row has any entry strictly inside (tol, 1-tol)."""
+    frac = (xbar > tol) & (xbar < 1.0 - tol)
+    return np.nonzero(frac.any(axis=1))[0]
+
+
+# --------------------------------------------------------------------------
+# sub-ILP (Algorithm 2) — exact enumeration over (m+1)^2 assignments
+# --------------------------------------------------------------------------
+def solve_sub_ilp(inst: OffloadInstance, j1: int, j2: int
+                  ) -> Optional[Tuple[int, int]]:
+    """Optimal assignment of two jobs under fresh budgets T on ED and ES.
+
+    Returns (i1, i2) or None when even the 2-job problem is infeasible.
+    Vectorised over the (m+1) x (m+1) assignment grid.
+    """
+    m, T = inst.m, inst.T
+    mp1 = m + 1
+    # time contributed to the ED budget by assigning job -> model i (0 if ES)
+    ed1 = np.concatenate([inst.p_ed[j1], [0.0]])       # (m+1,)
+    ed2 = np.concatenate([inst.p_ed[j2], [0.0]])
+    es1 = np.concatenate([np.zeros(m), [inst.p_es[j1]]])
+    es2 = np.concatenate([np.zeros(m), [inst.p_es[j2]]])
+
+    ed_load = ed1[:, None] + ed2[None, :]              # (m+1, m+1)
+    es_load = es1[:, None] + es2[None, :]
+    feas = (ed_load <= T + 1e-12) & (es_load <= T + 1e-12)
+    if not feas.any():
+        return None
+    val = inst.acc[:, None] + inst.acc[None, :]
+    val = np.where(feas, val, -np.inf)
+    flat = int(np.argmax(val))
+    return flat // mp1, flat % mp1
+
+
+def algorithm2_case_tree(inst: OffloadInstance, j1: int, j2: int
+                         ) -> Optional[Tuple[int, int]]:
+    """The paper's literal Algorithm 2 case analysis (for cross-validation).
+
+    Line 13's "models on the ES" is a typo for "on the ED" — with both
+    p_{(m+1)j} > T neither job fits the ES budget.
+    """
+    m, T = inst.m, inst.T
+
+    def best_fit(j):  # argmax_{i in M} {a_i : p_{ij} <= T}; None if empty
+        ok = [i for i in range(m) if inst.p_ed[j, i] <= T]
+        if inst.p_es[j] <= T:
+            ok.append(m)
+        if not ok:
+            return None
+        return max(ok, key=lambda i: inst.acc[i])
+
+    def best_fit_ed(j):
+        ok = [i for i in range(m) if inst.p_ed[j, i] <= T]
+        if not ok:
+            return None
+        return max(ok, key=lambda i: inst.acc[i])
+
+    if inst.p_es[j1] <= T or inst.p_es[j2] <= T:           # line 2
+        if inst.p_es[j1] + inst.p_es[j2] <= T:             # line 3
+            return m, m
+        b1, b2 = best_fit_ed(j1), best_fit_ed(j2)
+        a1 = -np.inf if b1 is None else inst.acc[b1]
+        a2 = -np.inf if b2 is None else inst.acc[b2]
+        if a1 >= a2 and b1 is not None and inst.p_es[j2] <= T:  # line 6
+            return b1, m
+        if b2 is not None and inst.p_es[j1] <= T:               # line 9
+            return m, b2
+        # degenerate corners the paper's tree leaves implicit
+        return solve_sub_ilp(inst, j1, j2)
+    # line 12: both exceed the ES budget -> both on the ED (line 13)
+    best = None
+    for i1 in range(m):
+        for i2 in range(m):
+            if inst.p_ed[j1, i1] + inst.p_ed[j2, i2] <= T:
+                v = inst.acc[i1] + inst.acc[i2]
+                if best is None or v > best[0]:
+                    best = (v, i1, i2)
+    if best is None:
+        return None
+    return best[1], best[2]
+
+
+# --------------------------------------------------------------------------
+# AMR^2 (Algorithm 1)
+# --------------------------------------------------------------------------
+def amr2(inst: OffloadInstance, *, backend: str = "numpy",
+         frac_tol: float = _FRAC_TOL) -> Schedule:
+    xbar, a_lp, status = solve_lp_relaxation(inst, backend=backend)
+    if status == INFEASIBLE:
+        # P infeasible (its relaxation already is): best-effort everything on
+        # the fastest ED model so the caller still gets a schedule object.
+        assignment = np.argmin(inst.p_ed, axis=1)
+        return Schedule(assignment=assignment, instance=inst,
+                        lp_accuracy=None, n_fractional=0,
+                        status="infeasible", solver="amr2")
+    if status != OPTIMAL:
+        raise RuntimeError(f"LP relaxation did not converge (status={status})")
+
+    frac = fractional_jobs(xbar, frac_tol)
+    assignment = np.argmax(xbar, axis=1).astype(np.int64)
+    sched_status = "ok"
+
+    if len(frac) > 2:
+        # Lemma 1 guarantees <=2 for an exact basic optimum; numerically we
+        # keep the two most fractional rows and integer-round the rest.
+        fractionality = 1.0 - xbar[frac].max(axis=1)
+        order = frac[np.argsort(-fractionality)]
+        frac = np.sort(order[:2])
+        sched_status = "fallback"
+
+    if len(frac) == 1:
+        j = int(frac[0])
+        i = _best_fit_any(inst, j)
+        if i is None:                       # P was integrally infeasible
+            i = int(np.argmin(inst.p_ed[j]))
+            sched_status = "fallback"
+        assignment[j] = i
+    elif len(frac) == 2:
+        j1, j2 = int(frac[0]), int(frac[1])
+        pair = solve_sub_ilp(inst, j1, j2)
+        if pair is None:                    # P was integrally infeasible
+            pair = (int(np.argmin(inst.p_ed[j1])),
+                    int(np.argmin(inst.p_ed[j2])))
+            sched_status = "fallback"
+        assignment[j1], assignment[j2] = pair
+
+    return Schedule(assignment=assignment, instance=inst, lp_accuracy=a_lp,
+                    n_fractional=int(len(frac)), status=sched_status,
+                    solver="amr2")
+
+
+def _best_fit_any(inst: OffloadInstance, j: int) -> Optional[int]:
+    """argmax_{i in M} { a_i : p_{ij} <= T } (Algorithm 1, line 4)."""
+    ok = [i for i in range(inst.m) if inst.p_ed[j, i] <= inst.T]
+    if inst.p_es[j] <= inst.T:
+        ok.append(inst.m)
+    if not ok:
+        return None
+    return int(max(ok, key=lambda i: inst.acc[i]))

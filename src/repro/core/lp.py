@@ -1,0 +1,276 @@
+"""Dense two-phase primal simplex, implemented twice from one design:
+
+  * ``backend="jax"``   — fully jittable (`lax.while_loop` pivots, fixed-shape
+    tableau).  This is the production path: the scheduler can run on-device
+    next to the serving loop, and AMR^2 needs a *basic* optimal solution
+    (Lemma 1 counts basic variables), which simplex — unlike interior-point —
+    guarantees.
+  * ``backend="numpy"`` — the same algorithm in float64 NumPy, used as the
+    reference/oracle in tests and for very ill-conditioned instances.
+
+Problem form:   minimize    c @ x
+                subject to  A_ub @ x <= b_ub
+                            A_eq @ x == b_eq
+                            x >= 0
+
+Phase 1 gives every row an artificial variable (initial basis), minimizes
+their sum, and "drives out" artificials that linger in the basis at level 0
+by prioritising their rows in the ratio test.  Phase 2 masks artificial
+columns from ever re-entering.
+
+Statuses: 0 optimal, 1 iteration limit, 2 infeasible, 3 unbounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OPTIMAL, ITERATION_LIMIT, INFEASIBLE, UNBOUNDED = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class LPResult:
+    x: np.ndarray
+    fun: float
+    status: int
+    niter: int
+    basis: np.ndarray  # row -> basic variable index
+
+    @property
+    def success(self) -> bool:
+        return self.status == OPTIMAL
+
+
+# --------------------------------------------------------------------------
+# Canonicalisation shared by both backends
+# --------------------------------------------------------------------------
+def _canonicalize(c, A_ub, b_ub, A_eq, b_eq):
+    c = np.asarray(c, dtype=np.float64)
+    nv = c.shape[0]
+    rows = []
+    rhs = []
+    n_ub = 0
+    if A_ub is not None:
+        A_ub = np.asarray(A_ub, dtype=np.float64)
+        b_ub = np.asarray(b_ub, dtype=np.float64)
+        n_ub = A_ub.shape[0]
+        rows.append(np.concatenate([A_ub, np.eye(n_ub)], axis=1))
+        rhs.append(b_ub)
+    if A_eq is not None:
+        A_eq = np.asarray(A_eq, dtype=np.float64)
+        b_eq = np.asarray(b_eq, dtype=np.float64)
+        pad = np.zeros((A_eq.shape[0], n_ub))
+        rows.append(np.concatenate([A_eq, pad], axis=1))
+        rhs.append(b_eq)
+    A = np.concatenate(rows, axis=0)
+    b = np.concatenate(rhs, axis=0)
+    # b >= 0 by row flips
+    neg = b < 0
+    A[neg] *= -1.0
+    b[neg] *= -1.0
+    c_full = np.concatenate([c, np.zeros(n_ub)])
+    return A, b, c_full, nv, n_ub
+
+
+# --------------------------------------------------------------------------
+# JAX backend
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("maxiter", "phase2"))
+def _simplex_phase(tableau, basis, art_start, *, maxiter: int, phase2: bool,
+                   tol: float = 1e-7):
+    """Run pivots until optimal / maxiter / unbounded.
+
+    tableau: (R+1, C+1); last row = objective (reduced costs | -obj value),
+    last col = rhs.  basis: (R,) int32.  art_start: first artificial column
+    (artificials may never enter; in phase 2 their rows get ratio priority
+    so any basic artificial is driven out before it could turn positive).
+    """
+    R = tableau.shape[0] - 1
+    C = tableau.shape[1] - 1
+    cols = jnp.arange(C)
+    rows = jnp.arange(R)
+
+    def cond(state):
+        tab, basis, it, status = state
+        rc = tab[-1, :C]
+        can_enter = (rc < -tol) & (cols < art_start)
+        return (status == ITERATION_LIMIT) & jnp.any(can_enter) & (it < maxiter)
+
+    def body(state):
+        tab, basis, it, status = state
+        rc = tab[-1, :C]
+        enter_mask = (rc < -tol) & (cols < art_start)
+        # Dantzig rule; Bland tie-break via index bias keeps cycling at bay
+        # for the scale of instances we solve.
+        score = jnp.where(enter_mask, rc, jnp.inf)
+        j = jnp.argmin(score)
+
+        col = tab[:R, j]
+        rhsv = tab[:R, -1]
+        pos = col > tol
+        ratio = jnp.where(pos, rhsv / jnp.where(pos, col, 1.0), jnp.inf)
+        # Drive-out rule: a basic artificial sitting at level ~0 with a
+        # nonzero pivot coefficient gets ratio 0 so it leaves the basis
+        # first (it must not be allowed to turn positive again).
+        art_basic = ((basis >= art_start) & (jnp.abs(col) > tol)
+                     & (rhsv <= tol))
+        ratio = jnp.where(art_basic, 0.0, ratio)
+        unbounded = ~jnp.any(ratio < jnp.inf)
+        # lexicographic-ish tie-break: smallest basis index among min ratios
+        rmin = jnp.min(ratio)
+        tie = ratio <= rmin + jnp.maximum(jnp.abs(rmin) * 1e-9, 1e-12)
+        r = jnp.argmin(jnp.where(tie, basis, jnp.iinfo(jnp.int32).max))
+
+        piv = tab[r, j]
+        piv_row = tab[r] / piv
+        tab2 = tab - jnp.outer(tab[:, j], piv_row)
+        tab2 = tab2.at[r].set(piv_row)
+        basis2 = basis.at[r].set(j)
+
+        tab2 = jnp.where(unbounded, tab, tab2)
+        basis2 = jnp.where(unbounded, basis, basis2)
+        status2 = jnp.where(unbounded, UNBOUNDED, status)
+        return tab2, basis2, it + 1, status2
+
+    init = (tableau, basis, jnp.array(0, jnp.int32),
+            jnp.array(ITERATION_LIMIT, jnp.int32))
+    tab, basis, it, status = jax.lax.while_loop(cond, body, init)
+    rc = tab[-1, :C]
+    done = ~jnp.any((rc < -tol) & (cols < art_start))
+    status = jnp.where((status == ITERATION_LIMIT) & done, OPTIMAL, status)
+    del rows
+    return tab, basis, it, status
+
+
+def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol):
+    R, C0 = A.shape           # C0 = nv + n_slack
+    C = C0 + R                # + artificials
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    A_j = jnp.asarray(A, dtype)
+    b_j = jnp.asarray(b, dtype)
+    tab = jnp.zeros((R + 1, C + 1), dtype)
+    tab = tab.at[:R, :C0].set(A_j)
+    tab = tab.at[:R, C0:C].set(jnp.eye(R, dtype=dtype))
+    tab = tab.at[:R, -1].set(b_j)
+    # phase-1 objective: sum of artificials, expressed in reduced-cost form
+    tab = tab.at[-1, :].set(-jnp.sum(tab[:R, :], axis=0))
+    tab = tab.at[-1, C0:C].set(0.0)
+    basis = jnp.arange(C0, C, dtype=jnp.int32)
+
+    tab, basis, it1, status1 = _simplex_phase(
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, phase2=False,
+        tol=tol)
+    phase1_obj = tab[-1, -1]  # = -(sum of artificials)
+    infeasible = phase1_obj < -max(tol, 1e-5) * (1.0 + jnp.abs(b_j).sum())
+
+    # phase 2: swap in the real objective
+    cj = jnp.asarray(c_full, dtype)
+    obj = jnp.zeros((C + 1,), dtype)
+    obj = obj.at[:C0].set(cj)
+    # make reduced costs of basic columns zero
+    cb = obj[basis]                       # cost of basic vars
+    obj = obj - cb @ tab[:R, :]
+    tab = tab.at[-1, :].set(obj)
+    tab, basis, it2, status2 = _simplex_phase(
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, phase2=True,
+        tol=tol)
+
+    x = jnp.zeros((C,), dtype).at[basis].set(tab[:R, -1])
+    fun = -tab[-1, -1]
+    status = jnp.where(infeasible, INFEASIBLE, status2)
+    return x[:nv], fun, status, it1 + it2, basis
+
+
+# --------------------------------------------------------------------------
+# NumPy backend (float64 reference)
+# --------------------------------------------------------------------------
+def _phase_np(tab, basis, art_start, maxiter, tol):
+    R = tab.shape[0] - 1
+    C = tab.shape[1] - 1
+    it = 0
+    while it < maxiter:
+        rc = tab[-1, :C]
+        enter = np.where((rc < -tol) & (np.arange(C) < art_start))[0]
+        if enter.size == 0:
+            return tab, basis, it, OPTIMAL
+        j = enter[np.argmin(rc[enter])]
+        col = tab[:R, j]
+        rhs = tab[:R, -1]
+        ratio = np.full(R, np.inf)
+        pos = col > tol
+        ratio[pos] = rhs[pos] / col[pos]
+        art_basic = (basis >= art_start) & (np.abs(col) > tol) & (rhs <= tol)
+        ratio[art_basic] = 0.0
+        if not np.any(ratio < np.inf):
+            return tab, basis, it, UNBOUNDED
+        rmin = ratio.min()
+        tie = ratio <= rmin + max(abs(rmin) * 1e-9, 1e-12)
+        cand = np.where(tie)[0]
+        r = cand[np.argmin(basis[cand])]
+        piv = tab[r, j]
+        tab[r] = tab[r] / piv
+        for k in range(tab.shape[0]):
+            if k != r and abs(tab[k, j]) > 0:
+                tab[k] -= tab[k, j] * tab[r]
+        basis[r] = j
+        it += 1
+    return tab, basis, it, ITERATION_LIMIT
+
+
+def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol):
+    R, C0 = A.shape
+    C = C0 + R
+    tab = np.zeros((R + 1, C + 1))
+    tab[:R, :C0] = A
+    tab[:R, C0:C] = np.eye(R)
+    tab[:R, -1] = b
+    tab[-1, :] = -tab[:R, :].sum(axis=0)
+    tab[-1, C0:C] = 0.0
+    basis = np.arange(C0, C, dtype=np.int64)
+
+    tab, basis, it1, st1 = _phase_np(tab, basis, C0, maxiter, tol)
+    infeasible = tab[-1, -1] < -max(tol, 1e-8) * (1.0 + np.abs(b).sum())
+
+    obj = np.zeros(C + 1)
+    obj[:C0] = c_full
+    obj = obj - obj[basis] @ tab[:R, :]
+    tab[-1, :] = obj
+    tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol)
+
+    x = np.zeros(C)
+    x[basis] = tab[:R, -1]
+    fun = -tab[-1, -1]
+    status = INFEASIBLE if infeasible else st2
+    return x[:nv], fun, status, it1 + it2, basis
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
+             backend: str = "numpy", maxiter: Optional[int] = None,
+             tol: float = 1e-7) -> LPResult:
+    """Minimize c@x s.t. A_ub x <= b_ub, A_eq x == b_eq, x >= 0."""
+    A, b, c_full, nv, n_slack = _canonicalize(c, A_ub, b_ub, A_eq, b_eq)
+    if maxiter is None:
+        maxiter = 50 * (A.shape[0] + 2)
+    if backend == "jax":
+        if not jax.config.jax_enable_x64:
+            tol = max(tol, 1e-5)
+        x, fun, status, niter, basis = jax.tree_util.tree_map(
+            np.asarray,
+            _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol))
+        return LPResult(x=np.asarray(x, np.float64), fun=float(fun),
+                        status=int(status), niter=int(niter),
+                        basis=np.asarray(basis))
+    elif backend == "numpy":
+        x, fun, status, niter, basis = _solve_np(A, b, c_full, nv, n_slack,
+                                                 maxiter, tol)
+        return LPResult(x=x, fun=float(fun), status=int(status),
+                        niter=int(niter), basis=basis)
+    raise ValueError(f"unknown backend {backend!r}")

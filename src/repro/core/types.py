@@ -1,0 +1,122 @@
+"""Problem/solution containers for the offloading problem `P` (paper §III).
+
+Notation follows the paper:
+  - n jobs, m models on the ED, one model (index m, 0-based; `m+1` in the
+    paper's 1-based notation) on the ES.
+  - ``p_ed[j, i]``  : processing time of job j on ED model i  (paper p_{ij}).
+  - ``p_es[j]``     : *total* time of job j on the ES, communication included
+                      (paper p_{(m+1)j} = c_j + p'_{(m+1)j}).
+  - ``acc[i]``      : average test accuracy a_i, i = 0..m (acc[m] is the ES
+                      model, the paper's a_{m+1}).
+  - ``T``           : makespan budget for each of the two capacity
+                      constraints (1) and (2).
+
+Assignments are stored dense: ``assignment[j] in {0..m}`` where value ``m``
+means "offload to the ES".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+ES = -1  # sentinel alias: instance.es_index == m
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadInstance:
+    """One instance of problem P."""
+
+    p_ed: np.ndarray   # (n, m) float
+    p_es: np.ndarray   # (n,)  float  (comm + server compute)
+    acc: np.ndarray    # (m+1,) float, ascending on the ED part by convention
+    T: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "p_ed", np.asarray(self.p_ed, dtype=np.float64))
+        object.__setattr__(self, "p_es", np.asarray(self.p_es, dtype=np.float64))
+        object.__setattr__(self, "acc", np.asarray(self.acc, dtype=np.float64))
+        if self.p_ed.ndim != 2:
+            raise ValueError("p_ed must be (n, m)")
+        if self.p_es.shape != (self.n,):
+            raise ValueError("p_es must be (n,)")
+        if self.acc.shape != (self.m + 1,):
+            raise ValueError("acc must be (m+1,)")
+
+    @property
+    def n(self) -> int:
+        return self.p_ed.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.p_ed.shape[1]
+
+    @property
+    def es_index(self) -> int:
+        return self.m
+
+    def p(self, j: int, i: int) -> float:
+        """Unified p_{ij} with i == m meaning the ES."""
+        return float(self.p_es[j]) if i == self.m else float(self.p_ed[j, i])
+
+    def is_identical(self, rtol: float = 1e-9) -> bool:
+        """True when all jobs share processing times (paper §VI setting)."""
+        return bool(
+            np.allclose(self.p_ed, self.p_ed[:1], rtol=rtol)
+            and np.allclose(self.p_es, self.p_es[:1], rtol=rtol)
+        )
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A (possibly constraint-violating) solution to P."""
+
+    assignment: np.ndarray          # (n,) int in [0, m]; m == ES
+    instance: OffloadInstance
+    lp_accuracy: Optional[float] = None    # A*_LP upper bound when available
+    n_fractional: Optional[int] = None     # fractional jobs seen by AMR^2
+    status: str = "ok"                     # ok | infeasible | fallback
+    solver: str = ""
+
+    # ---- derived metrics -------------------------------------------------
+    @property
+    def total_accuracy(self) -> float:
+        return float(self.instance.acc[self.assignment].sum())
+
+    @property
+    def ed_makespan(self) -> float:
+        inst = self.instance
+        mask = self.assignment < inst.m
+        if not mask.any():
+            return 0.0
+        j = np.nonzero(mask)[0]
+        return float(inst.p_ed[j, self.assignment[j]].sum())
+
+    @property
+    def es_makespan(self) -> float:
+        inst = self.instance
+        mask = self.assignment == inst.m
+        return float(inst.p_es[mask].sum())
+
+    @property
+    def makespan(self) -> float:
+        # Both tiers run in parallel; makespan is the later finisher.
+        return max(self.ed_makespan, self.es_makespan)
+
+    @property
+    def violation(self) -> float:
+        """makespan / T - 1 (0 when within budget)."""
+        return max(0.0, self.makespan / self.instance.T - 1.0)
+
+    def counts(self) -> np.ndarray:
+        """(m+1,) number of jobs per model."""
+        return np.bincount(self.assignment, minlength=self.instance.m + 1)
+
+    def summary(self) -> str:
+        return (
+            f"[{self.solver}] A={self.total_accuracy:.3f} "
+            f"(LP bound {self.lp_accuracy if self.lp_accuracy is None else round(self.lp_accuracy, 3)}) "
+            f"makespan ed={self.ed_makespan:.3f} es={self.es_makespan:.3f} "
+            f"T={self.instance.T} viol={100 * self.violation:.1f}% status={self.status}"
+        )

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, TokenPipeline, Prefetcher
+
+__all__ = ["DataConfig", "TokenPipeline", "Prefetcher"]

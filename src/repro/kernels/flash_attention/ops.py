@@ -1,0 +1,38 @@
+"""jit'd wrapper with the model-layer interface (repro.models.layers calls
+this when cfg.attn_impl == "pallas")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+
+
+def _pad_d(x, mult=128):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad and jax.default_backend() == "tpu":
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    return x, d
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, mask_kind: str,
+                    window: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D) (kv repeated to H by caller).
+    Self-attention positions (arange) are assumed — the kernel derives
+    masks from indices."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    interpret = jax.default_backend() != "tpu"
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    qf, d0 = _pad_d(qf)
+    kf, _ = _pad_d(kf)
+    vf, _ = _pad_d(vf)
+    kind = "none" if mask_kind == "none" else (
+        "window" if mask_kind == "window" else "causal")
+    o = flash_attention_fwd(qf, kf, vf, mask_kind=kind, window=window,
+                            group=1, interpret=interpret)
+    o = o[..., :d0]
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: dense softmax attention with index masks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(q, k, v, *, mask_kind: str = "causal", window: int = 0):
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) (kv already expanded to q heads)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if mask_kind in ("causal", "window"):
+        mask &= kp <= qp
+    if mask_kind == "window":
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,11 @@
+"""Wrapper for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import jax
+
+from .rglru_scan import rglru_scan_fwd
+
+
+def rglru_scan(a, b):
+    interpret = jax.default_backend() != "tpu"
+    return rglru_scan_fwd(a, b, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Wrapper with the model-layer signature (layers.ssd_apply impl="pallas")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_fwd
+
+
+def ssd_scan(xs, dt, A, B_, C_, chunk: int):
+    """xs: (B, S, H, P); dt: (B, S, H) f32; A: (H,) f32; B_, C_: (B, S, N).
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    Bb, S, H, P = xs.shape
+    interpret = jax.default_backend() != "tpu"
+    xf = xs.transpose(0, 2, 1, 3).reshape(Bb * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, S)
+    Af = jnp.broadcast_to(A[None], (Bb, H)).reshape(Bb * H, 1)
+    y, state = ssd_scan_fwd(xf, dtf, Af, B_, C_, heads=H, chunk=chunk,
+                            interpret=interpret)
+    y = y.reshape(Bb, H, S, P).transpose(0, 2, 1, 3)
+    return y, state.reshape(Bb, H, P, state.shape[-1])

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: the exact sequential SSM recurrence (no chunking) —
+the ground truth both the chunked jnp path and the kernel must match."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, A, B_, C_):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); B_, C_: (B, S, N).
+    h_t = h_{t-1} * exp(dt A) + dt B_t x_t ; y_t = C_t . h_t
+    Returns (y (B,S,H,P) f32, final state (B,H,P,N) f32)."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A)         # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B_.transpose(1, 0, 2).astype(jnp.float32),
+          C_.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h

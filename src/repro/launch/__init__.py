@@ -1,0 +1,7 @@
+from .mesh import make_production_mesh, make_host_mesh
+from .steps import (make_train_step, make_eval_step, make_prefill_step,
+                    make_decode_step, init_train_state)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "make_train_step",
+           "make_eval_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production mesh with ShapeDtypeStruct inputs (no device
+allocation), print memory/cost analysis, extract roofline terms.
+
+MUST stay the first two lines: jax locks the device count on first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-20b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch ... --shape ... --multi-pod \
+      --override q_block=4096 --override remat=full --seq-shard
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_config
+from repro.distributed.sharding import (base_rules, decode_rules,
+                                        sharding_context, tree_shardings,
+                                        validate_divisibility)
+from repro.launch import hlo_cost, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (PERF_OVERRIDES, SHAPES, batch_axes,
+                                cell_supported, input_specs,
+                                shape_overrides)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import param_axes
+from repro.models.model import param_shapes
+from repro.optim import AdamWState, adamw_init
+
+
+def _coerce(cfg, key: str, val: str):
+    cur = getattr(cfg, key)
+    if isinstance(cur, bool):
+        return val.lower() in ("1", "true", "yes")
+    if isinstance(cur, int):
+        return int(val)
+    if isinstance(cur, float):
+        return float(val)
+    return val
+
+
+def _parse_rule(v: str):
+    if v.lower() in ("none", "null"):
+        return None
+    if "," in v:
+        return tuple(v.split(","))
+    return v
+
+
+def build_cell(arch: str, shape: str, *, multi_pod: bool,
+               overrides: Optional[Dict[str, str]] = None,
+               rules_overrides: Optional[Dict[str, str]] = None,
+               seq_shard: bool = False):
+    cfg = get_config(arch)
+    cfg = shape_overrides(cfg, shape)
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, **{k: _coerce(cfg, k, v) for k, v in overrides.items()})
+    info = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if info["kind"] == "decode":
+        rules = decode_rules(multi_pod, long_context=info.get("long", False))
+    else:
+        rules = base_rules(multi_pod, seq_shard=seq_shard)
+    if rules_overrides:
+        rules.update({k: _parse_rule(v) for k, v in rules_overrides.items()})
+    return cfg, info, mesh, rules
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               overrides: Optional[Dict[str, str]] = None,
+               rules_overrides: Optional[Dict[str, str]] = None,
+               seq_shard: bool = False, verbose: bool = True
+               ) -> Dict[str, Any]:
+    cfg, info, mesh, rules = build_cell(
+        arch, shape, multi_pod=multi_pod, overrides=overrides,
+        rules_overrides=rules_overrides, seq_shard=seq_shard)
+    chips = mesh.devices.size
+
+    p_axes = param_axes(cfg)
+    p_shapes = param_shapes(cfg)
+    validate_divisibility(p_shapes, p_axes, mesh, rules)
+    p_shard = tree_shardings(p_axes, mesh, rules)
+    specs = input_specs(cfg, shape)
+    b_axes = batch_axes(cfg, shape)
+
+    t0 = time.time()
+    with sharding_context(mesh, rules):
+        if info["kind"] == "train":
+            step = make_train_step(cfg)
+            opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+            opt_axes = AdamWState(step=None, m=p_axes, v=p_axes)
+            opt_shard = tree_shardings(opt_axes, mesh, rules)
+            b_shard = tree_shardings(b_axes["batch"], mesh, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, b_shard),
+                out_shardings=(p_shard, opt_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(p_shapes, opt_shapes, specs["batch"])
+        elif info["kind"] == "prefill":
+            step = make_prefill_step(cfg, max_seq=info["seq"])
+            b_shard = tree_shardings(b_axes["batch"], mesh, rules)
+            from repro.models import cache_axes
+            c_axes = cache_axes(cfg, info["batch"], info["seq"])
+            c_shard = tree_shardings(c_axes, mesh, rules)
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, b_shard),
+                out_shardings=((c_shard, None)),
+            ).lower(p_shapes, specs["batch"])
+        else:  # decode
+            step = make_decode_step(cfg)
+            from repro.models import cache_axes
+            c_axes = cache_axes(cfg, info["batch"], info["seq"])
+            c_shard = tree_shardings(c_axes, mesh, rules)
+            t_shard = tree_shardings(b_axes["tokens"], mesh, rules)
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, t_shard, c_shard),
+                out_shardings=(None, c_shard), donate_argnums=(2,),
+            ).lower(p_shapes, specs["tokens"], specs["cache"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # xla cost_analysis counts while (scan) bodies ONCE — hlo_cost re-derives
+    # flops/bytes/collective-bytes with trip-count multiplication.
+    parsed = hlo_cost.analyze(hlo)
+
+    flops_chip = float(parsed["flops"])
+    bytes_chip = float(parsed["bytes"])
+    coll = {"total": parsed["coll_bytes"],
+            "per_kind": parsed["coll_by_kind"],
+            "counts": parsed["coll_counts"]}
+    terms = roofline.terms(flops_chip, bytes_chip, float(coll["total"]))
+    mflops = roofline.model_flops(cfg, info)
+    hlo_flops_global = flops_chip * chips
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_chip": flops_chip, "bytes_per_chip": bytes_chip,
+        "collective_bytes_per_chip": coll["total"],
+        "collective_detail": coll,
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "unparsed_loops": parsed["unparsed_loops"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "terms": terms,
+        "model_flops_global": mflops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": (mflops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "overrides": {**(overrides or {}),
+                      **{f"rule:{k}": str(v)
+                         for k, v in (rules_overrides or {}).items()}},
+        "seq_shard": seq_shard,
+    }
+    if verbose:
+        peak_hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+        print(f"[{arch} x {shape} x {rec['mesh']}] compile {t_compile:.1f}s")
+        print(f"  memory/chip: args {mem.argument_size_in_bytes/2**30:.2f} GiB"
+              f" temp {mem.temp_size_in_bytes/2**30:.2f} GiB"
+              f" (~peak {peak_hbm/2**30:.2f} GiB of 16 GiB HBM)")
+        print(f"  flops/chip {flops_chip:.3e}  bytes/chip {bytes_chip:.3e}"
+              f"  coll bytes/chip {coll['total']:.3e} {coll['counts']}")
+        print(f"  terms: compute {terms['compute_s']*1e3:.2f} ms | memory "
+              f"{terms['memory_s']*1e3:.2f} ms | collective "
+              f"{terms['collective_s']*1e3:.2f} ms -> dominant "
+              f"{terms['dominant']} (roofline frac "
+              f"{terms['roofline_fraction']*100:.1f}%)")
+        print(f"  MODEL_FLOPS/HLO_FLOPs = {rec['useful_flop_ratio']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--perf", action="store_true",
+                    help="apply the adopted §Perf overrides per cell")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (repeatable)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule override key=value (value: mesh "
+                         "axis name, comma-tuple, or 'none')")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    rules_overrides = dict(kv.split("=", 1) for kv in args.rule)
+
+    if args.all:
+        cells = [(a, s, mp) for a in all_archs() for s in SHAPES
+                 for mp in ((False, True) if args.both_meshes else (False,))]
+    else:
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") == "ok" and not r.get("overrides"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        ok, why = cell_supported(arch, shape)
+        if not ok:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "skipped", "reason": why}
+            print(f"[{arch} x {shape} x {mesh_name}] SKIP: {why}")
+        elif (arch, shape, mesh_name) in done and not overrides:
+            print(f"[{arch} x {shape} x {mesh_name}] cached, skipping")
+            continue
+        else:
+            try:
+                cell_over = dict(overrides)
+                if args.perf:
+                    cell_over.update(PERF_OVERRIDES.get(
+                        (arch.replace("-", "_").replace(".", "_"), shape),
+                        {}))
+                rec = lower_cell(arch, shape, multi_pod=mp,
+                                 overrides=cell_over,
+                                 rules_overrides=rules_overrides,
+                                 seq_shard=args.seq_shard)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+XLA's `compiled.cost_analysis()` visits each instruction once, so a
+`lax.scan` over L layers reports ~1/L of the real flops, and collectives
+inside the scanned body are likewise undercounted.  This module re-derives
+  flops / bytes-accessed / collective-bytes
+from the *optimized per-device* HLO text, recursing into `while` bodies and
+multiplying by the trip count parsed from the loop condition.
+
+Conventions (documented for EXPERIMENTS.md):
+  * dot flops = 2 * prod(output dims) * prod(contracting dims).
+  * non-dot arithmetic ~ 1 flop per output element (softmax exp/log etc. —
+    second-order next to the dots; fusions count their root output once).
+  * bytes accessed are counted at top-level instruction boundaries
+    (operands + output), matching XLA's fusion-aware accounting.
+  * collective bytes = result-shape bytes of each collective op (per-device
+    program => per-chip bytes), times the enclosing trip counts.
+  * trip count: the constant compared against the induction variable in the
+    while condition; falls back to 1 (and records the fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def _shape_elems_bytes(shape_text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every shape literal in the text."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str           # result shape text (may be a tuple)
+    opcode: str
+    rest: str            # operand list + attributes
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]   # instr name -> result shape text
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        # tuple shapes embed /*index=5*/ comments whose '=' breaks parsing
+        line = _COMMENT_RE.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, opcode, rest = m.groups()
+            cur.instrs.append(Instr(name, shape.strip(), opcode, rest,
+                                    is_root="ROOT" in line.split("=")[0]))
+            cur.shapes[name] = shape.strip()
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+_CALLED_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_SPLIT_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(cond: Computation) -> Tuple[int, bool]:
+    """Largest integer constant in the while condition — for scan-lowered
+    loops this is the trip count the induction variable is compared to.
+    (Fallback when the while carries no known_trip_count backend_config.)"""
+    best = None
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = _CONST_RE.search(ins.opcode + "(" + ins.rest)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+    if best is None or best <= 0:
+        return 1, False
+    return best, True
+
+
+def _while_trip(ins: Instr, comps: Dict[str, Computation]
+                ) -> Tuple[int, bool]:
+    m = _KNOWN_TRIP_RE.search(ins.rest)
+    if m:
+        return int(m.group(1)), True
+    c = _COND_RE.search(ins.rest)
+    if c and c.group(1) in comps:
+        return _trip_count(comps[c.group(1)])
+    return 1, False
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.shape)
+    m = _CONTRACT_RE.search(ins.rest)
+    ops = _OPERANDS_SPLIT_RE.findall(ins.rest.split(")")[0])
+    contract = 1
+    if m and ops:
+        lhs_shape = shapes.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+_SKIP_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "custom-call", "get-dimension-size", "iota",
+})
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[str, Dict[str, float]] = {}
+        self.unparsed_loops = 0
+
+    def _dus_root_update_bytes(self, comp) -> Optional[float]:
+        """If the fused computation's root is a dynamic-update-slice,
+        return the update operand's byte size, else None."""
+        if comp is None or not comp.instrs:
+            return None
+        root = next((i for i in comp.instrs if i.is_root), comp.instrs[-1])
+        if root.opcode == "convert":
+            # CPU f8 legalization: [DUS into an f16 shadow -> convert the
+            # whole stack back to f8] as the fusion root.  On the TPU
+            # target the DUS aliases in place in f8 — treat it as such.
+            dus = next((i for i in comp.instrs
+                        if i.opcode == "dynamic-update-slice"), None)
+            if dus is None:
+                return None
+            root = dus
+        if root.opcode != "dynamic-update-slice":
+            return None
+        ops = _OPERANDS_SPLIT_RE.findall(root.rest.split("),")[0])
+        if len(ops) < 2:
+            return None
+        sh = comp.shapes.get(ops[1], "")
+        b = _shape_elems_bytes(sh)[1]
+        return float(b) if b else None
+
+    def _fusion_sliced_discount(self, comp) -> float:
+        """Operand bytes to discount when a fusion only gathers/slices a
+        big parameter (e.g. an embedding-table fusion reads ~the slice)."""
+        if comp is None:
+            return 0.0
+        disc = 0.0
+        for ins in comp.instrs:
+            if ins.opcode in ("gather", "dynamic-slice"):
+                ops = _OPERANDS_SPLIT_RE.findall(ins.rest.split("),")[0])
+                if not ops:
+                    continue
+                src = comp.shapes.get(ops[0], "")
+                # only discount fusion *parameters* (external operands)
+                if not any(i.name == ops[0] and i.opcode == "parameter"
+                           for i in comp.instrs):
+                    continue
+                src_b = _shape_elems_bytes(src)[1]
+                out_b = _shape_elems_bytes(ins.shape)[1]
+                disc += max(0.0, src_b - 2.0 * out_b)
+        return disc
+
+    def _fusion_flops(self, comp: Computation) -> float:
+        """Flops inside a fused computation: dots exact, elementwise ~1/elem
+        on each instruction's output."""
+        fl = 0.0
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                fl += _dot_flops(ins, comp.shapes)
+            elif ins.opcode in ("fusion", "call"):
+                m = _CALLED_RE.search(ins.rest)
+                if m and m.group(1) in self.comps:
+                    fl += self._fusion_flops(self.comps[m.group(1)])
+            elif ins.opcode not in _SKIP_OPS:
+                elems, _ = _shape_elems_bytes(ins.shape)
+                fl += elems
+        return fl
+
+    def cost(self, comp_name: Optional[str] = None) -> Dict[str, float]:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps[comp_name]
+        tot = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+        coll_by_kind = {}
+        counts = {}
+        for ins in comp.instrs:
+            op = ins.opcode
+            out_elems, out_bytes = _shape_elems_bytes(ins.shape)
+            # operand bytes via the per-computation symbol table
+            opnd_bytes = 0
+            for nm in _OPERANDS_SPLIT_RE.findall(ins.rest.split("),")[0]):
+                sh = comp.shapes.get(nm)
+                if sh:
+                    opnd_bytes += _shape_elems_bytes(sh)[1]
+            if op == "while":
+                m = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                c = _COND_RE.search(ins.rest)
+                body = (self.cost(m.group(1))
+                        if m and m.group(1) in self.comps else {})
+                trip, ok = _while_trip(ins, self.comps)
+                if not ok:
+                    self.unparsed_loops += 1
+                cond_cost = (self.cost(c.group(1)) if c and c.group(1)
+                             in self.comps else {})
+                for k in tot:
+                    tot[k] += trip * (body.get(k, 0.0)
+                                      + cond_cost.get(k, 0.0))
+                for k, v in body.get("_coll_by_kind", {}).items():
+                    coll_by_kind[k] = coll_by_kind.get(k, 0.0) + trip * v
+                for k, v in body.get("_coll_counts", {}).items():
+                    counts[k] = counts.get(k, 0.0) + trip * v
+            elif op in ("fusion",):
+                m = _CALLED_RE.search(ins.rest)
+                called = self.comps.get(m.group(1)) if m else None
+                if called is not None:
+                    tot["flops"] += self._fusion_flops(called)
+                # in-place loop-carried updates: a fusion whose root is a
+                # dynamic-update-slice aliases its big operand — traffic is
+                # the updated slice, not the whole (L, ...) stacked buffer
+                # (counting the buffer made 32k-decode look 30x more
+                # memory-bound than it is).
+                dus = self._dus_root_update_bytes(called)
+                if dus is not None and dus < out_bytes:
+                    tot["bytes"] += 2 * dus + (opnd_bytes - out_bytes
+                                               if opnd_bytes > out_bytes
+                                               else 0)
+                else:
+                    disc = self._fusion_sliced_discount(called)
+                    tot["bytes"] += out_bytes + max(0.0, opnd_bytes - disc)
+            elif op in ("call", "conditional", "async-start"):
+                m = _CALLED_RE.search(ins.rest)
+                if m and m.group(1) in self.comps:
+                    sub = self.cost(m.group(1))
+                    for k in tot:
+                        tot[k] += sub.get(k, 0.0)
+                    for k, v in sub.get("_coll_by_kind", {}).items():
+                        coll_by_kind[k] = coll_by_kind.get(k, 0.0) + v
+                    for k, v in sub.get("_coll_counts", {}).items():
+                        counts[k] = counts.get(k, 0.0) + v
+            elif op in ("slice", "dynamic-slice", "gather"):
+                # traffic ~ the slice moved (out read + write), NOT the
+                # full operand: counting a (L, ...) stacked cache as read
+                # per layer-loop slice inflated decode bytes ~30x.
+                tot["bytes"] += 2 * out_bytes
+            elif op in ("dynamic-update-slice", "scatter"):
+                # read-modify-write of the update region; the big operand
+                # aliases in place.
+                upd = min((b for b in (
+                    _shape_elems_bytes(comp.shapes.get(nm, ""))[1]
+                    for nm in _OPERANDS_SPLIT_RE.findall(
+                        ins.rest.split("),")[0])) if b > 0),
+                    default=out_bytes)
+                tot["bytes"] += 2 * upd
+            elif op == "dot":
+                tot["flops"] += _dot_flops(ins, comp.shapes)
+                tot["bytes"] += out_bytes + opnd_bytes
+            elif any(op == k or op == k + "-start" for k in COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                tot["coll_bytes"] += out_bytes
+                tot["bytes"] += out_bytes + opnd_bytes
+                coll_by_kind[kind] = coll_by_kind.get(kind, 0.0) + out_bytes
+                counts[kind] = counts.get(kind, 0.0) + 1
+            elif op.endswith("-done"):
+                continue
+            elif op in _SKIP_OPS:
+                continue
+            else:
+                tot["flops"] += out_elems
+                tot["bytes"] += out_bytes + opnd_bytes
+        tot["_coll_by_kind"] = coll_by_kind
+        tot["_coll_counts"] = counts
+        self._memo[comp_name] = tot
+        return tot
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    h = HloCost(hlo_text)
+    c = h.cost()
+    return {
+        "flops": c["flops"], "bytes": c["bytes"],
+        "coll_bytes": c["coll_bytes"],
+        "coll_by_kind": dict(c["_coll_by_kind"]),
+        "coll_counts": {k: int(v) for k, v in c["_coll_counts"].items()},
+        "unparsed_loops": h.unparsed_loops,
+    }

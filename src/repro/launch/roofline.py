@@ -1,0 +1,105 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants (TPU v5e target):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI.
+
+Terms (seconds; per-chip quantities — XLA's post-SPMD module is the
+per-device program, so cost_analysis/HLO text are already per chip):
+  compute    = flops_per_chip / peak
+  memory     = bytes_accessed_per_chip / hbm_bw
+  collective = collective_bytes_per_chip / ici_bw
+
+MODEL_FLOPS (analytic "useful" flops, global):
+  train_4k    : 6 * N_active * tokens
+  prefill_32k : 2 * N_active * tokens
+  decode      : 2 * N_active * batch  (+ KV-cache reads are memory, not flops)
+with N_active = active params excluding embed/unembed tables.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes of every collective op in (per-device) HLO.
+
+    Post-optimisation HLO lines look like
+      %x = bf16[4,128]{1,0} all-reduce(%y), replica_groups=...
+    (possibly a tuple output, possibly `-start`).  We parse every shape
+    literal between `=` and the op name — i.e. the op's result shape(s) —
+    and skip `-done` halves of async pairs so nothing double-counts.
+    """
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        _, _, rhs = s.partition("=")
+        for kind in _COLLECTIVES:
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if m is None or f"{kind}-done" in rhs:
+                continue
+            per_kind[kind] += _shape_bytes(rhs[:m.start()])
+            counts[kind] += 1
+            break
+    total = sum(per_kind.values())
+    return {"total": total, "per_kind": per_kind, "counts": counts}
+
+
+def terms(flops_per_chip: float, bytes_per_chip: float,
+          coll_bytes_per_chip: float) -> Dict[str, float]:
+    compute = flops_per_chip / PEAK_FLOPS
+    memory = bytes_per_chip / HBM_BW
+    coll = coll_bytes_per_chip / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    step = max(compute, memory, coll)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant, "step_lower_bound_s": step,
+        # fraction of the step the chip would spend at peak flops if the
+        # dominant term were fully overlapped with the others
+        "roofline_fraction": compute / step if step > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape_info: Dict[str, Any]) -> float:
+    emb = 2 * cfg.padded_vocab * cfg.d_model
+    n_active = cfg.active_param_count() - emb
+    B, S = shape_info["batch"], shape_info["seq"]
+    kind = shape_info["kind"]
+    if kind == "train":
+        return 6.0 * n_active * B * S
+    if kind == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B          # decode: one token per sequence

@@ -1,0 +1,67 @@
+"""Serving launcher: period-T tiered serving with the paper's scheduler.
+
+CPU demo form (reduced ladder, real latencies):
+  PYTHONPATH=src python -m repro.launch.serve --periods 4 --n 16 \
+      [--policy auto|amr2|amdp|dual|greedy] [--t-factor 0.8]
+
+On a fleet the same runtime takes the assigned-arch ladders (e.g.
+gemma3-1b + scaled variants on the ED tier, internvl2-76b on the ES pod)
+with roofline-derived profiles; this entry point wires the reduced
+configs so the loop is runnable anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--periods", type=int, default=4)
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--policy", default="auto")
+    ap.add_argument("--t-factor", type=float, default=0.8)
+    ap.add_argument("--train-steps", type=int, default=20)
+    ap.add_argument("--fail-period", type=int, default=-1,
+                    help="simulate an ES outage in this period")
+    args = ap.parse_args(argv)
+
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))), "examples"))
+    from serve_offload import build_models, make_apply  # noqa: E402
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.serving import ServingRuntime, TierProfile, measure_latency
+    from repro.configs.paper_edge import CONFIG as ES_CFG
+
+    models = build_models(train_steps=args.train_steps)
+    applies = [make_apply(c, p) for c, p in models]
+    pipe = TokenPipeline(DataConfig(vocab_size=ES_CFG.vocab_size,
+                                    seq_len=64, global_batch=max(args.n, 16),
+                                    seed=7))
+    test_jobs = [pipe.batch_at(0)["tokens"][i] for i in range(8)]
+    accs = [float(np.mean(app(test_jobs))) for app in applies]
+    lats = [measure_latency(lambda a=app: a(test_jobs[:1]), (), iters=8)
+            for app in applies]
+    profile = TierProfile(
+        name="ladder", p_ed=np.array([[lats[0], lats[1]]]),
+        p_es=np.array([lats[2] * 1.2]), acc=np.array(accs), classes=[64])
+
+    T = args.n * lats[1] * args.t_factor
+    rt = ServingRuntime(profile, applies[:2], applies[2], T=T,
+                        policy=args.policy)
+    for period in range(args.periods):
+        jobs = [pipe.batch_at(10 + period)["tokens"][i]
+                for i in range(args.n)]
+        s = rt.run_period(jobs, np.full(args.n, 64),
+                          es_fail=(period == args.fail_period))
+        print(f"[serve] period {period}: {s.policy} A={s.total_accuracy:.2f}"
+              f" pred={s.predicted_makespan:.3f}s wall={s.wall_makespan:.3f}s"
+              f" viol={100 * s.violation:.0f}%"
+              f"{' REPLANNED' if s.replanned else ''}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""pjit-able step factories: train / prefill / decode.
+
+Each factory closes over the (static) ModelConfig and returns a pure
+function of arrays, suitable for `jax.jit(...).lower(...)` with
+ShapeDtypeStructs (dry-run) or real buffers (examples/tests)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, decode_step, loss_fn, prefill
+from ..optim import adamw_init, adamw_update
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, impl: str = "jnp",
+                    grad_tx: Optional[Callable] = None):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    `grad_tx` is an optional gradient transform hook (e.g. the int8
+    error-feedback compressor in distributed/compression.py)."""
+
+    M = max(1, cfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, impl=impl))(params)
+        else:
+            # gradient accumulation: activation peak scales with B/M while
+            # the optimizer still sees the full global batch
+            mb = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, b):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, b, cfg, impl=impl))(params)
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            (loss, grads), _ = jax.lax.scan(body, (0.0, g0), mb)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        if grad_tx is not None:
+            grads = grad_tx(grads)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, impl: str = "jnp"):
+    def eval_step(params, batch):
+        return loss_fn(params, batch, cfg, impl=impl)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, *, impl: str = "jnp"):
+    """(params, batch) -> (cache, last-token logits)."""
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, max_seq=max_seq, impl=impl)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, tokens (B,1), cache) -> (logits, new cache)."""
+
+    def serve_step(params, tokens, cache):
+        return decode_step(params, tokens, cache, cfg)
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, params):
+    return adamw_init(params)

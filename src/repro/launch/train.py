@@ -1,0 +1,145 @@
+"""Fault-tolerant training driver.
+
+Ties together: config registry -> pjit'd train step (optionally compressed
+grads) -> deterministic data pipeline -> async manifest checkpoints ->
+preemption handling -> straggler detection.
+
+Restart semantics: `--resume` picks up the latest published checkpoint
+(params, optimizer, data cursor) and continues bit-identically — the data
+pipeline is a pure function of (seed, step).  A preemption (SIGTERM or the
+--preempt-file sentinel, which makes it testable) triggers a synchronous
+final save and exit code 42 so a supervisor can reschedule.
+
+Elastic: the checkpoint stores unsharded leaves; on restart with a
+different device count the restore path re-shards (see checkpoint.manager).
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-20b \
+      --smoke --steps 20 --global-batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed.compression import compress_tree
+from repro.distributed.sharding import (base_rules, sharding_context,
+                                        tree_shardings)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params, param_axes
+from repro.optim import adamw_init, cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--preempt-file", default=None,
+                    help="touch this file to simulate a preemption")
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(len(jax.devices()))
+    rules = base_rules(False)
+    key = jax.random.key(args.seed)
+
+    lr = cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                         total=args.steps)
+    grad_tx = None
+    ef_error = {"v": None}
+    if args.compress_grads:
+        def grad_tx(g):  # noqa: E306
+            out, ef_error["v"] = compress_tree(g, ef_error["v"])
+            return out
+    step_fn = make_train_step(cfg, lr=lr, grad_tx=grad_tx)
+
+    p_shard = tree_shardings(param_axes(cfg), mesh, rules)
+    with sharding_context(mesh, rules):
+        step_jit = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        params = init_params(cfg, key)
+        opt = adamw_init(params)
+        start_step = 0
+        if args.resume and args.ckpt_dir:
+            latest = ckpt.latest_step(args.ckpt_dir)
+            if latest is not None:
+                (params, opt), meta = ckpt.restore(
+                    args.ckpt_dir, latest, (params, opt))
+                start_step = int(meta["step"]) + 1
+                print(f"[train] resumed from step {latest} "
+                      f"(data cursor {start_step})")
+
+        pipe = TokenPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq,
+            global_batch=args.global_batch, seed=args.seed))
+        writer = (ckpt.AsyncCheckpointer(args.ckpt_dir)
+                  if args.ckpt_dir else None)
+
+        preempted = {"flag": False}
+
+        def _sig(_s, _f):
+            preempted["flag"] = True
+        signal.signal(signal.SIGTERM, _sig)
+
+        ema = None
+        losses = []
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in pipe.batch_at(step).items()}
+            params, opt, loss = step_jit(params, opt, batch)
+            losses.append(float(loss))
+            dt = time.time() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > args.straggler_factor * ema and step > start_step + 3:
+                print(f"[train] straggler tick at step {step}: "
+                      f"{dt:.2f}s vs ema {ema:.2f}s — at fleet scale this "
+                      f"triggers re-profiling/eviction")
+            if step % args.log_every == 0:
+                print(f"[train] step {step} loss {float(loss):.4f} "
+                      f"({dt:.2f}s)")
+            if writer and step % args.ckpt_every == 0 and step > start_step:
+                writer.submit(step, (params, opt), {"step": step})
+            if args.preempt_file and os.path.exists(args.preempt_file):
+                preempted["flag"] = True
+            if preempted["flag"]:
+                print(f"[train] preemption at step {step}: saving + exiting")
+                if writer:
+                    writer.wait()
+                if args.ckpt_dir:
+                    ckpt.save(args.ckpt_dir, step, (params, opt),
+                              {"step": step})
+                sys.exit(42)
+
+        if writer:
+            writer.submit(args.steps - 1, (params, opt),
+                          {"step": args.steps - 1})
+            writer.wait()
+        print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

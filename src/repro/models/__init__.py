@@ -1,0 +1,11 @@
+from .config import ModelConfig, dense_lm, moe_lm, pad_vocab
+from .model import (init_params, param_axes, param_shapes, forward, loss_fn,
+                    logits_from_h, prefill, decode_step, init_cache,
+                    cache_specs, cache_axes)
+
+__all__ = [
+    "ModelConfig", "dense_lm", "moe_lm", "pad_vocab",
+    "init_params", "param_axes", "param_shapes", "forward", "loss_fn",
+    "logits_from_h", "prefill", "decode_step", "init_cache", "cache_specs",
+    "cache_axes",
+]

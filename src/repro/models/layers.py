@@ -1,0 +1,784 @@
+"""Layer zoo: attention (full/SWA/local/enc/dec-cross, GQA), SwiGLU/GELU/MoE
+FFNs, RG-LRU recurrent block, Mamba2 SSD block — each with a paired decode
+step operating on an explicit cache pytree.
+
+Numerics: params live in ``param_dtype`` (f32), compute runs in ``dtype``
+(bf16 target), and every reduction that needs it (softmax, recurrent state,
+MoE gates, losses) accumulates in f32.
+
+Attention has three interchangeable implementations:
+  * dense    — materialises (Sq, Sk) scores; reference + smoke tests.
+  * chunked  — `lax.scan` over KV chunks with online-softmax accumulators
+               (flash-attention math at the jnp level) so big shapes lower
+               without an S^2 buffer; optional q-block causal scheduling
+               structurally skips fully-masked work (see EXPERIMENTS §Perf).
+  * pallas   — `repro.kernels.flash_attention` (TPU target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from ..distributed.sharding import shard_activation
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def _grad_bf16(x):
+    return x
+
+
+def _grad_bf16_fwd(x):
+    return x, None
+
+
+def _grad_bf16_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_grad_bf16.defvjp(_grad_bf16_fwd, _grad_bf16_bwd)
+
+
+def grad_dtype_barrier(x):
+    """Identity forward; casts the cotangent to bf16 on the way back.
+
+    JAX cotangents follow einsum promotion rules, not primal dtypes: the
+    f32 flash accumulator's backward chain promotes dq/dk/dv — and then the
+    whole residual-stream gradient — to f32, doubling every backward
+    (B,S,D) all-gather/matmul (dry-run: 7x 384 MiB f32 gathers per layer).
+    A barrier at each block boundary pins the cotangents back to bf16."""
+    if x.dtype == jnp.bfloat16:
+        return _grad_bf16(x)
+    return x
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    # squares in the compute dtype, accumulation in f32: `x.astype(f32)`
+    # would materialise an f32 (B,S,D) that GSPMD then all-gathers in f32
+    # for the following projection (dry-run: 7x 384 MiB f32 gathers/layer);
+    # bf16 squares + f32 reduce keep the gathered operand bf16 at a ~0.4%
+    # variance-estimate error.
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * (1.0 + scale.astype(dt))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotated at `positions` (broadcastable to (..., S))."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (..., S, half)
+    # angles in f32 (positions up to 512k), application in the compute dtype:
+    # f32 rotation makes every projection-backward dot f32 at (B*S, D) —
+    # dry-run measured multiple 1.5 GiB/chip f32 buffers from exactly this.
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _mask(kind: str, q_pos, k_pos, window: int):
+    """(Sq, Sk) boolean mask from absolute positions."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if kind == "causal":
+        return k <= q
+    if kind == "window":                  # causal sliding window
+        return (k <= q) & (k > q - window)
+    if kind == "none":
+        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _dense_attention(q, k, v, q_pos, k_pos, mask_kind, window):
+    """q,k,v: (B,S,H,D) — KV already repeated to H heads (GQA flattened so
+    the head axis shards cleanly; (KH, G) split dims defeat GSPMD)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = _mask(mask_kind, q_pos, k_pos, window)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return o
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, mask_kind, window, chunk,
+                       score_dtype=jnp.float32):
+    """Online-softmax scan over KV chunks. Shapes as in _dense_attention."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nchunk = -(-Sk // chunk)
+    pad = nchunk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-10**9)
+    kc = k.reshape(B, nchunk, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nchunk, chunk)
+    scale = D ** -0.5
+
+    def step(carry, xs):
+        acc, mx, den = carry
+        kb, vb, pb = xs
+        # score einsum emits `score_dtype`: f32 (default, flash-standard)
+        # keeps softmax exact but makes the attention *cotangents* f32 —
+        # every backward all-gather/matmul on the (B,S,D) path pays 2x
+        # bytes.  bf16 scores trade ~2-3 mantissa bits for bf16 cotangents
+        # (§Perf hillclimb knob; the TPU pallas kernel keeps f32 in VMEM
+        # where it costs nothing).
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=score_dtype
+                       ).astype(jnp.float32) * scale
+        s = shard_activation(s, "batch", "act_heads", None, None)
+        m = _mask(mask_kind, q_pos, pb, window)
+        s = jnp.where(m[None, None], s, NEG_INF)
+        bmx = jnp.maximum(mx, s.max(axis=-1))
+        corr = jnp.exp(mx - bmx)
+        p = jnp.exp(s - bmx[..., None])
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        den = den * corr + p.sum(axis=-1)
+        return (acc, bmx, den), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    mx0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((B, H, Sq), jnp.float32)
+    # checkpoint the step: without it scan-backward saves every chunk's
+    # (Sq, chunk) score block — the full S^2 residual flash attention exists
+    # to avoid (dry-run showed 100+ GiB/chip at 4k train without this).
+    (acc, _, den), _ = jax.lax.scan(jax.checkpoint(step),
+                                    (acc0, mx0, den0), (kc, vc, pc))
+    o = acc / jnp.maximum(den[..., None], 1e-30)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,Sq,H,D)
+
+
+def attention(q, k, v, q_pos, k_pos, *, mask_kind, window, cfg: ModelConfig):
+    """GQA attention dispatcher. q: (B,Sq,H,D) -> (B,Sq,H,D).
+
+    KV heads are repeated up to H before the score einsums: a flattened
+    head axis is the only layout GSPMD can shard on the model axis (the
+    (KH, G) factorisation has no divisible dim on a 16-wide mesh axis)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qg = grad_dtype_barrier(shard_activation(q, "batch", None, "act_heads",
+                                             None))
+    k = grad_dtype_barrier(shard_activation(k, "batch", None, "act_heads",
+                                            None))
+    v = grad_dtype_barrier(shard_activation(v, "batch", None, "act_heads",
+                                            None))
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "dense" if (Sq * k.shape[1] <= 2048 * 2048) else "chunked"
+    if impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(qg, k, v, q_pos, k_pos,
+                                   mask_kind=mask_kind, window=window)
+    elif impl == "dense":
+        o = _dense_attention(qg, k, v, q_pos, k_pos, mask_kind, window)
+    elif impl == "chunked":
+        if cfg.q_block and mask_kind in ("causal", "window") and Sq > cfg.q_block:
+            o = _qblock_attention(qg, k, v, q_pos, k_pos, mask_kind, window,
+                                  cfg)
+        else:
+            o = _chunked_attention(qg, k, v, q_pos, k_pos, mask_kind, window,
+                                   cfg.attn_chunk,
+                                   score_dtype=jnp.dtype(cfg.score_dtype))
+    else:
+        raise ValueError(impl)
+    return o.reshape(B, Sq, H, D)
+
+
+def _qblock_attention(qg, k, v, q_pos, k_pos, mask_kind, window, cfg):
+    """Causal/windowed attention with static per-q-block KV ranges: q block i
+    only scans KV prefix (causal) or its window band — the *structural* flop
+    reduction measured in §Perf (HLO flops drop ~2x causal, ~S/W windowed)."""
+    B, Sq, H, D = qg.shape
+    qb = cfg.q_block
+    nq = Sq // qb
+    outs = []
+    for i in range(nq):
+        qs, qe = i * qb, (i + 1) * qb
+        if mask_kind == "causal":
+            ks, ke = 0, qe
+        else:  # window
+            ks, ke = max(0, qs - window), qe
+        o = _chunked_attention(qg[:, qs:qe], k[:, ks:ke], v[:, ks:ke],
+                               q_pos[qs:qe], k_pos[ks:ke], mask_kind, window,
+                               min(cfg.attn_chunk, ke - ks),
+                               score_dtype=jnp.dtype(cfg.score_dtype))
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply + decode)
+# ---------------------------------------------------------------------------
+def attn_param_defs(cfg: ModelConfig, cross: bool = False):
+    D, H, KH, Hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "norm": ((D,), ("embed",)),
+        "wq": ((D, H * Hd), ("embed", "qkv")),
+        "wk": ((D, KH * Hd), ("embed", "kv")),
+        "wv": ((D, KH * Hd), ("embed", "kv")),
+        "wo": ((H * Hd, D), ("qkv", "embed")),
+    }
+    if cross:
+        defs.update({
+            "xnorm": ((D,), ("embed",)),
+            "xwq": ((D, H * Hd), ("embed", "qkv")),
+            "xwk": ((D, KH * Hd), ("embed", "kv")),
+            "xwv": ((D, KH * Hd), ("embed", "kv")),
+            "xwo": ((H * Hd, D), ("qkv", "embed")),
+        })
+    return defs
+
+
+def _proj_qkv(x, p, cfg, prefix=""):
+    B, S, _ = x.shape
+    H, KH, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p[prefix + "wq"].astype(dt)).reshape(B, S, H, Hd)
+    k = (x @ p[prefix + "wk"].astype(dt)).reshape(B, S, KH, Hd)
+    v = (x @ p[prefix + "wv"].astype(dt)).reshape(B, S, KH, Hd)
+    return q, k, v
+
+
+def _mixer_spec(mixer: str, cfg: ModelConfig):
+    """(mask_kind, window, theta) for a self-attention mixer."""
+    if mixer == "full":
+        return "causal", 0, cfg.rope_theta
+    if mixer == "swa":
+        return "window", cfg.window_size, cfg.rope_theta
+    if mixer == "local":
+        return "window", cfg.local_window, cfg.rope_theta
+    if mixer == "global":
+        return "causal", 0, cfg.rope_theta_global
+    if mixer == "enc":
+        return "none", 0, cfg.rope_theta
+    if mixer == "dec":
+        return "causal", 0, cfg.rope_theta
+    raise ValueError(mixer)
+
+
+def attn_apply(p, x, mixer, cfg: ModelConfig, positions,
+               enc_out: Optional[jnp.ndarray] = None,
+               want_cache: bool = False, max_seq: int = 0):
+    """Full-sequence self (+optional cross) attention block."""
+    mask_kind, window, theta = _mixer_spec(mixer, cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _proj_qkv(h, p, cfg)
+    if mixer != "enc":                      # encoder uses no RoPE-on-frames
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    cache = (attn_prefill_cache(p, (k, v), mixer, cfg, max_seq)
+             if want_cache else None)
+    o = attention(q, k, v, positions, positions, mask_kind=mask_kind,
+                  window=window, cfg=cfg)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype)
+    if mixer == "dec" and enc_out is not None:
+        h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+        B, S, _ = h.shape
+        H, KH, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (h @ p["xwq"].astype(h.dtype)).reshape(B, S, H, Hd)
+        k = (enc_out @ p["xwk"].astype(h.dtype)).reshape(B, -1, KH, Hd)
+        v = (enc_out @ p["xwv"].astype(h.dtype)).reshape(B, -1, KH, Hd)
+        epos = jnp.arange(enc_out.shape[1])
+        o = attention(q, k, v, positions, epos, mask_kind="none", window=0,
+                      cfg=cfg)
+        x = x + o.reshape(B, S, -1) @ p["xwo"].astype(x.dtype)
+    return x, cache
+
+
+def attn_cache_len(mixer: str, cfg: ModelConfig, max_seq: int) -> int:
+    mask_kind, window, _ = _mixer_spec(mixer, cfg)
+    return min(max_seq, window) if mask_kind == "window" else max_seq
+
+
+def attn_decode(p, x, cache, mixer, cfg: ModelConfig, index,
+                enc_out: Optional[jnp.ndarray] = None):
+    """One-token decode. x: (B,1,D); cache: {"k","v"}: (B,W,KH,Hd) ring
+    buffers (RoPE pre-applied at write); `index` — absolute position."""
+    mask_kind, window, theta = _mixer_spec(mixer, cfg)
+    W = cache["k"].shape[1]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _proj_qkv(h, p, cfg)
+    pos = jnp.full((1,), index, jnp.int32)
+    q = rope(q, pos, theta)
+    k = rope(k, pos, theta)
+    slot = index % W
+    # one-hot masked write, NOT dynamic_update_slice: a dus at a traced
+    # index on the sequence-sharded cache makes the SPMD partitioner
+    # replicate the whole cache per chip ("involuntary full remat" — 8+ GiB
+    # at the 32k shapes).  The masked write is elementwise and stays sharded.
+    hot = (jnp.arange(W) == slot)[None, :, None, None]
+    ck = jnp.where(hot, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
+    # absolute position of each ring slot
+    slots = jnp.arange(W)
+    wraps = (index // W) - (slots > slot)
+    abs_pos = jnp.where(slots <= slot, slots + (index // W) * W,
+                        slots + (index // W - 1) * W)
+    del wraps
+    valid = (abs_pos >= 0) & (abs_pos <= index)
+    if mask_kind == "window":
+        valid &= abs_pos > index - window
+    B, _, H, Hd = q.shape
+    KH = ck.shape[2]
+    G = H // KH
+    # grouped-GQA einsum, NOT kv-repeat: repeating the cache to H heads
+    # materialises G x the cache (17 GiB/chip at 32k decode, measured).
+    # The cache is sequence-sharded (flash-decode): the softmax reductions
+    # over the sharded k axis become per-shard partials + a small combine.
+    qg = q.reshape(B, 1, KH, G, Hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * (Hd ** -0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pattn.astype(x.dtype),
+                   cv.astype(x.dtype))
+    x = x + o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    if mixer == "dec" and enc_out is not None:
+        h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+        H, KH2, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q2 = (h @ p["xwq"].astype(h.dtype)).reshape(B, 1, H, Hd)
+        k2 = (enc_out @ p["xwk"].astype(h.dtype)).reshape(B, -1, KH2, Hd)
+        v2 = (enc_out @ p["xwv"].astype(h.dtype)).reshape(B, -1, KH2, Hd)
+        epos = jnp.arange(enc_out.shape[1])
+        o2 = attention(q2, k2, v2, jnp.full((1,), index), epos,
+                       mask_kind="none", window=0, cfg=cfg)
+        x = x + o2.reshape(B, 1, -1) @ p["xwo"].astype(x.dtype)
+    return x, {"k": ck, "v": cv}
+
+
+def attn_prefill_cache(p, x_normed_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                       mixer, cfg, max_seq: int):
+    """Build a ring cache from full-sequence K,V (RoPE already applied)."""
+    k, v = x_normed_kv
+    B, S, KH, Hd = k.shape
+    W = attn_cache_len(mixer, cfg, max_seq)
+    cdt = jnp.dtype(cfg.kv_cache_dtype)
+    k = k.astype(cdt)
+    v = v.astype(cdt)
+    ck = jnp.zeros((B, W, KH, Hd), cdt)
+    cv = jnp.zeros((B, W, KH, Hd), cdt)
+    take = min(S, W)
+    ksrc, vsrc = k[:, -take:], v[:, -take:]
+    slots = (jnp.arange(take) + (S - take)) % W
+    ck = ck.at[:, slots].set(ksrc)
+    cv = cv.at[:, slots].set(vsrc)
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+def ffn_param_defs(cfg: ModelConfig, kind: str):
+    D = cfg.d_model
+    if kind == "swiglu":
+        F = cfg.d_ff
+        return {"fnorm": ((D,), ("embed",)),
+                "wi_gate": ((D, F), ("embed", "mlp")),
+                "wi_up": ((D, F), ("embed", "mlp")),
+                "wo_ffn": ((F, D), ("mlp", "embed"))}
+    if kind == "gelu":
+        F = cfg.d_ff
+        return {"fnorm": ((D,), ("embed",)),
+                "wi": ((D, F), ("embed", "mlp")),
+                "wo_ffn": ((F, D), ("mlp", "embed"))}
+    if kind == "moe":
+        E, F = cfg.num_experts, cfg.moe_d_ff
+        return {"fnorm": ((D,), ("embed",)),
+                "router": ((D, E), ("embed", "expert")),
+                "we_gate": ((E, D, F), ("expert", "embed", "expert_mlp")),
+                "we_up": ((E, D, F), ("expert", "embed", "expert_mlp")),
+                "we_down": ((E, F, D), ("expert", "expert_mlp", "embed"))}
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def ffn_apply(p, x, kind, cfg: ModelConfig):
+    if kind == "none":
+        return x
+    dt = x.dtype
+    h = rms_norm(x, p["fnorm"], cfg.norm_eps)
+    if kind == "swiglu":
+        g = jax.nn.silu(h @ p["wi_gate"].astype(dt))
+        u = h @ p["wi_up"].astype(dt)
+        return x + (g * u) @ p["wo_ffn"].astype(dt)
+    if kind == "gelu":
+        u = jax.nn.gelu(h @ p["wi"].astype(dt))
+        return x + u @ p["wo_ffn"].astype(dt)
+    if kind == "moe":
+        return x + moe_apply(p, h, cfg)
+    raise ValueError(kind)
+
+
+def moe_apply(p, h, cfg: ModelConfig):
+    """Top-k routed experts with capacity-bounded scatter dispatch.
+
+    Dispatch is scatter/gather-based (positions via a cumsum over the
+    assignment one-hot), not a (B,S,E,C) einsum — the one-hot dispatch
+    tensor would be ~10^14 elements at the 32k shapes.  Overflowed tokens
+    (> capacity) are dropped, standard Switch-style."""
+    B, S, D = h.shape
+    E, K, F = cfg.num_experts, cfg.experts_per_token, cfg.moe_d_ff
+    dt = h.dtype
+    N = B * S
+    x = h.reshape(N, D)
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                  # (N,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if S == 1:
+        # decode path: gather each token's K expert weights directly —
+        # no capacity/drops, flops = exactly the active experts.
+        wg = p["we_gate"][idx].astype(dt)                 # (N,K,D,F)
+        wu = p["we_up"][idx].astype(dt)
+        wd = p["we_down"][idx].astype(dt)                 # (N,K,F,D)
+        g = jax.nn.silu(jnp.einsum("nd,nkdf->nkf", x, wg))
+        u = jnp.einsum("nd,nkdf->nkf", x, wu)
+        y = jnp.einsum("nkf,nkfd->nkd", g * u, wd)
+        y = (y * gates[..., None].astype(dt)).sum(axis=1)
+        return y.reshape(B, S, D)
+
+    # Grouped dispatch: tokens split into `moe_groups` groups aligned with
+    # the DP sharding; each group scatters into its own (E, Cg, D) buffer
+    # with group-local capacity, so buffers shard over the data axes instead
+    # of replicating a global-capacity buffer per chip (dry-run measured
+    # 30+ GiB/chip without grouping at the 32k-prefill shapes).
+    Gr = min(cfg.moe_groups, N)
+    while N % Gr:
+        Gr //= 2
+    Nl = N // Gr
+    cap = int(math.ceil(Nl * K / E * cfg.capacity_factor))
+    cap = max(cap, K)
+    xg = x.reshape(Gr, Nl, D)
+    idx_g = idx.reshape(Gr, Nl, K)
+    gates_g = gates.reshape(Gr, Nl, K)
+    xg = shard_activation(xg, "moe_group", None, None)
+
+    def one_group(xl, idxl, gatesl):
+        e_flat = idxl.reshape(Nl * K)
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.float32)  # (NlK, E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos_in_e = jnp.take_along_axis(
+            pos, e_flat[:, None], axis=1)[:, 0].astype(jnp.int32)
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, pos_in_e, cap)                 # overflow slot
+        x_rep = jnp.repeat(xl, K, axis=0)                     # (NlK, D)
+        buf = jnp.zeros((E, cap + 1, D), dt)
+        # scatter-SET, not add: slots are unique by construction (position-
+        # in-expert), and XLA promotes bf16 scatter-add to f32 — which then
+        # poisons every downstream expert matmul/collective to f32 (dry-run
+        # measured 2x collective bytes).  Overflow-slot collisions don't
+        # matter: that slot is sliced off.
+        buf = buf.at[e_flat, slot].set(x_rep, mode="drop",
+                                       unique_indices=True)
+        buf = buf[:, :cap]                                    # (E, Cg, D)
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                   p["we_gate"].astype(dt)))
+        u = jnp.einsum("ecd,edf->ecf", buf, p["we_up"].astype(dt))
+        y_e = jnp.einsum("ecf,efd->ecd", g * u, p["we_down"].astype(dt))
+        y_e = jnp.concatenate([y_e, jnp.zeros((E, 1, D), dt)], axis=1)
+        y_tok = y_e[e_flat, slot]                             # (NlK, D)
+        y_tok = y_tok * (gatesl.reshape(Nl * K, 1).astype(dt) *
+                         keep[:, None].astype(dt))
+        return y_tok.reshape(Nl, K, D).sum(axis=1)
+
+    y = jax.vmap(one_group)(xg, idx_g, gates_g)
+    return y.reshape(B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+def rglru_param_defs(cfg: ModelConfig):
+    D, W, H = cfg.d_model, cfg.lru_width, cfg.num_heads
+    bw = W // H
+    return {"norm": ((D,), ("embed",)),
+            "wx": ((D, W), ("embed", "lru")),
+            "wy": ((D, W), ("embed", "lru")),
+            "conv_w": ((cfg.conv_width, W), ("conv", "lru")),
+            "gate_a": ((H, bw, bw), ("heads", "lru_block", "lru_block2")),
+            "gate_x": ((H, bw, bw), ("heads", "lru_block", "lru_block2")),
+            "a_param": ((W,), ("lru",)),
+            "wout": ((W, D), ("lru", "embed"))}
+
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(p, x):
+    """x: (..., W) -> log_a (recurrence log-coeff) and gated input."""
+    H, bw, _ = p["gate_a"].shape
+    xs = x.reshape(x.shape[:-1] + (H, bw)).astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...hb,hbc->...hc", xs,
+                                  p["gate_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...hb,hbc->...hc", xs,
+                                  p["gate_x"].astype(jnp.float32)))
+    r = r.reshape(x.shape)
+    i = i.reshape(x.shape)
+    log_a = -_LRU_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = mult * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,W); w: (K,W). Returns y and the new
+    conv state (last K-1 inputs)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def rglru_apply(p, x, cfg: ModelConfig, want_cache: bool = False):
+    """Full-sequence recurrent block via associative scan."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    dt = x.dtype
+    u = h @ p["wx"].astype(dt)                       # (B,S,W)
+    ygate = jax.nn.gelu(h @ p["wy"].astype(dt))
+    u, conv_state = _causal_conv(u, p["conv_w"])
+    a, b = _rglru_gates(p, u)                        # f32 (B,S,W)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(dt) * ygate) @ p["wout"].astype(dt)
+    cache = ({"state": hseq[:, -1], "conv": conv_state}
+             if want_cache else None)
+    return x + y, cache
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig, index):
+    """x: (B,1,D); cache: {"state": (B,W) f32, "conv": (B,K-1,W)}."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    dt = x.dtype
+    u = h @ p["wx"].astype(dt)
+    ygate = jax.nn.gelu(h @ p["wy"].astype(dt))
+    u, conv_state = _causal_conv(u, p["conv_w"], state=cache["conv"])
+    a, b = _rglru_gates(p, u)                        # (B,1,W)
+    state = a[:, 0] * cache["state"] + b[:, 0]
+    y = (state[:, None].astype(dt) * ygate) @ p["wout"].astype(dt)
+    return x + y, {"state": state, "conv": conv_state}
+
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block
+# ---------------------------------------------------------------------------
+def ssd_param_defs(cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.d_inner
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    return {"norm": ((D,), ("embed",)),
+            "in_proj": ((D, 2 * di + 2 * N + H), ("embed", "ssm_in")),
+            "conv_w": ((cfg.conv_width, conv_dim), ("conv", "ssm_conv")),
+            "A_log": ((H,), ("ssm_heads",)),
+            "D_skip": ((H,), ("ssm_heads",)),
+            "dt_bias": ((H,), ("ssm_heads",)),
+            "gnorm": ((di,), ("ssm_inner",)),
+            "out_proj": ((di, D), ("ssm_inner", "embed"))}
+
+
+def _ssd_inputs(p, x, cfg: ModelConfig, conv_state=None):
+    """Shared in-proj + conv + split for prefill/full/decode."""
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+    B, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (H,)
+    return z, xs, B_, C_, dt, A, new_conv
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan_chunked(xs, dt, A, B_, C_, chunk):
+    """Chunked SSD (Mamba2 Alg. 1) in pure jnp.
+
+    xs: (B,S,H,P); dt: (B,S,H); A: (H,); B_,C_: (B,S,N) (single group).
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bb, S, H, P = xs.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is inert: decay exp(0)=1 and xdt=0, so the state
+        # carries through unchanged; padded y rows are sliced off.
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    xs_c = xs.reshape(Bb, nc, Q, H, P)
+    dt_c = dt.reshape(Bb, nc, Q, H)
+    B_c = B_.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    C_c = C_.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    dA = dt_c * A                                          # (B,nc,Q,H)
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))         # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c)
+    Y = jnp.einsum("bchqk,bcqk,bckhp->bcqhp", L, scores, xdt)
+
+    # chunk states
+    dA_cum = jnp.cumsum(dA, axis=2)                        # (B,nc,Q,H)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", B_c, decay_to_end, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (B,nc,H)
+
+    def scan_step(carry, xs_):
+        dec, st_new = xs_
+        out = carry
+        carry = carry * dec[:, :, None, None] + st_new
+        return carry, out
+
+    init = jnp.zeros((Bb, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_step, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(dA_cum)                     # (B,nc,Q,H)
+    Y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", C_c, prev_states,
+                       decay_from_start)
+    y = (Y + Y_off).reshape(Bb, S, H, P)
+    if pad:
+        y = y[:, :S - pad]
+    return y, final_state
+
+
+def ssd_apply(p, x, cfg: ModelConfig, impl: str = "jnp",
+              want_cache: bool = False):
+    z, xs, B_, C_, dt, A, conv_state = _ssd_inputs(p, x, cfg)
+    if impl == "pallas":
+        from ..kernels.ssd_scan import ops as ssd_ops
+        y, final_state = ssd_ops.ssd_scan(xs, dt, A, B_, C_, cfg.ssm_chunk)
+    else:
+        y, final_state = ssd_scan_chunked(xs, dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    cache = ({"state": final_state, "conv": conv_state}
+             if want_cache else None)
+    return x + y @ p["out_proj"].astype(x.dtype), cache
+
+
+def ssd_decode(p, x, cache, cfg: ModelConfig, index):
+    """cache: {"state": (B,H,P,N) f32, "conv": (B,K-1,conv_dim)}."""
+    z, xs, B_, C_, dt, A, conv_state = _ssd_inputs(
+        p, x, cfg, conv_state=cache["conv"])
+    Bb = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.d_inner // cfg.ssm_heads
+    N = cfg.ssm_state
+    xs1 = xs[:, 0].astype(jnp.float32)                     # (B,H,P)
+    dt1 = dt[:, 0]                                         # (B,H)
+    B1 = B_[:, 0].astype(jnp.float32)                      # (B,N)
+    C1 = C_[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt1 * A)                                  # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt1, B1, xs1)
+    state = cache["state"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, C1)
+    y = y + xs1 * p["D_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, 1, cfg.d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype), \
+        {"state": state, "conv": conv_state}
+
+
+
+# ---------------------------------------------------------------------------
+# block dispatcher
+# ---------------------------------------------------------------------------
+def block_param_defs(cfg: ModelConfig, mixer: str, ffn: str):
+    if mixer == "rglru":
+        defs = rglru_param_defs(cfg)
+    elif mixer == "ssd":
+        defs = ssd_param_defs(cfg)
+    else:
+        defs = attn_param_defs(cfg, cross=(mixer == "dec"))
+    defs = dict(defs)
+    defs.update(ffn_param_defs(cfg, ffn))
+    return defs
+
+
+def block_apply(p, x, mixer, ffn, cfg: ModelConfig, positions,
+                enc_out=None, impl: str = "jnp", want_cache: bool = False,
+                max_seq: int = 0):
+    """Returns (x, cache) — cache is None unless want_cache (prefill)."""
+    if mixer == "rglru":
+        x, cache = rglru_apply(p, x, cfg, want_cache=want_cache)
+    elif mixer == "ssd":
+        x, cache = ssd_apply(p, x, cfg, impl=impl, want_cache=want_cache)
+    else:
+        x, cache = attn_apply(p, x, mixer, cfg, positions, enc_out=enc_out,
+                              want_cache=want_cache, max_seq=max_seq)
+    return ffn_apply(p, x, ffn, cfg), cache
+
+
+def block_decode(p, x, cache, mixer, ffn, cfg: ModelConfig, index,
+                 enc_out=None):
+    if mixer == "rglru":
+        x, cache = rglru_decode(p, x, cache, cfg, index)
+    elif mixer == "ssd":
+        x, cache = ssd_decode(p, x, cache, cfg, index)
+    else:
+        x, cache = attn_decode(p, x, cache, mixer, cfg, index,
+                               enc_out=enc_out)
+    return ffn_apply(p, x, ffn, cfg), cache

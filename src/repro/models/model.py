@@ -1,0 +1,381 @@
+"""Unified scan-over-layers LM covering all assigned architectures.
+
+Layout: ``num_layers = n_cycles * len(pattern) + tail``.  The cycles are a
+single `lax.scan` over stacked per-cycle params (HLO size O(|pattern|), so an
+80-layer model compiles as fast as a 2-layer one); the tail (pattern prefix
+remainder, e.g. gemma3's 26 = 4*6 + 2) is unrolled.
+
+Entry points:
+  init_params / param_axes      — param pytree + logical-axis pytree
+  forward / loss_fn             — training path (next-token CE)
+  prefill                       — forward + KV/state cache construction
+  decode_step                   — one-token serve step on the cache
+  init_cache / cache_axes       — cache pytree (zeros / ShapeDtypeStructs)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard_activation
+from .config import ModelConfig
+from . import layers
+from .layers import (attn_cache_len, block_apply, block_decode,
+                     block_param_defs, rms_norm)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _init_leaf(key, shape, dtype):
+    fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def _block_params(key, defs, n_stack, dtype):
+    out = {}
+    for i, (name, (shape, _axes)) in enumerate(sorted(defs.items())):
+        k = jax.random.fold_in(key, i)
+        full = (n_stack,) + shape if n_stack else shape
+        out[name] = _init_leaf(k, full, dtype)
+    return out
+
+
+def _block_axes(defs, stacked: bool):
+    return {name: (("layers",) + axes if stacked else axes)
+            for name, (shape, axes) in sorted(defs.items())}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    pd = jnp.dtype(cfg.param_dtype)
+    n_cycles, tail = cfg.cycles_and_tail
+    keys = jax.random.split(key, 8)
+    V, D = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": _init_leaf(keys[0], (V, D), pd),
+        "unembed": _init_leaf(keys[1], (D, V), pd),
+        "final_norm": jnp.zeros((D,), pd),
+    }
+    blocks = []
+    for k, (mixer, ffn) in enumerate(cfg.pattern):
+        defs = block_param_defs(cfg, mixer, ffn)
+        blocks.append(_block_params(jax.random.fold_in(keys[2], k), defs,
+                                    n_cycles, pd))
+    params["blocks"] = tuple(blocks)
+    tails = []
+    for t in range(tail):
+        mixer, ffn = cfg.pattern[t]
+        defs = block_param_defs(cfg, mixer, ffn)
+        tails.append(_block_params(jax.random.fold_in(keys[3], t), defs,
+                                   0, pd))
+    params["tail"] = tuple(tails)
+    if cfg.is_encdec:
+        defs = block_param_defs(cfg, "enc", "gelu")
+        params["encoder"] = _block_params(keys[4], defs, cfg.encoder_layers,
+                                          pd)
+        params["enc_pos"] = _init_leaf(keys[5], (cfg.encoder_seq, D), pd)
+        params["enc_norm"] = jnp.zeros((D,), pd)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> PyTree:
+    n_cycles, tail = cfg.cycles_and_tail
+    axes: Dict[str, Any] = {
+        # input table gets its own axes: a gather from a vocab@model-sharded
+        # table makes GSPMD replicate the full table per chip (dry-run
+        # measured ~12 GiB depth-independent temp); vocab@data + embed@model
+        # caps it at a V/16 slice.
+        "embed": ("in_vocab", "in_embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+    }
+    axes["blocks"] = tuple(
+        _block_axes(block_param_defs(cfg, m, f), stacked=n_cycles > 0)
+        for (m, f) in cfg.pattern)
+    axes["tail"] = tuple(
+        _block_axes(block_param_defs(cfg, *cfg.pattern[t]), stacked=False)
+        for t in range(tail))
+    if cfg.is_encdec:
+        axes["encoder"] = _block_axes(block_param_defs(cfg, "enc", "gelu"),
+                                      stacked=True)
+        axes["enc_pos"] = (None, "embed")
+        axes["enc_norm"] = ("embed",)
+    return axes
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct pytree without allocating anything."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.num_patches and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(dt)
+        x = jnp.concatenate([pe, x[:, cfg.num_patches:]], axis=1)
+    return x
+
+
+def _encode(params, batch, cfg: ModelConfig, impl):
+    """Whisper-style encoder over precomputed frame embeddings (stub)."""
+    dt = jnp.dtype(cfg.dtype)
+    feats = batch["audio_feats"].astype(dt)
+    x = feats + params["enc_pos"].astype(dt)[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        x, _ = block_apply(lp, x, "enc", "gelu", cfg, positions, impl=impl)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+def forward(params, batch, cfg: ModelConfig, *, impl: str = "jnp"
+            ) -> jnp.ndarray:
+    """Returns final hidden states (B, S, D) — logits via `logits_from_h`
+    (kept separate so the loss can tile over the vocab)."""
+    x = _embed_inputs(params, batch, cfg)
+    # batch/seq only here: an act_embed(model) constraint directly on the
+    # gather output trips an SPMD partitioner bug inside the microbatch loop
+    x = shard_activation(x, "batch", "seq", None)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_out = _encode(params, batch, cfg, impl) if cfg.is_encdec else None
+    n_cycles, tail = cfg.cycles_and_tail
+
+    def cycle(x, cycle_params):
+        for k, (mixer, ffn) in enumerate(cfg.pattern):
+            x, _ = block_apply(cycle_params[k], x, mixer, ffn, cfg,
+                               positions, enc_out=enc_out, impl=impl)
+            x = shard_activation(x, "batch", "seq", "act_embed")
+            x = layers.grad_dtype_barrier(x)
+        return x, None
+
+    if n_cycles > 0:
+        x, _ = jax.lax.scan(_maybe_remat(cycle, cfg), x, params["blocks"])
+    for t in range(tail):
+        mixer, ffn = cfg.pattern[t]
+        x, _ = block_apply(params["tail"][t], x, mixer, ffn, cfg, positions,
+                           enc_out=enc_out, impl=impl)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_from_h(params, h, cfg: ModelConfig) -> jnp.ndarray:
+    logits = (h @ params["unembed"].astype(h.dtype)).astype(jnp.float32)
+    # mask vocab padding
+    pad = cfg.padded_vocab - cfg.vocab_size
+    if pad:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, layers.NEG_INF)
+    return logits
+
+
+def _xent(logits, labels, valid):
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    losses = (lse - gold) * valid
+    return losses.sum(), valid.sum()
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, impl: str = "jnp"
+            ) -> jnp.ndarray:
+    h = forward(params, batch, cfg, impl=impl)
+    tokens = batch["tokens"]
+    labels = tokens[:, 1:]
+    valid = jnp.ones(labels.shape, jnp.float32)
+    if cfg.logit_chunk:
+        # chunk over sequence so (B,S,V) logits never materialise at once
+        B, Sm1 = labels.shape
+        C = cfg.logit_chunk
+        n = Sm1 // C
+        hc = h[:, :n * C].reshape(B, n, C, -1).transpose(1, 0, 2, 3)
+        lc = labels[:, :n * C].reshape(B, n, C).transpose(1, 0, 2)
+
+        def step(carry, xs):
+            hh, ll = xs
+            s, c = _xent(logits_from_h(params, hh, cfg), ll,
+                         jnp.ones(ll.shape, jnp.float32))
+            return (carry[0] + s, carry[1] + c), None
+
+        # checkpoint: per-chunk logits are recomputed in bwd instead of all
+        # chunks' (B, C, V) f32 blocks staying live.
+        (tot, cnt), _ = jax.lax.scan(jax.checkpoint(step), (0.0, 0.0),
+                                     (hc, lc))
+        if Sm1 % C:
+            s, c = _xent(logits_from_h(params, h[:, n * C:-1], cfg),
+                         labels[:, n * C:], valid[:, n * C:])
+            tot, cnt = tot + s, cnt + c
+        return tot / jnp.maximum(cnt, 1.0)
+    logits = logits_from_h(params, h[:, :-1], cfg)
+    tot, cnt = _xent(logits, labels, valid)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+def _block_cache_shape(cfg: ModelConfig, mixer: str, B: int, max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    KH, Hd = cfg.num_kv_heads, cfg.head_dim
+    if mixer == "rglru":
+        return {"state": ((B, cfg.lru_width), jnp.float32,
+                          ("cache_batch", "lru")),
+                "conv": ((B, cfg.conv_width - 1, cfg.lru_width), dt,
+                         ("cache_batch", None, "lru"))}
+    if mixer == "ssd":
+        H = cfg.ssm_heads
+        P = cfg.d_inner // H
+        return {"state": ((B, H, P, cfg.ssm_state), jnp.float32,
+                          ("cache_batch", "ssm_heads", None, None)),
+                "conv": ((B, cfg.conv_width - 1, cfg.d_inner
+                          + 2 * cfg.ssm_state), dt,
+                         ("cache_batch", None, "ssm_conv"))}
+    W = attn_cache_len(mixer, cfg, max_seq)
+    cdt = jnp.dtype(cfg.kv_cache_dtype)
+    return {"k": ((B, W, KH, Hd), cdt,
+                  ("cache_batch", "cache_seq", "cache_kv", None)),
+            "v": ((B, W, KH, Hd), cdt,
+                  ("cache_batch", "cache_seq", "cache_kv", None))}
+
+
+def _cache_tree(cfg: ModelConfig, B: int, max_seq: int, make_leaf):
+    n_cycles, tail = cfg.cycles_and_tail
+    blocks = []
+    for k, (mixer, _f) in enumerate(cfg.pattern):
+        shapes = _block_cache_shape(cfg, mixer, B, max_seq)
+        blocks.append({name: make_leaf((n_cycles,) + shp, dt, ("layers",) + ax)
+                       for name, (shp, dt, ax) in shapes.items()})
+    tails = []
+    for t in range(tail):
+        mixer, _f = cfg.pattern[t]
+        shapes = _block_cache_shape(cfg, mixer, B, max_seq)
+        tails.append({name: make_leaf(shp, dt, ax)
+                      for name, (shp, dt, ax) in shapes.items()})
+    cache = {"blocks": tuple(blocks), "tail": tuple(tails),
+             "index": make_leaf((), jnp.int32, None)}
+    if cfg.is_encdec:
+        cache["enc_out"] = make_leaf((B, cfg.encoder_seq, cfg.d_model),
+                                     jnp.dtype(cfg.dtype),
+                                     ("cache_batch", None, "act_embed"))
+    return cache
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int) -> PyTree:
+    return _cache_tree(cfg, B, max_seq,
+                       lambda shp, dt, ax: jnp.zeros(shp, dt))
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_seq: int) -> PyTree:
+    return _cache_tree(cfg, B, max_seq,
+                       lambda shp, dt, ax: jax.ShapeDtypeStruct(shp, dt))
+
+
+def cache_axes(cfg: ModelConfig, B: int, max_seq: int) -> PyTree:
+    return _cache_tree(cfg, B, max_seq, lambda shp, dt, ax: ax)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def prefill(params, batch, cfg: ModelConfig, max_seq: int, *,
+            impl: str = "jnp") -> Tuple[PyTree, jnp.ndarray]:
+    """Run the full prompt, build the cache, return (cache, last logits)."""
+    x = _embed_inputs(params, batch, cfg)
+    # batch/seq only here: an act_embed(model) constraint directly on the
+    # gather output trips an SPMD partitioner bug inside the microbatch loop
+    x = shard_activation(x, "batch", "seq", None)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_out = _encode(params, batch, cfg, impl) if cfg.is_encdec else None
+    n_cycles, tail = cfg.cycles_and_tail
+
+    def cycle(x, cycle_params):
+        caches = []
+        for k, (mixer, ffn) in enumerate(cfg.pattern):
+            x, c = block_apply(cycle_params[k], x, mixer, ffn, cfg,
+                               positions, enc_out=enc_out, impl=impl,
+                               want_cache=True, max_seq=max_seq)
+            caches.append(c)
+        return x, tuple(caches)
+
+    blocks_cache = ()
+    if n_cycles > 0:
+        x, blocks_cache = jax.lax.scan(cycle, x, params["blocks"])
+    tail_caches = []
+    for t in range(tail):
+        mixer, ffn = cfg.pattern[t]
+        x, c = block_apply(params["tail"][t], x, mixer, ffn, cfg, positions,
+                           enc_out=enc_out, impl=impl, want_cache=True,
+                           max_seq=max_seq)
+        tail_caches.append(c)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_h(params, h[:, -1:], cfg)
+    cache = {"blocks": blocks_cache, "tail": tuple(tail_caches),
+             "index": jnp.asarray(S, jnp.int32)}
+    if cfg.is_encdec:
+        cache["enc_out"] = enc_out
+    return cache, logits
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, PyTree]:
+    """One new token per sequence. tokens: (B, 1) -> (logits, new cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard_activation(x, "batch", None, "act_embed")
+    index = cache["index"]
+    enc_out = cache.get("enc_out")
+    n_cycles, tail = cfg.cycles_and_tail
+
+    def cycle(x, xs):
+        cycle_params, cycle_cache = xs
+        new = []
+        for k, (mixer, ffn) in enumerate(cfg.pattern):
+            x, c = block_decode(cycle_params[k], x, cycle_cache[k], mixer,
+                                ffn, cfg, index, enc_out=enc_out)
+            new.append(c)
+        return x, tuple(new)
+
+    new_blocks = ()
+    if n_cycles > 0:
+        x, new_blocks = jax.lax.scan(cycle, x,
+                                     (params["blocks"], cache["blocks"]))
+    new_tail = []
+    for t in range(tail):
+        mixer, ffn = cfg.pattern[t]
+        x, c = block_decode(params["tail"][t], x, cache["tail"][t], mixer,
+                            ffn, cfg, index, enc_out=enc_out)
+        new_tail.append(c)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_h(params, h, cfg)
+    new_cache = {"blocks": new_blocks, "tail": tuple(new_tail),
+                 "index": index + 1}
+    if cfg.is_encdec:
+        new_cache["enc_out"] = enc_out
+    return logits, new_cache

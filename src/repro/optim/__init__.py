@@ -1,0 +1,7 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, cosine_schedule,
+                    global_norm)
+from .adafactor import AdafactorState, adafactor_init, adafactor_update
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "AdafactorState", "adafactor_init",
+           "adafactor_update"]

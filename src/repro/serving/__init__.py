@@ -1,0 +1,8 @@
+from .profile import TierProfile, measure_profiles, measure_latency, comm_time
+from .planner import Plan, plan, replan_without_es
+from .executor import ExecutionReport, execute
+from .runtime import ServingRuntime, PeriodStats
+
+__all__ = ["TierProfile", "measure_profiles", "measure_latency", "comm_time",
+           "Plan", "plan", "replan_without_es", "ExecutionReport", "execute",
+           "ServingRuntime", "PeriodStats"]

@@ -1,0 +1,64 @@
+"""Batch planner: the paper's algorithms as serving policies.
+
+Policy selection:
+  * identical jobs      -> AMDP   (optimal, pseudo-poly; paper §VI)
+  * heterogeneous jobs  -> AMR^2  (2T / 2(a_max - a_min) guarantees; §IV-V)
+  * `policy=` override  -> greedy (baseline) | dual (beyond-paper fast
+                           Lagrangian scheduler) | lp (bound only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import (OffloadInstance, Schedule, amdp, amr2, greedy_rra)
+from ..core.dual import dual_schedule
+
+
+@dataclasses.dataclass
+class Plan:
+    schedule: Schedule
+    per_model: Dict[int, np.ndarray]   # model index -> job ids
+    plan_seconds: float
+    policy: str
+
+    @property
+    def predicted_makespan(self) -> float:
+        return self.schedule.makespan
+
+
+def plan(instance: OffloadInstance, *, policy: str = "auto",
+         backend: str = "numpy") -> Plan:
+    t0 = time.perf_counter()
+    if policy == "auto":
+        policy = "amdp" if instance.is_identical() else "amr2"
+    if policy == "amdp" and not instance.is_identical():
+        policy = "amr2"
+    if policy == "amr2":
+        sched = amr2(instance, backend=backend)
+    elif policy == "amdp":
+        sched = amdp(instance)
+    elif policy == "greedy":
+        sched = greedy_rra(instance)
+    elif policy == "dual":
+        sched = dual_schedule(instance)
+    else:
+        raise ValueError(policy)
+    dt = time.perf_counter() - t0
+    per_model = {i: np.nonzero(sched.assignment == i)[0]
+                 for i in range(instance.m + 1)}
+    return Plan(schedule=sched, per_model=per_model, plan_seconds=dt,
+                policy=policy)
+
+
+def replan_without_es(instance: OffloadInstance, **kw) -> Plan:
+    """ES-tier failure: the paper's m-model special case — force every job
+    onto the ED ladder by making offloading infeasible (p_es >> T)."""
+    crippled = OffloadInstance(
+        p_ed=instance.p_ed.copy(),
+        p_es=np.full(instance.n, 1e9),
+        acc=instance.acc.copy(), T=instance.T)
+    return plan(crippled, **kw)

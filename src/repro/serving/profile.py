@@ -1,0 +1,87 @@
+"""Latency/accuracy profiling for the tier ladder.
+
+Mirrors the paper's methodology (§VII-B): run each (model, size-class)
+30 times, take the *median* (robust to cold starts), and treat comm time as
+total minus compute.  Two sources:
+
+  * `measure_profiles` — wall-clock medians of jitted apply fns (the CPU
+    example path; on a real fleet this is the same code against TPU tiers).
+  * `roofline_profiles` — analytic per-request step time from the dry-run
+    roofline terms (the TPU-target path: max of compute/memory/collective
+    terms at the serving batch), used when hardware isn't attached.
+
+Comm time for offloading to the ES tier: request payload bytes / link GB/s
+(the paper's c_j; ICI/DCN instead of LAN).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from ..core.types import OffloadInstance
+
+
+@dataclasses.dataclass
+class TierProfile:
+    """p_ij generator: per-model seconds for each job size-class."""
+    name: str
+    # per size-class processing seconds on each ED model: (n_class, m)
+    p_ed: np.ndarray
+    # per size-class total ES seconds (comm + compute): (n_class,)
+    p_es: np.ndarray
+    acc: np.ndarray               # (m+1,)
+    classes: Sequence[int]        # size-class labels (e.g. seq lengths)
+
+    def instance(self, job_classes: np.ndarray, T: float) -> OffloadInstance:
+        ci = np.searchsorted(np.asarray(self.classes), job_classes)
+        return OffloadInstance(p_ed=self.p_ed[ci], p_es=self.p_es[ci],
+                               acc=self.acc.copy(), T=T)
+
+
+def measure_latency(fn: Callable, args, iters: int = 30) -> float:
+    fn(*args)                      # compile / warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:  # noqa: BLE001 — non-jax outputs
+        pass
+
+
+def measure_profiles(apply_fns: Dict[str, Callable], sample_batches,
+                     accs: Dict[str, float], es_name: str,
+                     comm_seconds: Sequence[float], classes: Sequence[int],
+                     iters: int = 30) -> TierProfile:
+    """apply_fns: model name -> fn(batch); the last name `es_name` is the
+    ES-tier model.  comm_seconds: per size-class upload time."""
+    ed_names = [n for n in apply_fns if n != es_name]
+    p_ed = np.zeros((len(classes), len(ed_names)))
+    p_es = np.zeros(len(classes))
+    for c, batch in enumerate(sample_batches):
+        for j, n in enumerate(ed_names):
+            p_ed[c, j] = measure_latency(apply_fns[n], (batch,), iters)
+        p_es[c] = comm_seconds[c] + measure_latency(
+            apply_fns[es_name], (batch,), iters)
+    acc = np.array([accs[n] for n in ed_names] + [accs[es_name]])
+    order = np.argsort(acc[:-1])
+    return TierProfile(name="measured", p_ed=p_ed[:, order],
+                       p_es=p_es, acc=np.concatenate([acc[:-1][order],
+                                                      acc[-1:]]),
+                       classes=classes)
+
+
+def comm_time(payload_bytes: float, link_gbps: float = 50.0) -> float:
+    """The paper's c_j on a TPU fleet: payload over ICI/DCN."""
+    return payload_bytes / (link_gbps * 1e9)

@@ -1,0 +1,81 @@
+"""Period-T serving loop (the paper's deployment model, §III-C).
+
+Every period: drain the request queue, build the OffloadInstance from the
+current TierProfile, plan (AMR^2 / AMDP / dual), execute across the tiers,
+then *audit*: if measured per-model latency drifts from the profile by more
+than `straggler_threshold`, the profile is re-measured (EMA update) so the
+next period's p_ij reflect the degraded tier — the straggler-mitigation
+loop.  An ES outage inside a period triggers the fallback replan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core.types import OffloadInstance
+from .executor import ExecutionReport, execute
+from .planner import Plan, plan
+from .profile import TierProfile
+
+
+@dataclasses.dataclass
+class PeriodStats:
+    n_jobs: int
+    policy: str
+    predicted_makespan: float
+    wall_makespan: float
+    total_accuracy: float
+    plan_seconds: float
+    violation: float
+    replanned: bool
+    profile_updated: bool
+
+
+class ServingRuntime:
+    def __init__(self, profile: TierProfile, apply_ed: List[Callable],
+                 apply_es: Callable, *, T: float, policy: str = "auto",
+                 straggler_threshold: float = 1.5, ema: float = 0.5):
+        self.profile = profile
+        self.apply_ed = apply_ed
+        self.apply_es = apply_es
+        self.T = T
+        self.policy = policy
+        self.straggler_threshold = straggler_threshold
+        self.ema = ema
+        self.history: List[PeriodStats] = []
+
+    def run_period(self, jobs: List[object], job_classes: np.ndarray, *,
+                   es_fail: bool = False) -> PeriodStats:
+        inst = self.profile.instance(job_classes, self.T)
+        p = plan(inst, policy=self.policy)
+        report = execute(p, self.apply_ed, self.apply_es, jobs,
+                         es_fail=es_fail)
+        updated = self._audit(p, report, job_classes)
+        stats = PeriodStats(
+            n_jobs=len(jobs), policy=p.policy,
+            predicted_makespan=p.predicted_makespan,
+            wall_makespan=report.wall_makespan,
+            total_accuracy=p.schedule.total_accuracy,
+            plan_seconds=p.plan_seconds,
+            violation=max(0.0, report.wall_makespan / self.T - 1.0),
+            replanned=report.replanned, profile_updated=updated)
+        self.history.append(stats)
+        return stats
+
+    def _audit(self, p: Plan, report: ExecutionReport,
+               job_classes: np.ndarray) -> bool:
+        """Straggler detection: compare measured tier wall time against the
+        profile's prediction; EMA-update the profile on drift."""
+        pred_ed = p.schedule.ed_makespan
+        if pred_ed <= 0 or report.replanned:
+            return False
+        ratio = report.ed_wall / max(pred_ed, 1e-9)
+        if ratio > self.straggler_threshold:
+            self.profile = dataclasses.replace(
+                self.profile,
+                p_ed=self.profile.p_ed * (
+                    (1 - self.ema) + self.ema * ratio))
+            return True
+        return False

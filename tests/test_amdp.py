@@ -1,0 +1,135 @@
+"""AMDP / CCKP — optimality (Theorem 3) and structure (Lemma 3) tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (amdp, amdp_hetero_comm, brute_force, solve_cckp,
+                        OffloadInstance)
+
+RES = 1e-2  # times in these tests are exact multiples of the resolution
+
+
+def _identical_int_instance(seed, n=None, m=None, T=None):
+    """Identical jobs with times that are exact multiples of RES so DP
+    integerization is lossless and brute force is an exact oracle."""
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(2, 9))
+    m = m or int(rng.integers(1, 4))
+    p_ed = rng.integers(1, 30, size=m).astype(np.float64) * RES
+    p_ed.sort()
+    p_es = float(rng.integers(5, 40)) * RES
+    acc = np.sort(rng.uniform(0.2, 0.99, size=m + 1))
+    T = T if T is not None else float(rng.integers(10, 120)) * RES
+    return OffloadInstance(p_ed=np.tile(p_ed, (n, 1)),
+                           p_es=np.full(n, p_es), acc=acc, T=T)
+
+
+# ------------------------------------------------------------- Theorem 3 --
+@pytest.mark.parametrize("seed", range(15))
+def test_amdp_matches_brute_force(seed):
+    inst = _identical_int_instance(seed)
+    opt = brute_force(inst)
+    sched = amdp(inst, resolution=RES)
+    if opt is None:
+        assert sched.status == "infeasible"
+        return
+    assert sched.status == "ok"
+    assert sched.total_accuracy == pytest.approx(opt.total_accuracy, abs=1e-9)
+    assert sched.ed_makespan <= inst.T + 1e-9
+    assert sched.es_makespan <= inst.T + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_amdp_optimal_property(seed):
+    inst = _identical_int_instance(seed)
+    opt = brute_force(inst)
+    sched = amdp(inst, resolution=RES)
+    if opt is None:
+        assert sched.status == "infeasible"
+    else:
+        assert sched.total_accuracy == pytest.approx(opt.total_accuracy,
+                                                     abs=1e-9)
+
+
+# --------------------------------------------------------------- Lemma 3 --
+@pytest.mark.parametrize("seed", range(8))
+def test_lemma3_es_count(seed):
+    inst = _identical_int_instance(seed)
+    sched = amdp(inst, resolution=RES)
+    if sched.status != "ok":
+        return
+    n_c = min(inst.n, int(math.floor(inst.T / inst.p_es[0] + 1e-12)))
+    assert int((sched.assignment == inst.m).sum()) == n_c
+
+
+# ------------------------------------------------------------------ CCKP --
+def _cckp_brute(p, a, T_int, n_l):
+    m = len(p)
+    best = -math.inf
+    bestc = None
+
+    def rec(i, rem, t, v, counts):
+        nonlocal best, bestc
+        if i == m:
+            if rem == 0 and v > best:
+                best, bestc = v, counts.copy()
+            return
+        for q in range(rem + 1):
+            tt = t + q * p[i]
+            if tt > T_int:
+                break
+            counts.append(q)
+            rec(i + 1, rem - q, tt, v + q * a[i], counts)
+            counts.pop()
+
+    rec(0, n_l, 0, 0.0, [])
+    return bestc, best
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 100_000), m=st.integers(1, 4),
+       n_l=st.integers(1, 8), T_int=st.integers(1, 60))
+def test_cckp_dp_vs_brute(seed, m, n_l, T_int):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(1, 12, size=m).astype(np.int64)
+    a = rng.uniform(0.1, 1.0, size=m)
+    counts, val = solve_cckp(p, a, T_int, n_l)
+    bc, bv = _cckp_brute(list(p), list(a), T_int, n_l)
+    if bc is None:
+        assert counts is None
+    else:
+        assert counts is not None
+        assert val == pytest.approx(bv, abs=1e-5)
+        assert counts.sum() == n_l
+        assert (counts * p).sum() <= T_int
+
+
+# -------------------------------------------------- heterogeneous comm ---
+def test_amdp_hetero_comm_orders_by_comm():
+    p_ed = np.array([0.02, 0.05])
+    acc = np.array([0.4, 0.6, 0.9])
+    comm = np.array([0.5, 0.1, 0.3, 0.9, 0.05])
+    sched = amdp_hetero_comm(p_ed, p_es_proc=0.2, comm=comm, acc=acc, T=1.0)
+    offloaded = set(np.nonzero(sched.assignment == 2)[0])
+    # ES budget 1.0 fits comm 0.05+0.2, 0.1+0.2, 0.3+0.2 = 1.05 > 1 -> only 2
+    assert offloaded == {4, 1}
+    assert sched.es_makespan <= 1.0 + 1e-9
+    assert sched.ed_makespan <= 1.0 + 1e-9
+
+
+def test_amdp_all_offload_when_es_fast():
+    inst = OffloadInstance(p_ed=np.tile([0.1], (4, 1)), p_es=np.full(4, 0.01),
+                           acc=np.array([0.5, 0.9]), T=1.0)
+    sched = amdp(inst)
+    assert (sched.assignment == 1).all()
+
+
+def test_amdp_rejects_non_identical():
+    inst = OffloadInstance(p_ed=np.array([[0.1], [0.2]]),
+                           p_es=np.array([0.1, 0.1]),
+                           acc=np.array([0.5, 0.9]), T=1.0)
+    with pytest.raises(ValueError):
+        amdp(inst)

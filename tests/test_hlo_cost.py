@@ -1,0 +1,96 @@
+"""The HLO cost parser is load-bearing for the roofline deliverable —
+unit-test it against known-flop programs and crafted HLO snippets."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    txt = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((8, 128, 128), jnp.bfloat16))
+    r = hlo_cost.analyze(txt)
+    expect = 8 * 2 * 128 ** 3
+    assert expect * 0.95 <= r["flops"] <= expect * 1.15
+    assert r["unparsed_loops"] == 0
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, wi):
+                return c2 @ wi, None
+            c, _ = jax.lax.scan(inner, c, w)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    txt = _compile(g, jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((8, 128, 128), jnp.bfloat16))
+    r = hlo_cost.analyze(txt)
+    expect = 3 * 8 * 2 * 128 ** 3
+    assert expect * 0.95 <= r["flops"] <= expect * 1.15
+
+
+def test_gather_counts_slice_not_operand():
+    # embedding-style gather from a big table: traffic ~ slice, not table
+    def f(table, idx):
+        return jnp.take(table, idx, axis=0)
+
+    txt = _compile(f, jax.ShapeDtypeStruct((50000, 256), jnp.float32),
+                   jax.ShapeDtypeStruct((8,), jnp.int32))
+    r = hlo_cost.analyze(txt)
+    table_bytes = 50000 * 256 * 4
+    assert r["bytes"] < table_bytes / 10    # far below a full-table read
+
+
+def test_shape_bytes_tuple_and_comments():
+    line = "(f32[2,3]{1,0}, bf16[4]{0}, pred[], s32[5])"
+    elems, b = hlo_cost._shape_elems_bytes(line)
+    assert b == 2 * 3 * 4 + 4 * 2 + 1 + 5 * 4
+
+
+def test_collectives_trip_multiplied():
+    # all-reduce inside a while body with known_trip_count=4
+    snippet = """
+HloModule m
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64]{0} get-tuple-element(%p), index=1
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[64]) tuple(%z, %a)
+  %w = (s32[], f32[64]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+    r = hlo_cost.analyze(snippet)
+    assert r["coll_bytes"] == 4 * 64 * 4      # 4 trips x 64 f32
+    assert r["coll_counts"].get("all-reduce") == 4

@@ -1,0 +1,92 @@
+"""JAX/NumPy simplex vs scipy.linprog (oracle) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from repro.core import solve_lp, OPTIMAL, INFEASIBLE
+
+
+def _random_lp(seed, n=10, mc=5, feasible=True):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A_ub = rng.uniform(0, 1, size=(mc, n))
+    b_ub = rng.uniform(1, 3, size=mc)
+    A_eq = np.ones((1, n))
+    b_eq = np.array([1.0 if feasible else 100.0])  # sum x = 100 with x<=~3 cap
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("seed", range(8))
+def test_matches_scipy_on_random_feasible(backend, seed):
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(seed)
+    ours = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    ref = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=(0, None))
+    assert ours.status == OPTIMAL and ref.status == 0
+    assert ours.fun == pytest.approx(ref.fun, abs=1e-4)
+    # solution feasibility
+    x = ours.x
+    assert np.all(x >= -1e-6)
+    assert np.all(A_ub @ x <= b_ub + 1e-5)
+    assert np.allclose(A_eq @ x, b_eq, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_detects_infeasible(backend):
+    # sum x = 100 while every x bounded by b_ub/Aub rows ~ 3
+    n = 6
+    c = np.ones(n)
+    A_ub = np.eye(n)
+    b_ub = np.full(n, 3.0)
+    A_eq = np.ones((1, n))
+    b_eq = np.array([100.0])
+    ours = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    assert ours.status == INFEASIBLE
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_equality_only(backend):
+    # min x0 + 2 x1 s.t. x0 + x1 = 1
+    res = solve_lp(np.array([1.0, 2.0]), A_eq=np.array([[1.0, 1.0]]),
+                   b_eq=np.array([1.0]), backend=backend)
+    assert res.status == OPTIMAL
+    assert res.fun == pytest.approx(1.0, abs=1e-6)
+    assert res.x[0] == pytest.approx(1.0, abs=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_inequality_only(backend):
+    # max x (min -x) s.t. x <= 5
+    res = solve_lp(np.array([-1.0]), A_ub=np.array([[1.0]]),
+                   b_ub=np.array([5.0]), backend=backend)
+    assert res.status == OPTIMAL
+    assert res.fun == pytest.approx(-5.0, abs=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 14),
+       mc=st.integers(1, 6))
+def test_property_matches_scipy(seed, n, mc):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A_ub = rng.uniform(0, 1, size=(mc, n))
+    b_ub = rng.uniform(0.5, 3, size=mc)
+    A_eq = np.ones((1, n))
+    b_eq = np.array([1.0])
+    ours = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend="numpy")
+    ref = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=(0, None))
+    if ref.status == 0:
+        assert ours.status == OPTIMAL
+        assert ours.fun == pytest.approx(ref.fun, abs=1e-6)
+    elif ref.status == 2:
+        assert ours.status == INFEASIBLE
+
+
+def test_basic_solution_has_basis():
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(0)
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend="numpy")
+    # basis has one entry per row: mc + n_eq rows
+    assert len(res.basis) == A_ub.shape[0] + A_eq.shape[0]

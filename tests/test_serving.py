@@ -1,0 +1,107 @@
+"""Serving runtime: planner policies, executor accounting, ES-failure
+replanning, straggler profile updates."""
+import numpy as np
+import pytest
+
+from repro.core import OffloadInstance, paper_instance
+from repro.serving import (ServingRuntime, TierProfile, execute, plan,
+                           replan_without_es)
+
+
+def _profile():
+    return TierProfile(
+        name="t", p_ed=np.array([[0.01, 0.04]]), p_es=np.array([0.35]),
+        acc=np.array([0.4, 0.56, 0.77]), classes=[64])
+
+
+def _applies(m=2):
+    calls = {"ed": [], "es": []}
+
+    def make_ed(i):
+        def f(jobs):
+            calls["ed"].append((i, len(jobs)))
+            return [0.5] * len(jobs)
+        return f
+
+    def es(jobs):
+        calls["es"].append(len(jobs))
+        return [0.9] * len(jobs)
+
+    return [make_ed(i) for i in range(m)], es, calls
+
+
+def test_plan_auto_picks_amdp_for_identical():
+    prof = _profile()
+    inst = prof.instance(np.full(10, 64), T=1.0)
+    p = plan(inst)
+    assert p.policy == "amdp"
+    assert p.schedule.makespan <= 1.0 + 1e-9
+
+
+def test_plan_policies_agree_on_feasibility():
+    inst = paper_instance(16, T=2.0, seed=0)
+    for policy in ("amr2", "greedy", "dual"):
+        p = plan(inst, policy=policy)
+        assert len(p.schedule.assignment) == 16
+        total = sum(len(v) for v in p.per_model.values())
+        assert total == 16
+
+
+def test_executor_runs_all_jobs():
+    prof = _profile()
+    inst = prof.instance(np.full(12, 64), T=0.5)
+    p = plan(inst)
+    apply_ed, apply_es, calls = _applies()
+    jobs = list(range(12))
+    rep = execute(p, apply_ed, apply_es, jobs)
+    assert len(rep.results) == 12
+    assert rep.wall_makespan >= 0
+
+
+def test_es_failure_replans_onto_ed():
+    prof = _profile()
+    inst = prof.instance(np.full(12, 64), T=1.0)
+    p = plan(inst)
+    assert len(p.per_model[2]) > 0          # some jobs offloaded
+    apply_ed, apply_es, calls = _applies()
+    rep = execute(p, apply_ed, apply_es, list(range(12)), es_fail=True)
+    assert rep.replanned
+    assert len(calls["es"]) == 0            # ES never invoked
+    assert len(rep.results) == 12           # nothing dropped
+
+
+def test_replan_without_es_never_offloads():
+    inst = paper_instance(10, T=4.0, seed=1)
+    p = replan_without_es(inst)
+    assert (p.schedule.assignment < inst.m).all()
+
+
+def test_straggler_updates_profile():
+    import time
+    prof = _profile()
+    apply_ed, apply_es, _ = _applies()
+
+    def slow_ed(jobs):
+        time.sleep(0.3)
+        return [0.5] * len(jobs)
+
+    rt = ServingRuntime(prof, [slow_ed, slow_ed], apply_es, T=0.6,
+                        straggler_threshold=1.5)
+    jobs = list(range(10))
+    stats = rt.run_period(jobs, np.full(10, 64))
+    if stats.predicted_makespan > 0 and \
+            (rt.profile.p_ed > prof.p_ed).any():
+        assert stats.profile_updated
+    # a second period plans with the updated (slower) profile
+    stats2 = rt.run_period(jobs, np.full(10, 64))
+    assert stats2.n_jobs == 10
+
+
+def test_dual_schedule_feasible_and_close_to_amr2():
+    from repro.core import amr2, dual_schedule
+    for seed in range(5):
+        inst = paper_instance(48, T=3.0, seed=seed)
+        d = dual_schedule(inst)
+        a = amr2(inst)
+        assert d.violation == 0.0            # dual is strictly T-feasible
+        assert d.total_accuracy >= 0.85 * a.total_accuracy
