@@ -1,0 +1,118 @@
+"""Fleet-scale planning benchmark — the repo's first end-to-end scaling story.
+
+Two sections:
+
+  * ``fleet/parity``   — plans the SAME >=64-device fleet twice: once with
+    the vmapped batched AMR^2 (one jit call) and once with the per-device
+    NumPy simplex oracle, asserting identical accuracy totals (<=1e-6) and
+    the paper's 2T makespan guarantee per device, then reports the
+    batched-vs-sequential planning throughput.
+  * ``fleet/scale/B``  — runs the full serving engine (Poisson queue, ES
+    pool, stragglers, outages) for >=20 periods at increasing fleet sizes
+    and reports devices-planned/sec plus aggregate accuracy / violation
+    numbers.
+
+Standalone:  PYTHONPATH=src python benchmarks/fleet_bench.py
+CSV via the harness:  python benchmarks/run.py fleet
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+PARITY_DEVICES = 64
+PARITY_JOBS = 12
+SCALE_SIZES = (8, 16, 32, 64)
+SCALE_PERIODS = 20
+
+
+def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0):
+    from repro.serving.fleet import make_fleet
+    rng = np.random.default_rng(seed)
+    specs = make_fleet(n_devices, seed=seed, straggler_frac=0.0,
+                       outage_frac=0.0)
+    T = 1.2
+    insts = []
+    for spec in specs:
+        classes = rng.choice(spec.profile.classes, size=n_jobs)
+        insts.append(spec.profile.instance(classes, T))
+    return insts, T
+
+
+def parity():
+    """Batched vmapped planner vs per-device NumPy oracle on one fleet."""
+    from repro.core import InstanceBatch, amr2_batch
+    from repro.serving import plan_batch
+
+    insts, T = _parity_instances()
+    batch = InstanceBatch.stack(insts)
+    amr2_batch(batch)                                   # compile once
+    t0 = time.perf_counter()
+    scheds = amr2_batch(batch)                          # ONE jit call
+    batched_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    oracle = plan_batch(insts, backend="numpy")         # sequential simplex
+    oracle_s = time.perf_counter() - t0
+
+    max_gap = 0.0
+    for sched, op in zip(scheds, oracle):
+        gap = abs(sched.total_accuracy - op.schedule.total_accuracy)
+        max_gap = max(max_gap, gap)
+        assert gap <= 1e-6, \
+            f"batched/oracle accuracy mismatch: {gap:.2e}"
+        assert sched.makespan <= 2 * T + 1e-9, \
+            f"2T guarantee violated: {sched.makespan:.3f} > {2 * T}"
+    n = len(insts)
+    return [
+        ("fleet/parity/batched", batched_s / n * 1e6,
+         f"devices={n};devices_per_s={n / batched_s:.0f};"
+         f"max_acc_gap={max_gap:.1e};single_jit_call=1"),
+        ("fleet/parity/numpy_oracle", oracle_s / n * 1e6,
+         f"devices={n};devices_per_s={n / oracle_s:.0f};"
+         f"speedup={oracle_s / batched_s:.1f}x"),
+    ]
+
+
+def scaling():
+    """End-to-end engine throughput + accuracy/violation vs fleet size."""
+    from repro.serving import FleetEngine, RequestQueue, make_fleet
+
+    out = []
+    for n_devices in SCALE_SIZES:
+        specs = make_fleet(n_devices, seed=7, horizon=SCALE_PERIODS)
+        queue = RequestQueue(n_devices, (128, 512, 1024), rate=10.0,
+                             batch_max=PARITY_JOBS, seed=7)
+        engine = FleetEngine(specs, queue,
+                             n_servers=max(1, n_devices // 16), T=1.2)
+        engine.run_period()                             # compile once
+        engine.history.clear()  # keep the jit warmup out of the averages
+        t0 = time.perf_counter()
+        engine.run(SCALE_PERIODS)
+        wall = time.perf_counter() - t0
+        s = engine.summary()
+        out.append((
+            f"fleet/scale/{n_devices}",
+            s["plan_seconds_per_period"] / n_devices * 1e6,
+            f"periods={SCALE_PERIODS};jobs={s['jobs']};"
+            f"devices_per_s={s['devices_per_second']:.0f};"
+            f"acc_per_job={s['mean_job_accuracy']:.4f};"
+            f"violation_rate={s['violation_rate']:.4f};"
+            f"backpressure_rate={s['backpressure_rate']:.4f};"
+            f"sim_wall_s={wall:.2f}"))
+    return out
+
+
+ALL = [parity, scaling]
+
+
+def main():
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figs, roofline_report
+    from benchmarks import fleet_bench, kernel_bench, paper_figs, \
+        roofline_report
 
-    sections = (paper_figs.ALL + kernel_bench.ALL + roofline_report.ALL)
+    sections = (paper_figs.ALL + kernel_bench.ALL + roofline_report.ALL
+                + fleet_bench.ALL)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for fn in sections:

@@ -1,9 +1,11 @@
 """The paper's contribution: offloading/assignment algorithms for inference
 jobs under a makespan budget (Fresa & Champati, 2021)."""
-from .types import OffloadInstance, Schedule
-from .lp import solve_lp, LPResult, OPTIMAL, INFEASIBLE, UNBOUNDED
-from .amr2 import (amr2, solve_lp_relaxation, fractional_jobs, solve_sub_ilp,
-                   algorithm2_case_tree, build_lp_arrays)
+from .types import OffloadInstance, InstanceBatch, Schedule
+from .lp import (solve_lp, solve_lp_batch, LPResult, BatchLPResult,
+                 OPTIMAL, INFEASIBLE, UNBOUNDED)
+from .amr2 import (amr2, amr2_batch, solve_lp_relaxation, fractional_jobs,
+                   solve_sub_ilp, algorithm2_case_tree, build_lp_arrays,
+                   build_lp_arrays_batch, round_relaxation)
 from .amdp import amdp, amdp_hetero_comm, solve_cckp
 from .greedy import greedy_rra
 from .oracle import brute_force
@@ -11,10 +13,12 @@ from .instances import (paper_instance, random_instance, identical_instance,
                         PAPER_ACC, PAPER_P_ED, PAPER_P_ES_PROC, PAPER_COMM)
 
 __all__ = [
-    "OffloadInstance", "Schedule", "solve_lp", "LPResult",
+    "OffloadInstance", "InstanceBatch", "Schedule",
+    "solve_lp", "solve_lp_batch", "LPResult", "BatchLPResult",
     "OPTIMAL", "INFEASIBLE", "UNBOUNDED",
-    "amr2", "solve_lp_relaxation", "fractional_jobs", "solve_sub_ilp",
-    "algorithm2_case_tree", "build_lp_arrays",
+    "amr2", "amr2_batch", "solve_lp_relaxation", "fractional_jobs",
+    "solve_sub_ilp", "algorithm2_case_tree", "build_lp_arrays",
+    "build_lp_arrays_batch", "round_relaxation",
     "amdp", "amdp_hetero_comm", "solve_cckp", "greedy_rra", "brute_force",
     "paper_instance", "random_instance", "identical_instance",
     "PAPER_ACC", "PAPER_P_ED", "PAPER_P_ES_PROC", "PAPER_COMM",

@@ -21,8 +21,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .lp import INFEASIBLE, OPTIMAL, solve_lp
-from .types import OffloadInstance, Schedule
+from .lp import INFEASIBLE, OPTIMAL, solve_lp, solve_lp_batch
+from .types import InstanceBatch, OffloadInstance, Schedule
 
 _FRAC_TOL = 1e-4
 
@@ -150,13 +150,21 @@ def algorithm2_case_tree(inst: OffloadInstance, j1: int, j2: int
 def amr2(inst: OffloadInstance, *, backend: str = "numpy",
          frac_tol: float = _FRAC_TOL) -> Schedule:
     xbar, a_lp, status = solve_lp_relaxation(inst, backend=backend)
+    return round_relaxation(inst, xbar, a_lp, status, frac_tol=frac_tol)
+
+
+def round_relaxation(inst: OffloadInstance, xbar: np.ndarray, a_lp: float,
+                     status: int, *, frac_tol: float = _FRAC_TOL,
+                     solver: str = "amr2") -> Schedule:
+    """Algorithm 1 lines 2-11: turn a basic LP-relaxation solution into an
+    integral schedule.  Shared by the scalar and vmapped-batch AMR^2 paths."""
     if status == INFEASIBLE:
         # P infeasible (its relaxation already is): best-effort everything on
         # the fastest ED model so the caller still gets a schedule object.
         assignment = np.argmin(inst.p_ed, axis=1)
         return Schedule(assignment=assignment, instance=inst,
                         lp_accuracy=None, n_fractional=0,
-                        status="infeasible", solver="amr2")
+                        status="infeasible", solver=solver)
     if status != OPTIMAL:
         raise RuntimeError(f"LP relaxation did not converge (status={status})")
 
@@ -190,7 +198,46 @@ def amr2(inst: OffloadInstance, *, backend: str = "numpy",
 
     return Schedule(assignment=assignment, instance=inst, lp_accuracy=a_lp,
                     n_fractional=int(len(frac)), status=sched_status,
-                    solver="amr2")
+                    solver=solver)
+
+
+# --------------------------------------------------------------------------
+# Batched AMR^2 — one vmapped LP solve for a whole fleet
+# --------------------------------------------------------------------------
+def build_lp_arrays_batch(batch: InstanceBatch):
+    """Batched `build_lp_arrays`: (B, ...) arrays sharing the (n, m) shape."""
+    B, n, m = batch.p_ed.shape
+    mp1 = m + 1
+    nv = n * mp1
+    c = -np.tile(batch.acc, (1, n))                      # (B, nv)
+
+    ed_rows = np.zeros((B, n, mp1))
+    ed_rows[:, :, :m] = batch.p_ed                       # constraint (1)
+    es_rows = np.zeros((B, n, mp1))
+    es_rows[:, :, m] = batch.p_es                        # constraint (2)
+    A_ub = np.stack([ed_rows.reshape(B, nv), es_rows.reshape(B, nv)], axis=1)
+    b_ub = np.stack([batch.T, batch.T], axis=1)
+
+    A_eq = np.broadcast_to(np.kron(np.eye(n), np.ones(mp1)), (B, n, nv))
+    b_eq = np.ones((B, n))                               # constraint (3)
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+def amr2_batch(batch: InstanceBatch, *,
+               frac_tol: float = _FRAC_TOL) -> "list[Schedule]":
+    """AMR^2 over a fleet of B same-shape instances.
+
+    The expensive step — the basic LP-relaxation solve — runs as ONE jitted
+    `vmap` over the batch (float64, so it matches the per-instance NumPy
+    oracle to rounding-identical assignments); the O(n) rounding of at most
+    two fractional jobs per instance stays on the host."""
+    c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(batch)
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    B, n = batch.p_es.shape
+    xbar = res.x.reshape(B, n, batch.m + 1)
+    return [round_relaxation(batch[b], xbar[b], -float(res.fun[b]),
+                             int(res.status[b]), frac_tol=frac_tol)
+            for b in range(B)]
 
 
 def _best_fit_any(inst: OffloadInstance, j: int) -> Optional[int]:

@@ -46,6 +46,24 @@ class LPResult:
         return self.status == OPTIMAL
 
 
+@dataclasses.dataclass
+class BatchLPResult:
+    """`solve_lp_batch` output: leading batch axis on every field."""
+    x: np.ndarray        # (B, nv)
+    fun: np.ndarray      # (B,)
+    status: np.ndarray   # (B,) int
+    niter: np.ndarray    # (B,) int
+    basis: np.ndarray    # (B, R) int
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
+
+    def __getitem__(self, b: int) -> LPResult:
+        return LPResult(x=self.x[b], fun=float(self.fun[b]),
+                        status=int(self.status[b]), niter=int(self.niter[b]),
+                        basis=self.basis[b])
+
+
 # --------------------------------------------------------------------------
 # Canonicalisation shared by both backends
 # --------------------------------------------------------------------------
@@ -80,8 +98,7 @@ def _canonicalize(c, A_ub, b_ub, A_eq, b_eq):
 # --------------------------------------------------------------------------
 # JAX backend
 # --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("maxiter", "phase2"))
-def _simplex_phase(tableau, basis, art_start, *, maxiter: int, phase2: bool,
+def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
                    tol: float = 1e-7):
     """Run pivots until optimal / maxiter / unbounded.
 
@@ -130,7 +147,7 @@ def _simplex_phase(tableau, basis, art_start, *, maxiter: int, phase2: bool,
         piv_row = tab[r] / piv
         tab2 = tab - jnp.outer(tab[:, j], piv_row)
         tab2 = tab2.at[r].set(piv_row)
-        basis2 = basis.at[r].set(j)
+        basis2 = basis.at[r].set(j.astype(basis.dtype))
 
         tab2 = jnp.where(unbounded, tab, tab2)
         basis2 = jnp.where(unbounded, basis, basis2)
@@ -147,12 +164,15 @@ def _simplex_phase(tableau, basis, art_start, *, maxiter: int, phase2: bool,
     return tab, basis, it, status
 
 
-def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol):
-    R, C0 = A.shape           # C0 = nv + n_slack
+def _solve_core(A_j, b_j, c_j, nv, maxiter, tol):
+    """Pure-jnp two-phase simplex on one canonicalised instance.
+
+    Shapes are static given (R, C0), so this traces once per problem shape
+    and is `jax.vmap`-able over a leading batch axis (see `solve_lp_batch`).
+    """
+    R, C0 = A_j.shape         # C0 = nv + n_slack
     C = C0 + R                # + artificials
-    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    A_j = jnp.asarray(A, dtype)
-    b_j = jnp.asarray(b, dtype)
+    dtype = A_j.dtype
     tab = jnp.zeros((R + 1, C + 1), dtype)
     tab = tab.at[:R, :C0].set(A_j)
     tab = tab.at[:R, C0:C].set(jnp.eye(R, dtype=dtype))
@@ -163,27 +183,43 @@ def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol):
     basis = jnp.arange(C0, C, dtype=jnp.int32)
 
     tab, basis, it1, status1 = _simplex_phase(
-        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, phase2=False,
-        tol=tol)
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol)
     phase1_obj = tab[-1, -1]  # = -(sum of artificials)
     infeasible = phase1_obj < -max(tol, 1e-5) * (1.0 + jnp.abs(b_j).sum())
 
     # phase 2: swap in the real objective
-    cj = jnp.asarray(c_full, dtype)
     obj = jnp.zeros((C + 1,), dtype)
-    obj = obj.at[:C0].set(cj)
+    obj = obj.at[:C0].set(c_j)
     # make reduced costs of basic columns zero
     cb = obj[basis]                       # cost of basic vars
     obj = obj - cb @ tab[:R, :]
     tab = tab.at[-1, :].set(obj)
     tab, basis, it2, status2 = _simplex_phase(
-        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, phase2=True,
-        tol=tol)
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol)
 
     x = jnp.zeros((C,), dtype).at[basis].set(tab[:R, -1])
     fun = -tab[-1, -1]
     status = jnp.where(infeasible, INFEASIBLE, status2)
     return x[:nv], fun, status, it1 + it2, basis
+
+
+def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol):
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    return _solve_single_jit(jnp.asarray(A, dtype), jnp.asarray(b, dtype),
+                             jnp.asarray(c_full, dtype), nv=nv,
+                             maxiter=maxiter, tol=tol)
+
+
+@partial(jax.jit, static_argnames=("nv", "maxiter", "tol"))
+def _solve_single_jit(A_j, b_j, c_j, *, nv, maxiter, tol):
+    return _solve_core(A_j, b_j, c_j, nv, maxiter, tol)
+
+
+@partial(jax.jit, static_argnames=("nv", "maxiter", "tol"))
+def _solve_batch_jit(A_j, b_j, c_j, *, nv, maxiter, tol):
+    return jax.vmap(
+        lambda A1, b1, c1: _solve_core(A1, b1, c1, nv, maxiter, tol)
+    )(A_j, b_j, c_j)
 
 
 # --------------------------------------------------------------------------
@@ -274,3 +310,61 @@ def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
         return LPResult(x=x, fun=float(fun), status=int(status),
                         niter=int(niter), basis=basis)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq):
+    """Batched `_canonicalize`: every input carries a leading batch axis and
+    all batch elements share constraint structure (shapes)."""
+    c = np.asarray(c, dtype=np.float64)
+    B, nv = c.shape
+    rows = []
+    rhs = []
+    n_ub = 0
+    if A_ub is not None:
+        A_ub = np.asarray(A_ub, dtype=np.float64)
+        b_ub = np.asarray(b_ub, dtype=np.float64)
+        n_ub = A_ub.shape[1]
+        eye = np.broadcast_to(np.eye(n_ub), (B, n_ub, n_ub))
+        rows.append(np.concatenate([A_ub, eye], axis=2))
+        rhs.append(b_ub)
+    if A_eq is not None:
+        A_eq = np.asarray(A_eq, dtype=np.float64)
+        b_eq = np.asarray(b_eq, dtype=np.float64)
+        pad = np.zeros((B, A_eq.shape[1], n_ub))
+        rows.append(np.concatenate([A_eq, pad], axis=2))
+        rhs.append(b_eq)
+    A = np.concatenate(rows, axis=1)
+    b = np.concatenate(rhs, axis=1)
+    neg = b < 0
+    A = np.where(neg[:, :, None], -A, A)
+    b = np.where(neg, -b, b)
+    c_full = np.concatenate([c, np.zeros((B, n_ub))], axis=1)
+    return A, b, c_full, nv, n_ub
+
+
+def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
+                   maxiter: Optional[int] = None, tol: float = 1e-7
+                   ) -> BatchLPResult:
+    """Solve B structurally-identical LPs in one jitted `vmap` of the simplex.
+
+    Inputs mirror `solve_lp` with a leading batch axis on every array.  Runs
+    in float64 (via a local `enable_x64` scope) regardless of the global jax
+    precision mode so the batched path stays bit-comparable with the NumPy
+    oracle; the schedulable fleet sizes here make the 2x memory irrelevant.
+    """
+    A, b, c_full, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
+    if maxiter is None:
+        maxiter = 50 * (A.shape[1] + 2)
+    from jax.experimental import enable_x64
+    with enable_x64():
+        x, fun, status, niter, basis = jax.tree_util.tree_map(
+            np.asarray,
+            _solve_batch_jit(jnp.asarray(A, jnp.float64),
+                             jnp.asarray(b, jnp.float64),
+                             jnp.asarray(c_full, jnp.float64),
+                             nv=nv, maxiter=maxiter, tol=tol))
+    return BatchLPResult(x=np.asarray(x, np.float64),
+                         fun=np.asarray(fun, np.float64),
+                         status=np.asarray(status, np.int64),
+                         niter=np.asarray(niter, np.int64),
+                         basis=np.asarray(basis))

@@ -68,6 +68,65 @@ class OffloadInstance:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class InstanceBatch:
+    """Array-of-instances: B problems sharing (n, m), stored stacked so the
+    batched planner can `jax.vmap` one LP solve over the whole fleet.
+
+    Per-instance `T` and `acc` may differ (heterogeneous fleets); only the
+    job/model *counts* must agree across the batch."""
+
+    p_ed: np.ndarray   # (B, n, m) float
+    p_es: np.ndarray   # (B, n)  float
+    acc: np.ndarray    # (B, m+1) float
+    T: np.ndarray      # (B,)  float
+
+    def __post_init__(self):
+        object.__setattr__(self, "p_ed", np.asarray(self.p_ed, np.float64))
+        object.__setattr__(self, "p_es", np.asarray(self.p_es, np.float64))
+        object.__setattr__(self, "acc", np.asarray(self.acc, np.float64))
+        object.__setattr__(self, "T", np.asarray(self.T, np.float64))
+        if self.p_ed.ndim != 3:
+            raise ValueError("p_ed must be (B, n, m)")
+        B, n, m = self.p_ed.shape
+        if self.p_es.shape != (B, n):
+            raise ValueError("p_es must be (B, n)")
+        if self.acc.shape != (B, m + 1):
+            raise ValueError("acc must be (B, m+1)")
+        if self.T.shape != (B,):
+            raise ValueError("T must be (B,)")
+
+    @classmethod
+    def stack(cls, instances: "list[OffloadInstance]") -> "InstanceBatch":
+        if not instances:
+            raise ValueError("cannot stack an empty instance list")
+        n, m = instances[0].n, instances[0].m
+        for inst in instances[1:]:
+            if (inst.n, inst.m) != (n, m):
+                raise ValueError(
+                    f"instances must share (n, m); got ({inst.n}, {inst.m}) "
+                    f"vs ({n}, {m})")
+        return cls(p_ed=np.stack([i.p_ed for i in instances]),
+                   p_es=np.stack([i.p_es for i in instances]),
+                   acc=np.stack([i.acc for i in instances]),
+                   T=np.array([i.T for i in instances]))
+
+    def __len__(self) -> int:
+        return self.p_ed.shape[0]
+
+    def __getitem__(self, b: int) -> OffloadInstance:
+        return OffloadInstance(p_ed=self.p_ed[b], p_es=self.p_es[b],
+                               acc=self.acc[b], T=float(self.T[b]))
+
+    @property
+    def n(self) -> int:
+        return self.p_ed.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.p_ed.shape[2]
+
+
 @dataclasses.dataclass
 class Schedule:
     """A (possibly constraint-violating) solution to P."""

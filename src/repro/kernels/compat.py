@@ -1,0 +1,10 @@
+"""jax-version compatibility shared by the pallas kernels.
+
+`pltpu.CompilerParams` was `pltpu.TPUCompilerParams` before jax 0.5; the
+kernels import the alias from here so the next rename is a one-line fix
+(same pattern as `launch/mesh.make_mesh` for `jax.sharding.AxisType`).
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

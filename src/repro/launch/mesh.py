@@ -10,17 +10,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """`jax.make_mesh` across jax versions: `AxisType`/`axis_types` only
+    exist on newer jax; older releases use Auto-equivalent semantics, so
+    omitting the kwarg there is behaviour-preserving."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int = 1, axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     ndev = len(jax.devices())
     n = min(n, ndev)
-    return jax.make_mesh(
-        (n, 1), axes, axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), axes)

@@ -1,8 +1,17 @@
-from .profile import TierProfile, measure_profiles, measure_latency, comm_time
-from .planner import Plan, plan, replan_without_es
+from .profile import (TierProfile, measure_profiles, measure_latency,
+                      comm_time, roofline_profile)
+from .planner import Plan, plan, plan_batch, replan_without_es
 from .executor import ExecutionReport, execute
-from .runtime import ServingRuntime, PeriodStats
+from .runtime import ServingRuntime, PeriodStats, audit_profile
+from .queue import RequestQueue
+from .fleet import (DeviceSpec, EdgeServerPool, FleetEngine, FleetPeriodStats,
+                    make_fleet, paper_style_profile, roofline_style_profile)
 
 __all__ = ["TierProfile", "measure_profiles", "measure_latency", "comm_time",
-           "Plan", "plan", "replan_without_es", "ExecutionReport", "execute",
-           "ServingRuntime", "PeriodStats"]
+           "roofline_profile",
+           "Plan", "plan", "plan_batch", "replan_without_es",
+           "ExecutionReport", "execute",
+           "ServingRuntime", "PeriodStats", "audit_profile",
+           "RequestQueue",
+           "DeviceSpec", "EdgeServerPool", "FleetEngine", "FleetPeriodStats",
+           "make_fleet", "paper_style_profile", "roofline_style_profile"]

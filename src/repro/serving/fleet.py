@@ -1,0 +1,361 @@
+"""Fleet-scale serving engine: N edge devices, a small ES pool, one vmapped
+planning call per period.
+
+The paper's deployment model is one ED offloading to one ES under a period
+budget T (§III-C).  This engine runs N copies of that formulation
+simultaneously and couples them through the resources the paper abstracts
+away:
+
+  * **Arrivals** — every device drains its own `RequestQueue` backlog each
+    period (Poisson or trace), up to the planning-window cap.
+  * **Planning** — per-device `OffloadInstance`s are padded to a common job
+    count and planned by `plan_batch`, so a uniform fleet costs ONE jitted
+    `jax.vmap` LP solve per period instead of N sequential simplex runs.
+  * **ES capacity** — the pool offers `n_servers x T` seconds of service per
+    period.  Each server's admitted offload demand must fit in T (the
+    paper's constraint (2), per server).  Devices that lose the admission
+    race are *backpressured*: their jobs replan onto the local ED ladder via
+    `replan_without_es` (the paper's m-model special case).
+  * **Stragglers** — each device's true speed drifts (`DeviceSpec.drift`);
+    the engine audits measured vs predicted ED wall time with the same EMA
+    rule as the single-device runtime (`runtime.audit_profile`), so the next
+    period's p_ij reflect the degraded device.
+  * **Outages** — `DeviceSpec.outage` marks periods where a device's ES link
+    is down; its instance is planned ED-only from the start.
+
+Padding uses phantom jobs with p_ed = 0 AND p_es = 0: free everywhere, so
+the LP gives each phantom the max-accuracy (ES) assignment integrally at
+zero budget cost, real-job tradeoffs are untouched, and phantoms are
+stripped before any accounting.  Phantom offload times must stay *small* —
+a huge sentinel (e.g. 1e9) mixed into the same ES-budget row as real
+sub-second p_es wrecks the simplex row scaling and silently voids the
+constraint; only the all-real-jobs outage path may use the uniform huge
+sentinel (the same trick as `replan_without_es`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.instances import (PAPER_ACC, PAPER_COMM, PAPER_P_ED,
+                              PAPER_P_ES_PROC)
+from ..core.types import OffloadInstance, Schedule
+from .planner import Plan, plan_batch, replan_without_es
+from .profile import TierProfile, roofline_profile
+from .queue import RequestQueue
+from .runtime import audit_profile
+
+_OUTAGE_ES = 1e9   # ES-link down: uniform huge p_es (replan_without_es trick)
+
+
+@dataclasses.dataclass
+class DeviceSpec:
+    """Static description of one edge device in the fleet.
+
+    `profile` is the device's *believed* latency profile (the planner's
+    starting point); `drift` holds the true per-period ED slowdown factors
+    relative to that profile (cycled, 1.0 = nominal), and `outage` flags
+    periods where the device's ES link is unreachable."""
+    profile: TierProfile
+    drift: Optional[np.ndarray] = None
+    outage: Optional[np.ndarray] = None
+    name: str = ""
+
+    def drift_at(self, period: int) -> float:
+        if self.drift is None or len(self.drift) == 0:
+            return 1.0
+        return float(self.drift[period % len(self.drift)])
+
+    def outage_at(self, period: int) -> bool:
+        if self.outage is None or len(self.outage) == 0:
+            return False
+        return bool(self.outage[period % len(self.outage)])
+
+
+@dataclasses.dataclass
+class _DeviceState:
+    spec: DeviceSpec
+    profile: TierProfile        # current belief (EMA-updated on stragglers)
+    n_updates: int = 0
+
+
+def _ed_time_under(profile: TierProfile, job_classes: np.ndarray,
+                   assignment: np.ndarray) -> float:
+    """ED-tier time of a schedule priced with `profile`'s latencies."""
+    if len(job_classes) == 0:
+        return 0.0
+    ci = np.searchsorted(np.asarray(profile.classes), job_classes)
+    mask = assignment < profile.p_ed.shape[1]
+    if not mask.any():
+        return 0.0
+    return float(profile.p_ed[ci[mask], assignment[mask]].sum())
+
+
+@dataclasses.dataclass
+class FleetPeriodStats:
+    period: int
+    n_devices: int
+    n_jobs: int                 # real (non-phantom) jobs planned
+    plan_seconds: float         # wall time spent planning the whole fleet
+    total_accuracy: float
+    mean_job_accuracy: float
+    n_violations: int           # devices whose wall makespan exceeded T
+    worst_violation: float      # max over devices of makespan/T - 1
+    n_offloading: int           # devices that planned ES work
+    n_backpressured: int        # devices bumped off the ES pool
+    n_outage: int
+    n_straggler_updates: int
+    es_utilization: float       # admitted demand / (n_servers * T)
+    backlog: int                # jobs still queued after this period
+
+
+class EdgeServerPool:
+    """A pool of `n_servers` ES tiers, each offering T seconds per period.
+
+    Admission is a greedy heuristic — ascending demand, least-loaded server
+    first — so small demands are favoured and every admitted server load
+    respects the paper's constraint (2).  It is NOT optimal bin packing:
+    adversarial demand sets can admit one device fewer than an exact
+    packing would."""
+
+    def __init__(self, n_servers: int):
+        if n_servers <= 0:
+            raise ValueError("n_servers must be positive")
+        self.n_servers = n_servers
+
+    def admit(self, demands: Dict[int, float], T: float):
+        """demands: device id -> ES seconds requested.  Returns
+        (admitted ids, per-server loads)."""
+        loads = np.zeros(self.n_servers)
+        admitted: List[int] = []
+        for dev in sorted(demands, key=lambda d: (demands[d], d)):
+            need = demands[dev]
+            slot = int(np.argmin(loads))
+            if loads[slot] + need <= T + 1e-12:
+                loads[slot] += need
+                admitted.append(dev)
+        return admitted, loads
+
+
+def _padded_instance(profile: TierProfile, job_classes: np.ndarray, T: float,
+                     n_total: int, *, disable_es: bool) -> OffloadInstance:
+    """Device instance padded with phantom jobs to the fleet-wide job count."""
+    k = len(job_classes)
+    if k > n_total:
+        raise ValueError(f"{k} jobs exceed planning window {n_total}")
+    m = profile.p_ed.shape[1]
+    p_ed = np.zeros((n_total, m))
+    p_es = np.zeros(n_total)        # phantoms: free ES, stripped later
+    if k:
+        ci = np.searchsorted(np.asarray(profile.classes), job_classes)
+        p_ed[:k] = profile.p_ed[ci]
+        p_es[:k] = _OUTAGE_ES if disable_es else profile.p_es[ci]
+    return OffloadInstance(p_ed=p_ed, p_es=p_es, acc=profile.acc.copy(), T=T)
+
+
+def _strip_phantoms(padded: Schedule, k: int) -> Schedule:
+    """Schedule over the first k (real) jobs of a padded instance."""
+    inst = padded.instance
+    real = OffloadInstance(p_ed=inst.p_ed[:k], p_es=inst.p_es[:k],
+                           acc=inst.acc, T=inst.T)
+    return Schedule(assignment=padded.assignment[:k].copy(), instance=real,
+                    lp_accuracy=None, n_fractional=padded.n_fractional,
+                    status=padded.status, solver=padded.solver)
+
+
+class FleetEngine:
+    """Drives the whole fleet, one period at a time."""
+
+    def __init__(self, devices: Sequence[DeviceSpec], queue: RequestQueue, *,
+                 n_servers: int = 1, T: float, policy: str = "auto",
+                 backend: str = "jax", straggler_threshold: float = 1.5,
+                 ema: float = 0.5):
+        if queue.n_devices != len(devices):
+            raise ValueError("queue.n_devices must match the fleet size")
+        for d, spec in enumerate(devices):
+            cls = np.asarray(spec.profile.classes)
+            if cls.size > 1 and np.any(np.diff(cls) <= 0):
+                # the searchsorted pricing below silently returns wrong
+                # rows on an unsorted class table
+                raise ValueError(
+                    f"device {d} ({spec.profile.name}) profile classes "
+                    f"{cls.tolist()} must be strictly ascending")
+            missing = set(np.asarray(queue.classes).tolist()) \
+                - set(cls.tolist())
+            if missing:
+                # searchsorted would silently price these as a neighbouring
+                # class (or index past the table); fail loudly instead.
+                raise ValueError(
+                    f"device {d} ({spec.profile.name}) has no profile entry "
+                    f"for queue classes {sorted(missing)}")
+        self.devices = [_DeviceState(spec=d, profile=d.profile)
+                        for d in devices]
+        self.queue = queue
+        self.pool = EdgeServerPool(n_servers)
+        self.T = T
+        self.policy = policy
+        self.backend = backend
+        self.straggler_threshold = straggler_threshold
+        self.ema = ema
+        self.history: List[FleetPeriodStats] = []
+        self._period = 0
+
+    # ------------------------------------------------------------------
+    def run(self, periods: int) -> List[FleetPeriodStats]:
+        return [self.run_period() for _ in range(periods)]
+
+    def run_period(self) -> FleetPeriodStats:
+        t = self._period
+        self._period += 1
+        arrivals = self.queue.poll(t)
+        n_pad = self.queue.batch_max
+        outages = [st.spec.outage_at(t) for st in self.devices]
+
+        padded = [_padded_instance(st.profile, arrivals[d], self.T, n_pad,
+                                   disable_es=outages[d])
+                  for d, st in enumerate(self.devices)]
+        plans = plan_batch(padded, policy=self.policy, backend=self.backend)
+        plan_seconds = sum(p.plan_seconds for p in plans)
+        scheds = [_strip_phantoms(p.schedule, len(arrivals[d]))
+                  for d, p in enumerate(plans)]
+
+        # --- ES capacity: admit offload demand server by server ----------
+        demands = {d: s.es_makespan for d, s in enumerate(scheds)
+                   if s.es_makespan > 0}
+        admitted, loads = self.pool.admit(demands, self.T)
+        bumped = sorted(set(demands) - set(admitted))
+        for d in bumped:  # backpressure: replan ED-only (few devices)
+            fb = replan_without_es(scheds[d].instance, policy=self.policy)
+            scheds[d] = fb.schedule
+            plan_seconds += fb.plan_seconds
+
+        # --- simulated execution + straggler audit -----------------------
+        n_jobs = 0
+        total_acc = 0.0
+        worst_viol = 0.0
+        n_viol = 0
+        n_updates = 0
+        for d, st in enumerate(self.devices):
+            sched = scheds[d]
+            n_jobs += sched.instance.n
+            total_acc += sched.total_accuracy
+            # ground truth: the device's BASE latencies times its true drift.
+            # Pricing with the (EMA-updated) belief instead would make the
+            # audit see the raw drift factor forever and inflate the belief
+            # geometrically; against the base, the belief converges.
+            ed_wall = _ed_time_under(st.spec.profile, arrivals[d],
+                                     sched.assignment) * st.spec.drift_at(t)
+            es_wall = 0.0 if d in bumped else sched.es_makespan
+            wall = max(ed_wall, es_wall)
+            viol = max(0.0, wall / self.T - 1.0)
+            worst_viol = max(worst_viol, viol)
+            n_viol += viol > 0
+            new_profile, updated = audit_profile(
+                st.profile, sched.ed_makespan, ed_wall,
+                threshold=self.straggler_threshold, ema=self.ema)
+            if updated:
+                st.profile = new_profile
+                st.n_updates += 1
+                n_updates += 1
+
+        stats = FleetPeriodStats(
+            period=t, n_devices=len(self.devices), n_jobs=n_jobs,
+            plan_seconds=plan_seconds, total_accuracy=total_acc,
+            mean_job_accuracy=total_acc / n_jobs if n_jobs else 0.0,
+            n_violations=n_viol, worst_violation=worst_viol,
+            n_offloading=len(demands), n_backpressured=len(bumped),
+            n_outage=int(sum(outages)), n_straggler_updates=n_updates,
+            es_utilization=float(loads.sum()) / (self.pool.n_servers * self.T),
+            backlog=self.queue.backlog)
+        self.history.append(stats)
+        return stats
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        h = self.history
+        if not h:
+            return {}
+        jobs = sum(s.n_jobs for s in h)
+        return {
+            "periods": len(h),
+            "jobs": jobs,
+            "mean_job_accuracy": (sum(s.total_accuracy for s in h) / jobs
+                                  if jobs else 0.0),
+            "violation_rate": sum(s.n_violations for s in h) / (
+                len(h) * len(self.devices)),
+            "backpressure_rate": sum(s.n_backpressured for s in h) / (
+                len(h) * len(self.devices)),
+            "plan_seconds_per_period": (sum(s.plan_seconds for s in h)
+                                        / len(h)),
+            "devices_per_second": (len(self.devices) * len(h)
+                                   / max(sum(s.plan_seconds for s in h),
+                                         1e-12)),
+            "straggler_updates": sum(s.n_straggler_updates for s in h),
+            "final_backlog": h[-1].backlog,
+        }
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous fleet construction
+# --------------------------------------------------------------------------
+def paper_style_profile(rng: np.random.Generator,
+                        classes: Sequence[int] = (128, 512, 1024)
+                        ) -> TierProfile:
+    """The paper's Raspberry-Pi/ResNet50 testbed numbers with per-device
+    jitter — one 'measured' device in the fleet."""
+    jit_ed = rng.uniform(0.8, 1.3, size=(len(classes), 2))
+    jit_es = rng.uniform(0.9, 1.2, size=len(classes))
+    p_ed = np.array([PAPER_P_ED[c] for c in classes]) * jit_ed
+    p_es = np.array([PAPER_COMM[c] + PAPER_P_ES_PROC[c]
+                     for c in classes]) * jit_es
+    return TierProfile(name="paper-jittered", p_ed=p_ed, p_es=p_es,
+                       acc=PAPER_ACC.copy(), classes=list(classes))
+
+
+def roofline_style_profile(rng: np.random.Generator,
+                           classes: Sequence[int] = (128, 512, 1024)
+                           ) -> TierProfile:
+    """A roofline-derived device: LM-ladder latencies from analytic
+    compute/memory terms instead of testbed measurements, scaled so they
+    land in the same regime as the paper's numbers."""
+    dims = np.asarray(classes, np.float64)
+    flops = 4e9 * (dims / dims[0])                  # per-request useful flops
+    acts = 6e7 * (dims / dims[0])                   # activation traffic bytes
+    payload = 3.0 * dims ** 2                       # image-ish upload bytes
+    derate = rng.uniform(0.7, 1.4)
+    return roofline_profile(
+        "roofline", list(classes),
+        flops_per_class=flops, bytes_per_class=acts,
+        model_scales=(0.25, 0.75), acc=(0.42, 0.58, 0.78),
+        payload_bytes=payload,
+        ed_peak_flops=1.2e12 * derate, ed_hbm_bw=40e9 * derate,
+        link_gbps=0.08)
+
+
+def make_fleet(n_devices: int, *, classes: Sequence[int] = (128, 512, 1024),
+               roofline_frac: float = 0.5, straggler_frac: float = 0.25,
+               outage_frac: float = 0.1, drift_mag: float = 3.0,
+               horizon: int = 64, seed: int = 0) -> List[DeviceSpec]:
+    """A heterogeneous fleet mixing paper-style and roofline-derived devices,
+    with `straggler_frac` of them drifting to `drift_mag x` slowdown partway
+    through the horizon and `outage_frac` suffering ES-link outages."""
+    rng = np.random.default_rng(seed)
+    specs: List[DeviceSpec] = []
+    for d in range(n_devices):
+        if rng.uniform() < roofline_frac:
+            prof = roofline_style_profile(rng, classes)
+        else:
+            prof = paper_style_profile(rng, classes)
+        drift = None
+        if rng.uniform() < straggler_frac:
+            onset = rng.integers(1, max(2, horizon // 2))
+            drift = np.ones(horizon)
+            drift[onset:] = drift_mag
+        outage = None
+        if rng.uniform() < outage_frac:
+            outage = rng.uniform(size=horizon) < 0.2
+        specs.append(DeviceSpec(profile=prof, drift=drift, outage=outage,
+                                name=f"dev{d}"))
+    return specs

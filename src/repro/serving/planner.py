@@ -5,16 +5,22 @@ Policy selection:
   * heterogeneous jobs  -> AMR^2  (2T / 2(a_max - a_min) guarantees; §IV-V)
   * `policy=` override  -> greedy (baseline) | dual (beyond-paper fast
                            Lagrangian scheduler) | lp (bound only)
+
+Fleet scale: `plan_batch` plans N devices per period.  Same-shape instances
+share ONE vmapped, jitted LP solve (`core.amr2.amr2_batch`) instead of N
+sequential simplex runs — the per-device NumPy path stays available as the
+oracle (`backend="numpy"`).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core import (OffloadInstance, Schedule, amdp, amr2, greedy_rra)
+from ..core import (InstanceBatch, OffloadInstance, Schedule, amdp, amr2,
+                    amr2_batch, greedy_rra)
 from ..core.dual import dual_schedule
 
 
@@ -47,11 +53,64 @@ def plan(instance: OffloadInstance, *, policy: str = "auto",
         sched = dual_schedule(instance)
     else:
         raise ValueError(policy)
-    dt = time.perf_counter() - t0
+    return _wrap(sched, time.perf_counter() - t0, policy)
+
+
+def _wrap(sched: Schedule, plan_seconds: float, policy: str) -> Plan:
     per_model = {i: np.nonzero(sched.assignment == i)[0]
-                 for i in range(instance.m + 1)}
-    return Plan(schedule=sched, per_model=per_model, plan_seconds=dt,
-                policy=policy)
+                 for i in range(sched.instance.m + 1)}
+    return Plan(schedule=sched, per_model=per_model,
+                plan_seconds=plan_seconds, policy=policy)
+
+
+def plan_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
+               policy: str = "auto", backend: str = "jax") -> List[Plan]:
+    """Plan a whole fleet's period in as few solver calls as possible.
+
+    With ``backend="jax"`` and an AMR^2-compatible policy, instances are
+    grouped by (n, m) shape and each group is planned by ONE jitted
+    `jax.vmap` LP solve — a uniform fleet is a single jit call per period.
+    ``policy="auto"`` keeps the scalar planner's dispatch: identical-job
+    instances still go to the exact AMDP (per device — the DP has no
+    batched path yet) and only the heterogeneous rest is vmapped.
+    ``policy="amdp"`` and ``backend="numpy"`` fall back to the sequential
+    per-device path, which doubles as the oracle the vmapped path is
+    tested against.
+
+    Returns one Plan per instance, in input order.  `plan_seconds` on each
+    Plan is the group's solve time amortised over its members.
+    """
+    if isinstance(instances, InstanceBatch):
+        insts = [instances[b] for b in range(len(instances))]
+    else:
+        insts = list(instances)
+    if not insts:
+        return []
+    if backend != "jax" or policy not in ("auto", "amr2"):
+        return [plan(i, policy=policy, backend=backend) for i in insts]
+
+    plans: List[Optional[Plan]] = [None] * len(insts)
+    groups: Dict[tuple, List[int]] = {}
+    for idx, inst in enumerate(insts):
+        if policy == "auto" and inst.is_identical():
+            plans[idx] = plan(inst, policy="auto", backend=backend)
+            continue
+        groups.setdefault((inst.n, inst.m), []).append(idx)
+    for idxs in groups.values():
+        t0 = time.perf_counter()
+        group = [insts[i] for i in idxs]
+        # Pad the batch axis up to a power of two (repeating the last
+        # instance) so a fluctuating group size — zero-arrival or
+        # identical-job devices peel off to the scalar path above — reuses
+        # one of O(log B) compiled programs instead of retracing the
+        # vmapped simplex for every distinct B.
+        bucket = 1 << (len(group) - 1).bit_length()
+        batch = InstanceBatch.stack(group + [group[-1]] * (bucket - len(group)))
+        scheds = amr2_batch(batch)[:len(group)]
+        dt = (time.perf_counter() - t0) / len(idxs)
+        for i, sched in zip(idxs, scheds):
+            plans[i] = _wrap(sched, dt, "amr2")
+    return plans  # type: ignore[return-value]
 
 
 def replan_without_es(instance: OffloadInstance, **kw) -> Plan:

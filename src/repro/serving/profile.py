@@ -85,3 +85,39 @@ def measure_profiles(apply_fns: Dict[str, Callable], sample_batches,
 def comm_time(payload_bytes: float, link_gbps: float = 50.0) -> float:
     """The paper's c_j on a TPU fleet: payload over ICI/DCN."""
     return payload_bytes / (link_gbps * 1e9)
+
+
+def roofline_profile(name: str, classes: Sequence[int], *,
+                     flops_per_class: Sequence[float],
+                     bytes_per_class: Sequence[float],
+                     model_scales: Sequence[float],
+                     acc: Sequence[float],
+                     payload_bytes: Sequence[float],
+                     ed_peak_flops: float = 2e12,
+                     ed_hbm_bw: float = 60e9,
+                     es_peak_flops: float = 197e12,
+                     es_hbm_bw: float = 819e9,
+                     link_gbps: float = 50.0) -> TierProfile:
+    """Analytic TierProfile from roofline terms (no hardware attached).
+
+    Mirrors `launch/roofline.terms`: a request's step time on a tier is the
+    max of its compute and memory terms.  The ED ladder holds width-scaled
+    variants of the full model (`model_scales`, ascending, matching the
+    `paper_edge` alpha-ladder idiom); the ES tier runs the full model on
+    server silicon (TPU v5e constants by default).  Offload time adds the
+    paper's c_j as payload over the ICI/DCN link.
+    """
+    f = np.asarray(flops_per_class, np.float64)
+    by = np.asarray(bytes_per_class, np.float64)
+    scales = np.asarray(model_scales, np.float64)
+    if len(f) != len(classes) or len(by) != len(classes):
+        raise ValueError("per-class terms must match `classes`")
+    if len(acc) != len(scales) + 1:
+        raise ValueError("acc must have one entry per ED model plus the ES")
+    # width scaling: flops ~ scale^2, activation bytes ~ scale
+    p_ed = np.maximum(f[:, None] * scales[None, :] ** 2 / ed_peak_flops,
+                      by[:, None] * scales[None, :] / ed_hbm_bw)
+    es_step = np.maximum(f / es_peak_flops, by / es_hbm_bw)
+    comm = np.array([comm_time(p, link_gbps) for p in payload_bytes])
+    return TierProfile(name=name, p_ed=p_ed, p_es=es_step + comm,
+                       acc=np.asarray(acc, np.float64), classes=list(classes))

@@ -1,0 +1,87 @@
+"""Request-arrival queue for the fleet engine.
+
+The paper plans one period at a time: at the period boundary the ED looks at
+the jobs that arrived during the last T seconds and solves P over them
+(§III-C).  At fleet scale every device has its own arrival process; this
+module models them as independent Poisson streams (or a replayed trace) with
+a per-device FIFO backlog, so bursts beyond the per-period planning window
+(`batch_max`) carry over instead of being dropped — the queueing behaviour
+hierarchical-inference serving systems have to absorb.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+class RequestQueue:
+    """Per-device FIFO backlog fed by Poisson or trace-driven arrivals.
+
+    Parameters
+    ----------
+    n_devices:   fleet size.
+    classes:     job size-class labels requests are drawn from (must match
+                 the devices' `TierProfile.classes`).
+    rate:        mean arrivals per device per period — scalar or (n_devices,)
+                 for heterogeneous load.  Ignored when `trace` is given.
+    batch_max:   planning-window cap: at most this many jobs are released to
+                 a device's planner each period; the rest stay queued.
+    trace:       optional (periods, n_devices) arrival-count array replayed
+                 cyclically instead of Poisson sampling.
+    class_probs: optional sampling distribution over `classes`.
+    """
+
+    def __init__(self, n_devices: int, classes: Sequence[int], *,
+                 rate: Union[float, Sequence[float]] = 8.0,
+                 batch_max: int = 16, seed: int = 0,
+                 trace: Optional[np.ndarray] = None,
+                 class_probs: Optional[Sequence[float]] = None):
+        if batch_max <= 0:
+            raise ValueError("batch_max must be positive")
+        self.n_devices = n_devices
+        self.classes = np.asarray(classes)
+        self.batch_max = batch_max
+        self.rate = np.broadcast_to(np.asarray(rate, np.float64),
+                                    (n_devices,))
+        self.trace = None if trace is None else np.asarray(trace)
+        if self.trace is not None and self.trace.shape[1] != n_devices:
+            raise ValueError("trace must be (periods, n_devices)")
+        self.class_probs = class_probs
+        self._rng = np.random.default_rng(seed)
+        self._backlog: List[deque] = [deque() for _ in range(n_devices)]
+        self.total_arrived = 0
+        self.total_released = 0
+
+    def _arrival_counts(self, period: int) -> np.ndarray:
+        if self.trace is not None:
+            return self.trace[period % self.trace.shape[0]]
+        return self._rng.poisson(self.rate)
+
+    def poll(self, period: int) -> List[np.ndarray]:
+        """Admit this period's arrivals, then release up to `batch_max` jobs
+        per device (oldest first).  Returns one job-class array per device."""
+        counts = self._arrival_counts(period)
+        released: List[np.ndarray] = []
+        for d in range(self.n_devices):
+            k = int(counts[d])
+            if k:
+                fresh = self._rng.choice(self.classes, size=k,
+                                         p=self.class_probs)
+                self._backlog[d].extend(fresh.tolist())
+                self.total_arrived += k
+            take = min(len(self._backlog[d]), self.batch_max)
+            out = np.array([self._backlog[d].popleft() for _ in range(take)],
+                           dtype=self.classes.dtype)
+            self.total_released += take
+            released.append(out)
+        return released
+
+    @property
+    def backlog(self) -> int:
+        """Jobs admitted but not yet released to any planner."""
+        return sum(len(q) for q in self._backlog)
+
+    def per_device_backlog(self) -> np.ndarray:
+        return np.array([len(q) for q in self._backlog])

@@ -20,6 +20,27 @@ from .planner import Plan, plan
 from .profile import TierProfile
 
 
+def audit_profile(profile: TierProfile, predicted_ed: float,
+                  measured_ed: float, *, threshold: float = 1.5,
+                  ema: float = 0.5):
+    """Shared straggler audit (single-device runtime AND fleet engine).
+
+    When measured ED wall time drifts past ``threshold x`` the profile's
+    prediction, return a profile whose p_ed is EMA-rescaled toward the
+    observed slowdown: ``p_ed * ((1 - ema) + ema * ratio)``.
+
+    Returns ``(profile, updated)``; the input profile is never mutated.
+    """
+    if predicted_ed <= 0:
+        return profile, False
+    ratio = measured_ed / max(predicted_ed, 1e-9)
+    if ratio <= threshold:
+        return profile, False
+    scaled = dataclasses.replace(
+        profile, p_ed=profile.p_ed * ((1 - ema) + ema * ratio))
+    return scaled, True
+
+
 @dataclasses.dataclass
 class PeriodStats:
     n_jobs: int
@@ -67,15 +88,12 @@ class ServingRuntime:
     def _audit(self, p: Plan, report: ExecutionReport,
                job_classes: np.ndarray) -> bool:
         """Straggler detection: compare measured tier wall time against the
-        profile's prediction; EMA-update the profile on drift."""
-        pred_ed = p.schedule.ed_makespan
-        if pred_ed <= 0 or report.replanned:
+        profile's prediction; EMA-update the profile on drift.  Replanned
+        periods are skipped — their measured walls reflect the fallback
+        schedule, not the profile being audited."""
+        if report.replanned:
             return False
-        ratio = report.ed_wall / max(pred_ed, 1e-9)
-        if ratio > self.straggler_threshold:
-            self.profile = dataclasses.replace(
-                self.profile,
-                p_ed=self.profile.p_ed * (
-                    (1 - self.ema) + self.ema * ratio))
-            return True
-        return False
+        self.profile, updated = audit_profile(
+            self.profile, p.schedule.ed_makespan, report.ed_wall,
+            threshold=self.straggler_threshold, ema=self.ema)
+        return updated

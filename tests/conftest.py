@@ -1,0 +1,68 @@
+"""Tier-1 collection shim for optional `hypothesis`.
+
+Four test modules use hypothesis property tests.  When the package is
+installed (see requirements-dev.txt) they run for real; when it is absent
+(minimal containers) this conftest installs a stub module BEFORE test
+collection so the modules still import — every `@given` test then skips
+with an explicit reason instead of breaking collection for the whole suite.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    import pytest
+
+    hyp = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        """Placeholder for any `st.<strategy>(...)` call."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _any_strategy(*args, **kwargs):
+        return _Strategy()
+
+    # st.integers, st.floats, st.lists, ... all resolve to stub strategies
+    strategies.__getattr__ = lambda name: _any_strategy  # PEP 562
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            # Zero-arg wrapper: pytest must not see the hypothesis-injected
+            # parameters (e.g. `seed`) or it would demand fixtures for them.
+            def skipper():
+                pytest.skip("hypothesis not installed (see "
+                            "requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            skipper.pytestmark = list(getattr(fn, "pytestmark", []))
+            return skipper
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+        return decorate
+
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda condition: True
+    hyp.strategies = strategies
+    hyp.HealthCheck = _Strategy()
+    hyp.example = lambda *a, **k: (lambda fn: fn)
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401  (real package present: nothing to do)
+except ModuleNotFoundError:
+    _install_hypothesis_stub()

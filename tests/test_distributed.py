@@ -86,8 +86,8 @@ def test_elastic_restore_resharding(tmp_path):
     path a different-topology restart takes)."""
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     ckpt.save(str(tmp_path), 0, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     shd = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
     out, _ = ckpt.restore(str(tmp_path), 0, tree, shardings=shd)
     np.testing.assert_array_equal(np.asarray(out["w"]),
@@ -152,8 +152,8 @@ def test_pipeline_parallel_8dev():
     r = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import pipeline_apply
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("stage",))
         S, B, D = 4, 8, 16
         key = jax.random.key(0)
         Ws = jax.random.normal(key, (S, D, D)) * 0.3
@@ -181,8 +181,8 @@ def test_train_step_sharded_8dev():
         from repro.models import init_params, param_axes
         from repro.optim import adamw_init
         cfg = get_smoke_config("internlm2_20b")
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = base_rules(False)
         p_shard = tree_shardings(param_axes(cfg), mesh, rules)
         with sharding_context(mesh, rules):

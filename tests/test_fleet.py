@@ -1,0 +1,318 @@
+"""Fleet engine + vmapped batch planner: parity with the per-device NumPy
+oracle, queue/backlog accounting, ES-capacity backpressure, padding."""
+import numpy as np
+import pytest
+
+from repro.core import (InstanceBatch, OffloadInstance, amr2, amr2_batch,
+                        paper_instance, random_instance, solve_lp,
+                        solve_lp_batch)
+from repro.serving import (DeviceSpec, EdgeServerPool, FleetEngine,
+                           RequestQueue, TierProfile, make_fleet, plan,
+                           plan_batch)
+from repro.serving.fleet import _padded_instance, _strip_phantoms
+
+# one (B, n, m) shape shared across the jax-path tests -> a single jit trace
+B, N, M = 6, 6, 2
+T = 1.5
+
+
+def _fleet_instances(seed=0):
+    return [paper_instance(N, T=T, seed=seed + s) for s in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# InstanceBatch container
+# ---------------------------------------------------------------------------
+def test_instance_batch_stack_roundtrip():
+    insts = _fleet_instances()
+    batch = InstanceBatch.stack(insts)
+    assert len(batch) == B and (batch.n, batch.m) == (N, M)
+    got = batch[3]
+    np.testing.assert_array_equal(got.p_ed, insts[3].p_ed)
+    np.testing.assert_array_equal(got.p_es, insts[3].p_es)
+    assert got.T == insts[3].T
+
+
+def test_instance_batch_rejects_mixed_shapes():
+    with pytest.raises(ValueError):
+        InstanceBatch.stack([paper_instance(4, T=T), paper_instance(5, T=T)])
+    with pytest.raises(ValueError):
+        InstanceBatch.stack([])
+
+
+# ---------------------------------------------------------------------------
+# batched LP + batched AMR^2 vs the sequential NumPy oracle
+# ---------------------------------------------------------------------------
+def test_solve_lp_batch_matches_scalar_numpy():
+    rng = np.random.default_rng(0)
+    n, mc, nb = 8, 3, 5
+    c = rng.normal(size=(nb, n))
+    A_ub = rng.uniform(0, 1, size=(nb, mc, n))
+    b_ub = rng.uniform(1, 3, size=(nb, mc))
+    A_eq = np.ones((nb, 1, n))
+    b_eq = np.ones((nb, 1))
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    for b in range(nb):
+        ref = solve_lp(c[b], A_ub[b], b_ub[b], A_eq[b], b_eq[b],
+                       backend="numpy")
+        assert int(res.status[b]) == ref.status
+        assert res.fun[b] == pytest.approx(ref.fun, abs=1e-8)
+
+
+def test_amr2_batch_matches_numpy_oracle():
+    insts = _fleet_instances(seed=10)
+    scheds = amr2_batch(InstanceBatch.stack(insts))
+    for sched, inst in zip(scheds, insts):
+        oracle = amr2(inst)                     # per-device NumPy simplex
+        assert sched.total_accuracy == pytest.approx(
+            oracle.total_accuracy, abs=1e-6)
+        assert sched.makespan <= 2 * inst.T + 1e-9          # Thm 1
+        np.testing.assert_array_equal(sched.assignment, oracle.assignment)
+
+
+def test_amr2_batch_heterogeneous_T_and_acc():
+    insts = [random_instance(N, M, T=1.0 + 0.3 * s, seed=s)
+             for s in range(B)]
+    scheds = amr2_batch(InstanceBatch.stack(insts))
+    for sched, inst in zip(scheds, insts):
+        assert sched.total_accuracy == pytest.approx(
+            amr2(inst).total_accuracy, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# plan_batch: grouping, fallbacks, ordering
+# ---------------------------------------------------------------------------
+def test_plan_batch_preserves_order_and_matches_oracle():
+    insts = _fleet_instances(seed=20)
+    plans = plan_batch(insts, backend="jax")
+    oracle = plan_batch(insts, backend="numpy")
+    assert len(plans) == len(insts)
+    for p, o in zip(plans, oracle):
+        assert p.policy == "amr2"
+        assert p.schedule.total_accuracy == pytest.approx(
+            o.schedule.total_accuracy, abs=1e-6)
+
+
+def test_plan_batch_groups_mixed_shapes():
+    mixed = [paper_instance(N, T=T, seed=1), paper_instance(N + 2, T=T,
+                                                            seed=2),
+             paper_instance(N, T=T, seed=3)]
+    plans = plan_batch(mixed, backend="jax")
+    for p, inst in zip(plans, mixed):
+        assert len(p.schedule.assignment) == inst.n
+        assert p.schedule.total_accuracy == pytest.approx(
+            amr2(inst).total_accuracy, abs=1e-6)
+
+
+def test_plan_batch_auto_keeps_amdp_dispatch():
+    from repro.core import identical_instance
+    mix = [identical_instance(N, M, T=1.0, seed=0),
+           paper_instance(N, T=T, seed=0)]
+    plans = plan_batch(mix, policy="auto")
+    assert plans[0].policy == "amdp"    # identical jobs: exact DP, as plan()
+    assert plans[1].policy == "amr2"
+
+
+def test_plan_batch_bucketing_matches_oracle():
+    # group sizes inside one power-of-two bucket share a trace AND results
+    insts = _fleet_instances(seed=40)
+    for g in (B - 1, B):                # 5 and 6 both bucket to 8
+        for p, inst in zip(plan_batch(insts[:g]), insts[:g]):
+            assert p.schedule.total_accuracy == pytest.approx(
+                amr2(inst).total_accuracy, abs=1e-6)
+
+
+def test_plan_batch_non_amr2_policy_falls_back():
+    insts = _fleet_instances(seed=30)
+    plans = plan_batch(insts, policy="greedy")
+    assert all(p.policy == "greedy" for p in plans)
+    assert plan_batch([], backend="jax") == []
+
+
+# ---------------------------------------------------------------------------
+# request queue
+# ---------------------------------------------------------------------------
+def test_queue_backlog_conservation_and_cap():
+    q = RequestQueue(3, (128, 512), rate=20.0, batch_max=4, seed=0)
+    released = q.poll(0)
+    assert all(len(r) <= 4 for r in released)
+    assert q.total_arrived == q.total_released + q.backlog
+    # heavy load: backlog drains oldest-first in later periods
+    before = q.backlog
+    q.poll(1)
+    assert q.total_arrived == q.total_released + q.backlog
+    assert before > 0
+
+
+def test_queue_trace_mode_is_deterministic():
+    trace = np.array([[2, 0], [1, 3]])
+    q = RequestQueue(2, (128,), batch_max=8, trace=trace, seed=1)
+    r0 = q.poll(0)
+    assert [len(r) for r in r0] == [2, 0]
+    r1 = q.poll(1)
+    assert [len(r) for r in r1] == [1, 3]
+    r2 = q.poll(2)                      # trace cycles
+    assert [len(r) for r in r2] == [2, 0]
+
+
+# ---------------------------------------------------------------------------
+# ES pool admission
+# ---------------------------------------------------------------------------
+def test_pool_admits_within_capacity():
+    pool = EdgeServerPool(2)
+    demands = {0: 0.9, 1: 0.8, 2: 0.3, 3: 0.2}
+    admitted, loads = pool.admit(demands, T=1.0)
+    assert np.all(loads <= 1.0 + 1e-12)
+    total = sum(demands[d] for d in admitted)
+    assert total == pytest.approx(loads.sum())
+    # ascending-demand first-fit: the two small demands always make it
+    assert {2, 3} <= set(admitted)
+
+
+def test_pool_bumps_excess_demand():
+    pool = EdgeServerPool(1)
+    admitted, loads = pool.admit({0: 0.9, 1: 0.9}, T=1.0)
+    assert len(admitted) == 1 and loads[0] == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# phantom padding
+# ---------------------------------------------------------------------------
+def _profile():
+    return TierProfile(
+        name="t", p_ed=np.array([[0.01, 0.04]]), p_es=np.array([0.35]),
+        acc=np.array([0.4, 0.56, 0.77]), classes=[64])
+
+
+def test_padding_is_invisible_to_the_real_schedule():
+    prof = _profile()
+    classes = np.full(4, 64)
+    padded = _padded_instance(prof, classes, T, n_total=N, disable_es=False)
+    assert padded.n == N
+    real = prof.instance(classes, T)
+    plain = plan(real, policy="amr2")
+    pad_plan = plan(padded, policy="amr2")
+    stripped = _strip_phantoms(pad_plan.schedule, 4)
+    assert stripped.total_accuracy == pytest.approx(
+        plain.schedule.total_accuracy, abs=1e-6)
+    assert stripped.es_makespan == pytest.approx(
+        plain.schedule.es_makespan, abs=1e-9)
+    # phantoms are free on every tier: zero contribution to either budget
+    phantom_assign = pad_plan.schedule.assignment[4:]
+    phantom_cost = sum(padded.p(j, int(i))
+                       for j, i in enumerate(phantom_assign, start=4))
+    assert phantom_cost == 0.0
+
+
+def test_padding_keeps_lp_conditioning():
+    """Regression: a huge phantom p_es sentinel next to sub-second real p_es
+    used to wipe out the ES budget row in the simplex (everything offloaded,
+    es_makespan >> 2T).  Phantoms must not distort the real schedule."""
+    prof = _profile()
+    classes = np.full(8, 64)            # 8 * 0.35s of ES demand vs T = 1.5
+    padded = _padded_instance(prof, classes, T, n_total=12, disable_es=False)
+    stripped = _strip_phantoms(plan(padded, policy="amr2").schedule, 8)
+    plain = plan(prof.instance(classes, T), policy="amr2").schedule
+    assert stripped.es_makespan <= 2 * T + 1e-9             # Thm 1 holds
+    assert stripped.total_accuracy == pytest.approx(
+        plain.total_accuracy, abs=1e-6)
+    np.testing.assert_array_equal(stripped.assignment, plain.assignment)
+
+
+def test_padding_zero_jobs_and_outage():
+    prof = _profile()
+    empty = _padded_instance(prof, np.array([], dtype=int), T, n_total=N,
+                             disable_es=False)
+    assert empty.n == N and (empty.p_es == 0).all()
+    outage = _padded_instance(prof, np.full(3, 64), T, n_total=N,
+                              disable_es=True)
+    assert (outage.p_es[:3] > T).all()  # ES infeasible -> planned ED-only
+    assert (outage.p_es[3:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# fleet engine end-to-end (numpy backend: no extra jit shapes in tier-1)
+# ---------------------------------------------------------------------------
+def _engine(n_devices=4, n_servers=1, rate=6.0, seed=0, specs=None, **kw):
+    if specs is None:
+        specs = [DeviceSpec(profile=_profile()) for _ in range(n_devices)]
+    q = RequestQueue(len(specs), (64,), rate=rate, batch_max=N, seed=seed)
+    return FleetEngine(specs, q, n_servers=n_servers, T=0.5,
+                       backend="numpy", **kw)
+
+
+def test_fleet_accounts_every_released_job():
+    eng = _engine()
+    stats = eng.run(3)
+    released = eng.queue.total_released
+    assert sum(s.n_jobs for s in stats) == released
+    assert all(s.n_devices == 4 for s in stats)
+    assert eng.summary()["periods"] == 3
+
+
+def test_fleet_backpressure_replans_onto_ed():
+    # one tiny server, lots of offload demand -> somebody must be bumped
+    eng = _engine(n_devices=6, n_servers=1, rate=6.0, seed=2)
+    stats = eng.run(3)
+    assert sum(s.n_backpressured for s in stats) > 0
+    assert all(s.es_utilization <= 1.0 + 1e-9 for s in stats)
+
+
+def test_fleet_outage_device_never_offloads():
+    specs = [DeviceSpec(profile=_profile(), outage=np.array([True]))
+             for _ in range(2)]
+    eng = _engine(specs=specs)
+    s = eng.run_period()
+    assert s.n_outage == 2
+    assert s.n_offloading == 0          # ES disabled fleet-wide this period
+
+
+def test_fleet_straggler_triggers_ema_update():
+    specs = [DeviceSpec(profile=_profile(), drift=np.array([4.0]))]
+    eng = _engine(specs=specs, rate=6.0, straggler_threshold=1.5, ema=0.5)
+    s = eng.run_period()
+    assert s.n_straggler_updates == 1
+    dev = eng.devices[0]
+    np.testing.assert_allclose(
+        dev.profile.p_ed, _profile().p_ed * (0.5 + 0.5 * 4.0), rtol=1e-9)
+    assert dev.n_updates == 1
+
+
+def test_fleet_straggler_audit_converges_under_sustained_drift():
+    """Regression: measured ED wall must be priced with the device's BASE
+    profile, not the drifting belief — otherwise the audit sees the raw
+    drift factor every period and the belief diverges geometrically."""
+    base = _profile()
+    specs = [DeviceSpec(profile=base, drift=np.array([3.0]))]
+    eng = _engine(specs=specs, rate=6.0, straggler_threshold=1.5, ema=0.5)
+    eng.run(8)
+    ratio = eng.devices[0].profile.p_ed / base.p_ed
+    assert np.all(ratio <= 3.0 + 1e-9)          # bounded by the true drift
+    # once belief/truth is within threshold the audit stops firing
+    assert all(s.n_straggler_updates == 0 for s in eng.history[3:])
+
+
+def test_fleet_requires_matching_queue():
+    with pytest.raises(ValueError):
+        FleetEngine([DeviceSpec(profile=_profile())],
+                    RequestQueue(2, (64,)), T=0.5)
+
+
+def test_fleet_rejects_bad_class_tables():
+    with pytest.raises(ValueError, match="no profile entry"):
+        FleetEngine([DeviceSpec(profile=_profile())],
+                    RequestQueue(1, (64, 128)), T=0.5)
+    unsorted = TierProfile(
+        name="u", p_ed=np.array([[0.01, 0.04], [0.02, 0.05]]),
+        p_es=np.array([0.35, 0.4]), acc=np.array([0.4, 0.56, 0.77]),
+        classes=[512, 128])
+    with pytest.raises(ValueError, match="ascending"):
+        FleetEngine([DeviceSpec(profile=unsorted)],
+                    RequestQueue(1, (128, 512)), T=0.5)
+
+
+def test_make_fleet_is_heterogeneous():
+    specs = make_fleet(12, seed=0, roofline_frac=0.5)
+    names = {s.profile.name for s in specs}
+    assert {"paper-jittered", "roofline"} <= names
+    assert all(s.profile.p_ed.shape[1] == 2 for s in specs)

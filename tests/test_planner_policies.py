@@ -1,0 +1,96 @@
+"""Planner policy-selection table and executor ES-failure fallback."""
+import numpy as np
+import pytest
+
+from repro.core import identical_instance, paper_instance
+from repro.serving import TierProfile, execute, plan, replan_without_es
+
+
+def _hetero(n=12, T=2.0, seed=0):
+    inst = paper_instance(n, T=T, seed=seed)
+    assert not inst.is_identical()
+    return inst
+
+
+def test_auto_picks_amdp_on_identical_jobs():
+    inst = identical_instance(10, 2, T=1.0, seed=0)
+    p = plan(inst, policy="auto")
+    assert p.policy == "amdp"
+    assert p.schedule.solver == "amdp"
+
+
+def test_auto_picks_amr2_on_heterogeneous_jobs():
+    p = plan(_hetero(), policy="auto")
+    assert p.policy == "amr2"
+    assert p.schedule.solver == "amr2"
+
+
+def test_amdp_request_falls_back_to_amr2_on_heterogeneous():
+    p = plan(_hetero(), policy="amdp")
+    assert p.policy == "amr2"
+
+
+def test_explicit_policies_are_honored():
+    inst = _hetero()
+    for policy, solver in (("greedy", "greedy_rra"), ("dual", "dual")):
+        p = plan(inst, policy=policy)
+        assert p.policy == policy
+        assert p.schedule.solver == solver
+
+
+def test_invalid_policy_raises():
+    with pytest.raises(ValueError):
+        plan(_hetero(), policy="simulated-annealing")
+
+
+def test_plan_partitions_all_jobs():
+    inst = _hetero(n=16)
+    p = plan(inst)
+    ids = np.sort(np.concatenate(list(p.per_model.values())))
+    np.testing.assert_array_equal(ids, np.arange(16))
+
+
+# ---------------------------------------------------------------------------
+# executor: ES outage bounces offloaded jobs back onto the ED ladder
+# ---------------------------------------------------------------------------
+def _applies(m=2):
+    calls = {"ed": [], "es": []}
+
+    def make_ed(i):
+        def f(jobs):
+            calls["ed"].append((i, len(jobs)))
+            return [0.0] * len(jobs)
+        return f
+
+    def es(jobs):
+        calls["es"].append(len(jobs))
+        return [1.0] * len(jobs)
+
+    return [make_ed(i) for i in range(m)], es, calls
+
+
+def test_es_fail_bounced_jobs_run_on_ed_within_budget():
+    prof = TierProfile(
+        name="t", p_ed=np.array([[0.01, 0.04]]), p_es=np.array([0.35]),
+        acc=np.array([0.4, 0.56, 0.77]), classes=[64])
+    inst = prof.instance(np.full(12, 64), T=1.0)
+    p = plan(inst)
+    es_ids = p.per_model[inst.m]
+    assert len(es_ids) > 0                      # the plan offloads some jobs
+
+    apply_ed, apply_es, calls = _applies()
+    rep = execute(p, apply_ed, apply_es, list(range(12)), es_fail=True)
+    assert rep.replanned
+    assert calls["es"] == []                    # the ES was never touched
+    assert sorted(rep.results) == list(range(12))
+    assert rep.es_wall == 0.0
+    ed_jobs_run = sum(k for _, k in calls["ed"])
+    assert ed_jobs_run == 12                    # every job ran on the ladder
+
+    # the fallback plan for the bounced subset stays within the T budget on
+    # the ED tier (the paper's m-model special case is solved exactly)
+    sub = inst.__class__(p_ed=inst.p_ed[es_ids], p_es=inst.p_es[es_ids],
+                         acc=inst.acc, T=inst.T)
+    fb = replan_without_es(sub)
+    assert (fb.schedule.assignment < inst.m).all()
+    assert fb.schedule.ed_makespan <= inst.T + 1e-9

@@ -1,0 +1,86 @@
+"""Unit coverage for the straggler audit (`serving/runtime.py`): threshold
+behaviour, the EMA update math, and the no-update-on-replan path."""
+import numpy as np
+import pytest
+
+from repro.serving import ServingRuntime, TierProfile, audit_profile, plan
+from repro.serving.executor import ExecutionReport
+
+
+def _profile():
+    return TierProfile(
+        name="t", p_ed=np.array([[0.01, 0.04]]), p_es=np.array([0.35]),
+        acc=np.array([0.4, 0.56, 0.77]), classes=[64])
+
+
+def _runtime(**kw):
+    apply_ed = [lambda jobs: [0.0] * len(jobs)] * 2
+    apply_es = lambda jobs: [0.0] * len(jobs)
+    return ServingRuntime(_profile(), apply_ed, apply_es, T=0.5, **kw)
+
+
+def _report(ed_wall, replanned=False):
+    return ExecutionReport(predicted_makespan=0.0, ed_wall=ed_wall,
+                           es_wall=0.0, results={}, replanned=replanned)
+
+
+def _ed_plan(rt, n=8):
+    p = plan(rt.profile.instance(np.full(n, 64), rt.T))
+    assert p.schedule.ed_makespan > 0
+    return p
+
+
+def test_audit_below_threshold_keeps_profile():
+    rt = _runtime(straggler_threshold=1.5)
+    p = _ed_plan(rt)
+    before = rt.profile.p_ed.copy()
+    updated = rt._audit(p, _report(p.schedule.ed_makespan * 1.2),
+                        np.full(8, 64))
+    assert not updated
+    np.testing.assert_array_equal(rt.profile.p_ed, before)
+
+
+def test_audit_above_threshold_applies_ema_math():
+    ema = 0.5
+    rt = _runtime(straggler_threshold=1.5, ema=ema)
+    p = _ed_plan(rt)
+    before = rt.profile.p_ed.copy()
+    ratio = 3.0
+    updated = rt._audit(p, _report(p.schedule.ed_makespan * ratio),
+                        np.full(8, 64))
+    assert updated
+    np.testing.assert_allclose(
+        rt.profile.p_ed, before * ((1 - ema) + ema * ratio), rtol=1e-9)
+
+
+def test_audit_skips_replanned_periods():
+    rt = _runtime(straggler_threshold=1.5)
+    p = _ed_plan(rt)
+    before = rt.profile.p_ed.copy()
+    # 10x drift would normally trigger, but the period was replanned
+    updated = rt._audit(p, _report(p.schedule.ed_makespan * 10.0,
+                                   replanned=True), np.full(8, 64))
+    assert not updated
+    np.testing.assert_array_equal(rt.profile.p_ed, before)
+
+
+def test_audit_profile_zero_prediction_is_noop():
+    prof = _profile()
+    out, updated = audit_profile(prof, 0.0, 99.0, threshold=1.5, ema=0.5)
+    assert not updated and out is prof
+
+
+def test_audit_profile_does_not_mutate_input():
+    prof = _profile()
+    before = prof.p_ed.copy()
+    out, updated = audit_profile(prof, 1.0, 4.0, threshold=1.5, ema=0.25)
+    assert updated
+    np.testing.assert_array_equal(prof.p_ed, before)
+    np.testing.assert_allclose(out.p_ed, before * (0.75 + 0.25 * 4.0))
+
+
+@pytest.mark.parametrize("ratio,expect", [(1.49, False), (1.51, True)])
+def test_audit_profile_threshold_boundary(ratio, expect):
+    prof = _profile()
+    _, updated = audit_profile(prof, 1.0, ratio, threshold=1.5, ema=0.5)
+    assert updated is expect
