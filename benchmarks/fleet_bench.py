@@ -1,30 +1,84 @@
-"""Fleet-scale planning benchmark — the repo's first end-to-end scaling story.
+"""Fleet-scale planning benchmark — the repo's end-to-end scaling story.
 
-Two sections:
+Sections:
 
-  * ``fleet/parity``   — plans the SAME >=64-device fleet twice: once with
-    the vmapped batched AMR^2 (one jit call) and once with the per-device
-    NumPy simplex oracle, asserting identical accuracy totals (<=1e-6) and
-    the paper's 2T makespan guarantee per device, then reports the
-    batched-vs-sequential planning throughput.
+  * ``fleet/parity``   — plans the SAME >=64-device fleet twice per solver:
+    batched vs the per-device NumPy oracle —
+      - vmapped AMR^2 vs the sequential simplex (accuracy gap <= 1e-6 and
+        the paper's 2T makespan guarantee per device),
+      - vmapped `dual_schedule_batch` vs the NumPy `dual_schedule`
+        (bit-identical assignments),
+      - vmapped `amdp_batch` vs the scalar CCKP DP on identical-job
+        devices (bit-identical assignments),
+    and reports batched-vs-sequential planning throughput.
   * ``fleet/scale/B``  — runs the full serving engine (Poisson queue, ES
-    pool, stragglers, outages) for >=20 periods at increasing fleet sizes
-    and reports devices-planned/sec plus aggregate accuracy / violation
-    numbers.
+    pool, stragglers, outages) at increasing fleet sizes (through the
+    256/1024-device points) and reports devices-planned/sec plus aggregate
+    accuracy / violation numbers.
+  * ``fleet/speedup``  — the vectorized `run_period` (amr2 and dual
+    policies) against the PR-1 per-device `run_period_reference` loop at
+    the 256-device point.
+
+Every section also folds its numbers into ``BENCH_fleet.json`` (repo root;
+override with ``BENCH_FLEET_JSON``) so the perf trajectory accumulates
+across hosts/PRs.  ``FLEET_BENCH_SIZES`` / ``FLEET_BENCH_PERIODS`` /
+``FLEET_BENCH_SPEEDUP_DEVICES`` shrink the run for CI smoke jobs.
 
 Standalone:  PYTHONPATH=src python benchmarks/fleet_bench.py
 CSV via the harness:  python benchmarks/run.py fleet
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import numpy as np
 
 PARITY_DEVICES = 64
 PARITY_JOBS = 12
-SCALE_SIZES = (8, 16, 32, 64)
 SCALE_PERIODS = 20
+_BIG = 256            # scale points from here down run fewer periods
+
+_JSON_PATH = os.environ.get(
+    "BENCH_FLEET_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_fleet.json"))
+_RESULTS: dict = {}
+
+
+def _record(section: str, payload) -> None:
+    """Fold one section's numbers into BENCH_fleet.json.
+
+    Merges into the existing document (a partial run — e.g. the CI smoke
+    job, which only runs some sections — updates its sections and leaves
+    the rest intact) and rewrites after every section so an interrupted run
+    still leaves a valid file."""
+    _RESULTS[section] = payload
+    doc = {}
+    try:
+        with open(_JSON_PATH) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError):
+        pass
+    doc.update({"host": platform.node(), "platform": platform.platform(),
+                "unix_time": time.time(), **_RESULTS})
+    with open(_JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def _scale_sizes():
+    env = os.environ.get("FLEET_BENCH_SIZES")
+    if env:
+        return tuple(int(x) for x in env.split(","))
+    return (8, 16, 32, 64, 256, 1024)
+
+
+def _periods(n_devices: int) -> int:
+    cap = int(os.environ.get("FLEET_BENCH_PERIODS", SCALE_PERIODS))
+    return min(cap, 5 if n_devices >= _BIG else SCALE_PERIODS)
 
 
 def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0):
@@ -41,8 +95,10 @@ def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0):
 
 
 def parity():
-    """Batched vmapped planner vs per-device NumPy oracle on one fleet."""
-    from repro.core import InstanceBatch, amr2_batch
+    """Batched vmapped planners vs per-device NumPy/scalar oracles."""
+    from repro.core import (InstanceBatch, amdp, amr2_batch, dual_schedule,
+                            dual_schedule_batch, identical_instance)
+    from repro.core.amdp import amdp_batch
     from repro.serving import plan_batch
 
     insts, T = _parity_instances()
@@ -64,7 +120,44 @@ def parity():
             f"batched/oracle accuracy mismatch: {gap:.2e}"
         assert sched.makespan <= 2 * T + 1e-9, \
             f"2T guarantee violated: {sched.makespan:.3f} > {2 * T}"
+
+    # --- dual: batched jitted bisection vs NumPy oracle, bit-identical ---
+    dual_schedule_batch(batch)                          # compile once
+    t0 = time.perf_counter()
+    dual_scheds = dual_schedule_batch(batch)
+    dual_batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dual_oracle = [dual_schedule(inst) for inst in insts]
+    dual_oracle_s = time.perf_counter() - t0
+    for sched, op in zip(dual_scheds, dual_oracle):
+        np.testing.assert_array_equal(sched.assignment, op.assignment)
+
+    # --- amdp: vmapped CCKP DP vs scalar DP, bit-identical ---------------
+    ident = [identical_instance(PARITY_JOBS, 2, T=1.0 + 0.05 * (s % 8),
+                                seed=s) for s in range(PARITY_DEVICES)]
+    amdp_batch(ident)                                   # compile once
+    t0 = time.perf_counter()
+    amdp_scheds = amdp_batch(ident)
+    amdp_batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    amdp_oracle = [amdp(inst) for inst in ident]
+    amdp_oracle_s = time.perf_counter() - t0
+    for sched, op in zip(amdp_scheds, amdp_oracle):
+        assert sched.status == op.status
+        np.testing.assert_array_equal(sched.assignment, op.assignment)
+
     n = len(insts)
+    _record("parity", {
+        "devices": n, "jobs_per_device": PARITY_JOBS,
+        "amr2_max_acc_gap": max_gap,
+        "amr2_batched_devices_per_s": n / batched_s,
+        "amr2_oracle_devices_per_s": n / oracle_s,
+        "dual_batched_devices_per_s": n / dual_batched_s,
+        "dual_oracle_devices_per_s": n / dual_oracle_s,
+        "amdp_batched_devices_per_s": len(ident) / amdp_batched_s,
+        "amdp_oracle_devices_per_s": len(ident) / amdp_oracle_s,
+        "assertions": "passed",
+    })
     return [
         ("fleet/parity/batched", batched_s / n * 1e6,
          f"devices={n};devices_per_s={n / batched_s:.0f};"
@@ -72,39 +165,154 @@ def parity():
         ("fleet/parity/numpy_oracle", oracle_s / n * 1e6,
          f"devices={n};devices_per_s={n / oracle_s:.0f};"
          f"speedup={oracle_s / batched_s:.1f}x"),
+        ("fleet/parity/dual_batched", dual_batched_s / n * 1e6,
+         f"devices={n};devices_per_s={n / dual_batched_s:.0f};"
+         f"speedup_vs_numpy={dual_oracle_s / dual_batched_s:.1f}x;"
+         f"assignments=bit_identical"),
+        ("fleet/parity/amdp_batched", amdp_batched_s / len(ident) * 1e6,
+         f"devices={len(ident)};"
+         f"devices_per_s={len(ident) / amdp_batched_s:.0f};"
+         f"speedup_vs_scalar={amdp_oracle_s / amdp_batched_s:.1f}x;"
+         f"assignments=bit_identical"),
     ]
+
+
+def _engine(n_devices: int, *, policy: str = "auto", seed: int = 7):
+    from repro.serving import FleetEngine, RequestQueue, make_fleet
+    specs = make_fleet(n_devices, seed=seed, horizon=SCALE_PERIODS)
+    queue = RequestQueue(n_devices, (128, 512, 1024), rate=10.0,
+                         batch_max=PARITY_JOBS, seed=seed)
+    return FleetEngine(specs, queue, n_servers=max(1, n_devices // 16),
+                       T=1.2, policy=policy)
 
 
 def scaling():
     """End-to-end engine throughput + accuracy/violation vs fleet size."""
-    from repro.serving import FleetEngine, RequestQueue, make_fleet
-
     out = []
-    for n_devices in SCALE_SIZES:
-        specs = make_fleet(n_devices, seed=7, horizon=SCALE_PERIODS)
-        queue = RequestQueue(n_devices, (128, 512, 1024), rate=10.0,
-                             batch_max=PARITY_JOBS, seed=7)
-        engine = FleetEngine(specs, queue,
-                             n_servers=max(1, n_devices // 16), T=1.2)
-        engine.run_period()                             # compile once
-        engine.history.clear()  # keep the jit warmup out of the averages
-        t0 = time.perf_counter()
-        engine.run(SCALE_PERIODS)
-        wall = time.perf_counter() - t0
-        s = engine.summary()
-        out.append((
-            f"fleet/scale/{n_devices}",
-            s["plan_seconds_per_period"] / n_devices * 1e6,
-            f"periods={SCALE_PERIODS};jobs={s['jobs']};"
-            f"devices_per_s={s['devices_per_second']:.0f};"
-            f"acc_per_job={s['mean_job_accuracy']:.4f};"
-            f"violation_rate={s['violation_rate']:.4f};"
-            f"backpressure_rate={s['backpressure_rate']:.4f};"
-            f"sim_wall_s={wall:.2f}"))
+    entries = []
+    for n_devices in _scale_sizes():
+        periods = _periods(n_devices)
+        policies = ("auto", "dual") if n_devices >= _BIG else ("auto",)
+        for policy in policies:
+            engine = _engine(n_devices, policy=policy)
+            engine.run_period()                         # compile once
+            engine.history.clear()  # keep jit warmup out of the averages
+            t0 = time.perf_counter()
+            engine.run(periods)
+            wall = time.perf_counter() - t0
+            s = engine.summary()
+            entry = {
+                "devices": n_devices, "policy": policy, "periods": periods,
+                "jobs": s["jobs"],
+                "devices_per_s_plan": s["devices_per_second"],
+                "devices_per_s_wall": n_devices * periods / wall,
+                "mean_job_accuracy": s["mean_job_accuracy"],
+                "violation_rate": s["violation_rate"],
+                "backpressure_rate": s["backpressure_rate"],
+            }
+            entries.append(entry)
+            tag = f"fleet/scale/{n_devices}" + (
+                "" if policy == "auto" else f"/{policy}")
+            out.append((
+                tag, s["plan_seconds_per_period"] / n_devices * 1e6,
+                f"periods={periods};jobs={s['jobs']};"
+                f"devices_per_s={s['devices_per_second']:.0f};"
+                f"acc_per_job={s['mean_job_accuracy']:.4f};"
+                f"violation_rate={s['violation_rate']:.4f};"
+                f"backpressure_rate={s['backpressure_rate']:.4f};"
+                f"sim_wall_s={wall:.2f}"))
+    _record("scale", entries)
     return out
 
 
-ALL = [parity, scaling]
+def speedup():
+    """Vectorized engine vs the PR-1 per-device reference loop at the
+    256-device scale point (or FLEET_BENCH_SPEEDUP_DEVICES).
+
+    Two kinds of comparison, kept separate so the loop gain is not
+    conflated with a solver/policy change:
+
+      * *loop speedup* — `run_period` vs `run_period_reference` under the
+        SAME policy (amr2/amr2 and dual/dual), isolating the array-resident
+        assembly/replan/audit against the per-device Python loop;
+      * *path speedup* — the new hot path (vectorized engine, amr2 or
+        dual) against the PR-1 serving configuration
+        (`run_period_reference`, policy "auto"), the number the ROADMAP
+        tracks.  The reference loop's `plan_batch` itself already benefits
+        from this PR's batched solvers, so this UNDERSTATES the gain over
+        the literal PR-1 code.
+    """
+    n = int(os.environ.get("FLEET_BENCH_SPEEDUP_DEVICES", _BIG))
+    periods = _periods(n)
+
+    def _run(policy: str, reference: bool):
+        engine = _engine(n, policy=policy)
+        step = (engine.run_period_reference if reference
+                else engine.run_period)
+        step()                                          # compile once
+        engine.history.clear()
+        t0 = time.perf_counter()
+        for _ in range(periods):
+            step()
+        wall = time.perf_counter() - t0
+        s = engine.summary()
+        return {
+            "devices_per_s_plan": s["devices_per_second"],
+            "devices_per_s_wall": n * periods / wall,
+            "mean_job_accuracy": s["mean_job_accuracy"],
+            "violation_rate": s["violation_rate"],
+        }
+
+    pr1 = _run("auto", reference=True)        # the PR-1 serving config
+    ref_amr2 = _run("amr2", reference=True)
+    ref_dual = _run("dual", reference=True)
+    new_amr2 = _run("amr2", reference=False)
+    new_dual = _run("dual", reference=False)
+
+    def _ratio(a, b, key):
+        return a[key] / max(b[key], 1e-12)
+
+    entry = {
+        "devices": n, "periods": periods,
+        "pr1_reference_auto": pr1,
+        "reference_amr2": ref_amr2,
+        "reference_dual": ref_dual,
+        "vectorized_amr2": new_amr2,
+        "vectorized_dual": new_dual,
+        # same-policy pairs: the array-resident loop in isolation
+        "amr2_loop_speedup_wall": _ratio(new_amr2, ref_amr2,
+                                         "devices_per_s_wall"),
+        "dual_loop_speedup_wall": _ratio(new_dual, ref_dual,
+                                         "devices_per_s_wall"),
+        # hot path vs the PR-1 serving configuration
+        "amr2_speedup_plan": _ratio(new_amr2, pr1, "devices_per_s_plan"),
+        "amr2_speedup_wall": _ratio(new_amr2, pr1, "devices_per_s_wall"),
+        "dual_speedup_plan": _ratio(new_dual, pr1, "devices_per_s_plan"),
+        "dual_speedup_wall": _ratio(new_dual, pr1, "devices_per_s_wall"),
+        "dual_accuracy_delta": (new_dual["mean_job_accuracy"]
+                                - pr1["mean_job_accuracy"]),
+    }
+    _record("speedup", entry)
+    return [
+        ("fleet/speedup/pr1_reference", 1e6
+         / max(pr1["devices_per_s_wall"], 1e-9),
+         f"devices={n};devices_per_s={pr1['devices_per_s_wall']:.0f};"
+         f"policy=auto;path=per_device"),
+        ("fleet/speedup/vectorized_amr2", 1e6
+         / max(new_amr2["devices_per_s_wall"], 1e-9),
+         f"devices={n};devices_per_s={new_amr2['devices_per_s_wall']:.0f};"
+         f"loop_speedup={entry['amr2_loop_speedup_wall']:.1f}x;"
+         f"vs_pr1={entry['amr2_speedup_wall']:.1f}x"),
+        ("fleet/speedup/vectorized_dual", 1e6
+         / max(new_dual["devices_per_s_wall"], 1e-9),
+         f"devices={n};devices_per_s={new_dual['devices_per_s_wall']:.0f};"
+         f"loop_speedup={entry['dual_loop_speedup_wall']:.1f}x;"
+         f"vs_pr1={entry['dual_speedup_wall']:.1f}x;"
+         f"acc_delta={entry['dual_accuracy_delta']:+.4f}"),
+    ]
+
+
+ALL = [parity, scaling, speedup]
 
 
 def main():

@@ -3,7 +3,12 @@ micro-benches and the roofline report.  Prints ``name,us_per_call,derived``
 CSV (the format tests/CI consume)."""
 from __future__ import annotations
 
+import os
 import sys
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make the `benchmarks` package importable either way.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

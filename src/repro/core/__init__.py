@@ -3,10 +3,11 @@ jobs under a makespan budget (Fresa & Champati, 2021)."""
 from .types import OffloadInstance, InstanceBatch, Schedule
 from .lp import (solve_lp, solve_lp_batch, LPResult, BatchLPResult,
                  OPTIMAL, INFEASIBLE, UNBOUNDED)
-from .amr2 import (amr2, amr2_batch, solve_lp_relaxation, fractional_jobs,
-                   solve_sub_ilp, algorithm2_case_tree, build_lp_arrays,
-                   build_lp_arrays_batch, round_relaxation)
-from .amdp import amdp, amdp_hetero_comm, solve_cckp
+from .amr2 import (amr2, amr2_batch, amr2_batch_arrays, solve_lp_relaxation,
+                   fractional_jobs, solve_sub_ilp, algorithm2_case_tree,
+                   build_lp_arrays, build_lp_arrays_batch, round_relaxation,
+                   round_relaxation_batch)
+from .amdp import amdp, amdp_batch, amdp_hetero_comm, solve_cckp
 from .greedy import greedy_rra
 from .oracle import brute_force
 from .instances import (paper_instance, random_instance, identical_instance,
@@ -16,12 +17,16 @@ __all__ = [
     "OffloadInstance", "InstanceBatch", "Schedule",
     "solve_lp", "solve_lp_batch", "LPResult", "BatchLPResult",
     "OPTIMAL", "INFEASIBLE", "UNBOUNDED",
-    "amr2", "amr2_batch", "solve_lp_relaxation", "fractional_jobs",
-    "solve_sub_ilp", "algorithm2_case_tree", "build_lp_arrays",
-    "build_lp_arrays_batch", "round_relaxation",
-    "amdp", "amdp_hetero_comm", "solve_cckp", "greedy_rra", "brute_force",
+    "amr2", "amr2_batch", "amr2_batch_arrays", "solve_lp_relaxation",
+    "fractional_jobs", "solve_sub_ilp", "algorithm2_case_tree",
+    "build_lp_arrays", "build_lp_arrays_batch", "round_relaxation",
+    "round_relaxation_batch",
+    "amdp", "amdp_batch", "amdp_hetero_comm", "solve_cckp", "greedy_rra",
+    "brute_force",
     "paper_instance", "random_instance", "identical_instance",
     "PAPER_ACC", "PAPER_P_ED", "PAPER_P_ES_PROC", "PAPER_COMM",
 ]
-from .dual import dual_schedule  # noqa: E402  (beyond-paper fast scheduler)
-__all__.append("dual_schedule")
+from .dual import (dual_schedule, dual_schedule_batch,  # noqa: E402
+                   dual_schedule_batch_arrays)  # beyond-paper fast scheduler
+__all__ += ["dual_schedule", "dual_schedule_batch",
+            "dual_schedule_batch_arrays"]

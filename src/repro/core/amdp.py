@@ -23,13 +23,13 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import OffloadInstance, Schedule
+from .types import InstanceBatch, OffloadInstance, Schedule, next_pow2
 
 NEG = -1e30  # -inf stand-in that survives float32 arithmetic
 
@@ -57,6 +57,64 @@ def _model_dp(y: jnp.ndarray, p_i: int, a_i: float, n_steps: int):
     init = (jnp.full_like(y, NEG), jnp.zeros(y.shape, jnp.int32), y)
     (best, bestq, _), _ = jax.lax.scan(step, init, jnp.arange(n_steps))
     return best, bestq
+
+
+def _model_dp_dyn(y: jnp.ndarray, p_i: jnp.ndarray, a_i: jnp.ndarray,
+                  n_steps: int):
+    """`_model_dp` with a *traced* shift p_i, so it vmaps across devices.
+
+    The static-offset `s.at[p_i:, 1:].set(...)` shift becomes a row gather
+    with a validity mask — same values, but the shift amount is data, which
+    is what lets one jitted trace serve every device in a batch regardless
+    of its integerized processing times.
+    """
+    T1 = y.shape[0]
+    src = jnp.arange(T1) - p_i                     # row t reads row t - p_i
+
+    def step(carry, q):
+        best, bestq, s = carry
+        val = s + q.astype(s.dtype) * a_i
+        take = val > best
+        best = jnp.where(take, val, best)
+        bestq = jnp.where(take, q.astype(jnp.int32), bestq)
+        down = jnp.where((src >= 0)[:, None],
+                         s[jnp.clip(src, 0, T1 - 1)], NEG)
+        s2 = jnp.full_like(s, NEG).at[:, 1:].set(down[:, :-1])
+        return (best, bestq, s2), None
+
+    init = (jnp.full_like(y, NEG), jnp.zeros(y.shape, jnp.int32), y)
+    (best, bestq, _), _ = jax.lax.scan(step, init, jnp.arange(n_steps))
+    return best, bestq
+
+
+@partial(jax.jit, static_argnames=("n_steps", "m"))
+def _batch_dp_jnp(y0, p_int, acc, *, n_steps: int, m: int):
+    """CCKP DP over a (B, T1, K1) grid batch: Python loop over the m models
+    (static, small), one vmapped dynamic-shift scan per model."""
+    y = y0
+    tables = []
+    for i in range(m):
+        y, bestq = jax.vmap(
+            partial(_model_dp_dyn, n_steps=n_steps)
+        )(y, p_int[:, i], acc[:, i])
+        tables.append(bestq)
+    return y, jnp.stack(tables)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "p_static"))
+def _batch_dp_pallas(y0, acc, *, n_steps: int, p_static: Tuple[int, ...]):
+    """Pallas-kernel variant: shift offsets must be static on TPU, so the
+    whole batch shares one integerized p vector (callers subgroup by it) and
+    the kernel is vmapped over the (grid, accuracy) batch axes only."""
+    from ..kernels.cckp_dp import ops as _cckp_ops
+    y = y0
+    tables = []
+    for i, p in enumerate(p_static):
+        y, bestq = jax.vmap(
+            lambda y1, a1, p=p: _cckp_ops.model_dp(y1, p, a1, n_steps)
+        )(y, acc[:, i])
+        tables.append(bestq)
+    return y, jnp.stack(tables)
 
 
 def solve_cckp(p: np.ndarray, a: np.ndarray, T_int: int, n_l: int,
@@ -127,6 +185,108 @@ def amdp(inst: OffloadInstance, *, resolution: float = 1e-3,
     assert j == n_l
     return Schedule(assignment=assignment, instance=inst, solver="amdp",
                     status="ok")
+
+
+# --------------------------------------------------------------------------
+# Batched AMDP — one vmapped DP for a whole fleet of identical-job devices
+# --------------------------------------------------------------------------
+def _integerize(inst: OffloadInstance, resolution: float):
+    p_ed = inst.p_ed[0]
+    p_int = np.maximum(
+        np.ceil(p_ed / resolution - 1e-9).astype(np.int64), 0)
+    T_int = int(math.floor(inst.T / resolution + 1e-9))
+    return p_int, T_int
+
+
+def amdp_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
+               resolution: float = 1e-3, impl: str = "jnp"
+               ) -> List[Schedule]:
+    """AMDP over a fleet of identical-job instances.
+
+    Devices share one (T1, K1) integerized value grid (padded to the group
+    maximum and bucketed to powers of two so fluctuating arrival counts
+    reuse O(log) compiled programs) and the per-model CCKP scan runs as ONE
+    vmapped `lax.scan` per model across the whole batch — `impl="jnp"` uses
+    the traced-shift scan, `impl="pallas"` routes through the
+    `kernels/cckp_dp` TPU kernel (static shifts, so devices are subgrouped
+    by their integerized p vector).  The O(m) backtrack stays on the host.
+
+    Grid padding is exact: the DP recurrence is local in (t, k), so values
+    at a device's own (T_int, n_l) corner are unaffected by extra rows,
+    columns, or scan steps, and the batched assignments match the scalar
+    `amdp` bit-for-bit (see tests/test_batched_solvers.py).
+    """
+    if isinstance(instances, InstanceBatch):
+        insts = [instances[b] for b in range(len(instances))]
+    else:
+        insts = list(instances)
+    scheds: List[Optional[Schedule]] = [None] * len(insts)
+
+    groups: dict = {}
+    for idx, inst in enumerate(insts):
+        if not inst.is_identical():
+            raise ValueError(
+                "amdp_batch requires identical jobs; use amr2_batch()")
+        n, m, T = inst.n, inst.m, inst.T
+        p_es = float(inst.p_es[0])
+        n_c = n if p_es <= 0 else min(n, int(math.floor(T / p_es + 1e-12)))
+        n_l = n - n_c
+        if n_l == 0:                       # Lemma 3: everything fits the ES
+            scheds[idx] = Schedule(
+                assignment=np.full(n, m, dtype=np.int64), instance=inst,
+                solver="amdp", status="ok")
+            continue
+        p_int, T_int = _integerize(inst, resolution)
+        key = (m, tuple(int(p) for p in p_int)) if impl == "pallas" else (m,)
+        groups.setdefault(key, []).append((idx, p_int, T_int, n_l))
+
+    for key, items in groups.items():
+        m = key[0]
+        T1 = next_pow2(max(it[2] for it in items) + 1)
+        K1 = next_pow2(max(it[3] for it in items) + 1)
+        Bp = next_pow2(len(items))         # batch-axis bucket (trace reuse)
+        rows = items + [items[-1]] * (Bp - len(items))
+        y0 = np.full((T1, K1), NEG, dtype=np.float32)
+        y0[:, 0] = 0.0
+        y0 = np.broadcast_to(y0, (Bp, T1, K1))
+        p_mat = np.stack([r[1] for r in rows]).astype(np.int32)
+        acc_mat = np.stack(
+            [insts[r[0]].acc[:m] for r in rows]).astype(np.float32)
+        if impl == "pallas":
+            yf, tables = _batch_dp_pallas(
+                jnp.asarray(np.ascontiguousarray(y0)), jnp.asarray(acc_mat),
+                n_steps=K1, p_static=key[1])
+        else:
+            yf, tables = _batch_dp_jnp(
+                jnp.asarray(np.ascontiguousarray(y0)), jnp.asarray(p_mat),
+                jnp.asarray(acc_mat), n_steps=K1, m=m)
+        yf = np.asarray(yf)
+        tables = np.asarray(tables)
+
+        for row, (idx, p_int, T_int, n_l) in enumerate(items):
+            inst = insts[idx]
+            n, T = inst.n, inst.T
+            assignment = np.full(n, m, dtype=np.int64)
+            if yf[row, T_int, n_l] <= NEG / 2:          # P_I infeasible
+                assignment[:n_l] = int(np.argmin(inst.p_ed[0]))
+                scheds[idx] = Schedule(assignment=assignment, instance=inst,
+                                       solver="amdp", status="infeasible")
+                continue
+            counts = np.zeros(m, dtype=np.int64)
+            t, k = T_int, n_l
+            for i in range(m - 1, -1, -1):
+                q = int(tables[i, row, t, k])
+                counts[i] = q
+                t -= q * int(p_int[i])
+                k -= q
+            assert k == 0 and t >= 0, "CCKP backtrack inconsistent"
+            j = 0
+            for i in range(m):
+                assignment[j: j + counts[i]] = i
+                j += counts[i]
+            scheds[idx] = Schedule(assignment=assignment, instance=inst,
+                                   solver="amdp", status="ok")
+    return scheds  # type: ignore[return-value]
 
 
 def amdp_hetero_comm(p_ed_models: np.ndarray, p_es_proc: float,

@@ -223,21 +223,138 @@ def build_lp_arrays_batch(batch: InstanceBatch):
     return c, A_ub, b_ub, A_eq, b_eq
 
 
+# status codes shared by the vectorized rounding and the fleet arrays path
+ST_OK, ST_FALLBACK, ST_INFEASIBLE = 0, 1, 2
+STATUS_NAMES = ("ok", "fallback", "infeasible")
+
+
+def round_relaxation_batch(batch: InstanceBatch, xbar: np.ndarray,
+                           status: np.ndarray, *,
+                           frac_tol: float = _FRAC_TOL):
+    """Vectorized `round_relaxation` across a whole batch.
+
+    Algorithm 1's rounding cases run as array ops over the devices that hit
+    them — one-fractional best-fit and the two-job sub-ILP enumeration both
+    vectorize; only the rare numeric >2-fractional fallback drops to the
+    scalar path.  Tie-breaks (first-max argmax everywhere) are identical to
+    the scalar code, so assignments match it exactly.
+
+    Returns ``(assignment (B, n) int64, sched_status (B,) int with
+    ST_OK/ST_FALLBACK/ST_INFEASIBLE, n_fractional (B,) int)``.
+    """
+    B, n, mp1 = xbar.shape
+    m = mp1 - 1
+    status = np.asarray(status)
+    bad = (status != OPTIMAL) & (status != INFEASIBLE)
+    if bad.any():
+        raise RuntimeError(
+            f"LP relaxation did not converge (status={int(status[bad][0])})")
+
+    assignment = np.argmax(xbar, axis=2).astype(np.int64)
+    sched_status = np.zeros(B, dtype=np.int64)
+    n_frac = np.zeros(B, dtype=np.int64)
+
+    infeas = status == INFEASIBLE
+    if infeas.any():
+        assignment[infeas] = np.argmin(batch.p_ed[infeas], axis=2)
+        sched_status[infeas] = ST_INFEASIBLE
+
+    ok = ~infeas
+    frac_rows = (((xbar > frac_tol) & (xbar < 1.0 - frac_tol)).any(axis=2)
+                 & ok[:, None])
+    fc = frac_rows.sum(axis=1)
+    n_frac[ok] = np.minimum(fc[ok], 2)
+
+    many = ok & (fc > 2)              # numeric fallback: scalar path, rare
+    for b in np.nonzero(many)[0]:
+        sched = round_relaxation(batch[b], xbar[b], 0.0, OPTIMAL,
+                                 frac_tol=frac_tol)
+        assignment[b] = sched.assignment
+        sched_status[b] = STATUS_NAMES.index(sched.status)
+        n_frac[b] = sched.n_fractional
+
+    one = ok & (fc == 1)              # Algorithm 1 line 4, vectorized
+    if one.any():
+        bs = np.nonzero(one)[0]
+        js = np.argmax(frac_rows[bs], axis=1)
+        Tb = batch.T[bs]
+        feas = np.concatenate(
+            [batch.p_ed[bs, js] <= Tb[:, None],
+             (batch.p_es[bs, js] <= Tb)[:, None]], axis=1)   # (k, m+1)
+        val = np.where(feas, batch.acc[bs], -np.inf)
+        pick = np.argmax(val, axis=1)
+        none = ~feas.any(axis=1)      # P integrally infeasible
+        if none.any():
+            pick[none] = np.argmin(batch.p_ed[bs[none], js[none]], axis=1)
+            sched_status[bs[none]] = ST_FALLBACK
+        assignment[bs, js] = pick
+
+    two = ok & (fc == 2)              # Algorithm 2, vectorized enumeration
+    if two.any():
+        bs = np.nonzero(two)[0]
+        k = len(bs)
+        j1 = np.argmax(frac_rows[bs], axis=1)
+        masked = frac_rows[bs].copy()
+        masked[np.arange(k), j1] = False
+        j2 = np.argmax(masked, axis=1)
+        Tb = batch.T[bs]
+        zed = np.zeros((k, 1))
+        zes = np.zeros((k, m))
+        ed1 = np.concatenate([batch.p_ed[bs, j1], zed], axis=1)  # (k, m+1)
+        ed2 = np.concatenate([batch.p_ed[bs, j2], zed], axis=1)
+        es1 = np.concatenate([zes, batch.p_es[bs, j1][:, None]], axis=1)
+        es2 = np.concatenate([zes, batch.p_es[bs, j2][:, None]], axis=1)
+        ed_load = ed1[:, :, None] + ed2[:, None, :]              # (k,m+1,m+1)
+        es_load = es1[:, :, None] + es2[:, None, :]
+        feas = ((ed_load <= Tb[:, None, None] + 1e-12)
+                & (es_load <= Tb[:, None, None] + 1e-12))
+        val = batch.acc[bs][:, :, None] + batch.acc[bs][:, None, :]
+        val = np.where(feas, val, -np.inf)
+        flat = np.argmax(val.reshape(k, -1), axis=1)
+        i1, i2 = flat // mp1, flat % mp1
+        none = ~feas.any(axis=(1, 2))
+        if none.any():
+            i1[none] = np.argmin(batch.p_ed[bs[none], j1[none]], axis=1)
+            i2[none] = np.argmin(batch.p_ed[bs[none], j2[none]], axis=1)
+            sched_status[bs[none]] = ST_FALLBACK
+        assignment[bs, j1] = i1
+        assignment[bs, j2] = i2
+
+    return assignment, sched_status, n_frac
+
+
+def amr2_batch_arrays(batch: InstanceBatch, *, frac_tol: float = _FRAC_TOL):
+    """Array-level batched AMR^2 for the fleet hot path: ONE vmapped LP
+    solve + vectorized rounding, no per-device Schedule objects.
+
+    Returns ``(assignment (B, n), sched_status (B,), n_fractional (B,),
+    lp_accuracy (B,))``."""
+    c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(batch)
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    B, n = batch.p_es.shape
+    xbar = res.x.reshape(B, n, batch.m + 1)
+    assignment, sched_status, n_frac = round_relaxation_batch(
+        batch, xbar, res.status, frac_tol=frac_tol)
+    return assignment, sched_status, n_frac, -res.fun
+
+
 def amr2_batch(batch: InstanceBatch, *,
                frac_tol: float = _FRAC_TOL) -> "list[Schedule]":
     """AMR^2 over a fleet of B same-shape instances.
 
     The expensive step — the basic LP-relaxation solve — runs as ONE jitted
     `vmap` over the batch (float64, so it matches the per-instance NumPy
-    oracle to rounding-identical assignments); the O(n) rounding of at most
-    two fractional jobs per instance stays on the host."""
-    c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(batch)
-    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
-    B, n = batch.p_es.shape
-    xbar = res.x.reshape(B, n, batch.m + 1)
-    return [round_relaxation(batch[b], xbar[b], -float(res.fun[b]),
-                             int(res.status[b]), frac_tol=frac_tol)
-            for b in range(B)]
+    oracle to rounding-identical assignments); the rounding of at most two
+    fractional jobs per instance is vectorized across the batch
+    (`round_relaxation_batch`)."""
+    assignment, sched_status, n_frac, lp_acc = amr2_batch_arrays(
+        batch, frac_tol=frac_tol)
+    return [Schedule(assignment=assignment[b], instance=batch[b],
+                     lp_accuracy=(None if sched_status[b] == ST_INFEASIBLE
+                                  else float(lp_acc[b])),
+                     n_fractional=int(n_frac[b]),
+                     status=STATUS_NAMES[sched_status[b]], solver="amr2")
+            for b in range(len(batch))]
 
 
 def _best_fit_any(inst: OffloadInstance, j: int) -> Optional[int]:

@@ -30,7 +30,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .types import next_pow2
+
 OPTIMAL, ITERATION_LIMIT, INFEASIBLE, UNBOUNDED = 0, 1, 2, 3
+
+
+def _bucket_maxiter(maxiter: int) -> int:
+    """Round a shape-derived default maxiter UP to a power of two.
+
+    `maxiter` is a static argname of the jitted solvers, so leaving it as
+    the raw `50 * (rows + 2)` makes every distinct padded job count retrace
+    the (vmapped) simplex; bucketing keeps the trace-key count at O(log)
+    — mirroring `plan_batch`'s batch-axis bucketing — and only ever raises
+    the iteration budget."""
+    return next_pow2(maxiter)
 
 
 @dataclasses.dataclass
@@ -295,6 +308,8 @@ def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
     A, b, c_full, nv, n_slack = _canonicalize(c, A_ub, b_ub, A_eq, b_eq)
     if maxiter is None:
         maxiter = 50 * (A.shape[0] + 2)
+        if backend == "jax":          # static argname: bucket the trace key
+            maxiter = _bucket_maxiter(maxiter)
     if backend == "jax":
         if not jax.config.jax_enable_x64:
             tol = max(tol, 1e-5)
@@ -354,7 +369,7 @@ def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
     """
     A, b, c_full, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
     if maxiter is None:
-        maxiter = 50 * (A.shape[1] + 2)
+        maxiter = _bucket_maxiter(50 * (A.shape[1] + 2))
     from jax.experimental import enable_x64
     with enable_x64():
         x, fun, status, niter, basis = jax.tree_util.tree_map(

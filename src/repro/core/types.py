@@ -24,6 +24,16 @@ import numpy as np
 ES = -1  # sentinel alias: instance.es_index == m
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x.
+
+    The shared bucketing primitive for jit-trace reuse: batch axes, DP grid
+    extents, and shape-derived static args (e.g. simplex maxiter) are all
+    rounded up with this so fluctuating sizes reuse O(log) compiled
+    programs instead of retracing per distinct value."""
+    return 1 << (max(int(x), 1) - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class OffloadInstance:
     """One instance of problem P."""
@@ -117,6 +127,14 @@ class InstanceBatch:
     def __getitem__(self, b: int) -> OffloadInstance:
         return OffloadInstance(p_ed=self.p_ed[b], p_es=self.p_es[b],
                                acc=self.acc[b], T=float(self.T[b]))
+
+    def identical_mask(self, rtol: float = 1e-9) -> np.ndarray:
+        """(B,) bool: `OffloadInstance.is_identical` vectorized over the
+        batch — the single criterion every batched planner dispatch uses."""
+        return (np.isclose(self.p_ed, self.p_ed[:, :1], rtol=rtol)
+                .all(axis=(1, 2))
+                & np.isclose(self.p_es, self.p_es[:, :1], rtol=rtol)
+                .all(axis=1))
 
     @property
     def n(self) -> int:

@@ -1,6 +1,7 @@
 from .profile import (TierProfile, measure_profiles, measure_latency,
                       comm_time, roofline_profile)
-from .planner import Plan, plan, plan_batch, replan_without_es
+from .planner import (FleetPlan, Plan, plan, plan_batch, plan_batch_arrays,
+                      replan_without_es, replan_without_es_batch)
 from .executor import ExecutionReport, execute
 from .runtime import ServingRuntime, PeriodStats, audit_profile
 from .queue import RequestQueue
@@ -9,7 +10,8 @@ from .fleet import (DeviceSpec, EdgeServerPool, FleetEngine, FleetPeriodStats,
 
 __all__ = ["TierProfile", "measure_profiles", "measure_latency", "comm_time",
            "roofline_profile",
-           "Plan", "plan", "plan_batch", "replan_without_es",
+           "FleetPlan", "Plan", "plan", "plan_batch", "plan_batch_arrays",
+           "replan_without_es", "replan_without_es_batch",
            "ExecutionReport", "execute",
            "ServingRuntime", "PeriodStats", "audit_profile",
            "RequestQueue",

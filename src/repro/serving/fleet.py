@@ -1,5 +1,6 @@
-"""Fleet-scale serving engine: N edge devices, a small ES pool, one vmapped
-planning call per period.
+"""Fleet-scale serving engine: N edge devices, a small ES pool, an
+array-resident period loop that costs a handful of jitted/vectorized calls
+regardless of fleet size.
 
 The paper's deployment model is one ED offloading to one ES under a period
 budget T (§III-C).  This engine runs N copies of that formulation
@@ -8,41 +9,50 @@ away:
 
   * **Arrivals** — every device drains its own `RequestQueue` backlog each
     period (Poisson or trace), up to the planning-window cap.
-  * **Planning** — per-device `OffloadInstance`s are padded to a common job
-    count and planned by `plan_batch`, so a uniform fleet costs ONE jitted
-    `jax.vmap` LP solve per period instead of N sequential simplex runs.
+  * **Planning** — devices live as *stacked arrays* per shape group
+    (belief/base latency profiles, accuracies): padded-instance assembly is
+    one masked gather per group, and the group plans via
+    `plan_batch_arrays` — vmapped AMR^2 / AMDP / dual solvers, no
+    per-device Schedule objects on the hot path.
   * **ES capacity** — the pool offers `n_servers x T` seconds of service per
     period.  Each server's admitted offload demand must fit in T (the
     paper's constraint (2), per server).  Devices that lose the admission
-    race are *backpressured*: their jobs replan onto the local ED ladder via
-    `replan_without_es` (the paper's m-model special case).
+    race are *backpressured*: they replan ED-only in ONE batched
+    ES-disabled solve (`replan_without_es_batch`) instead of a Python loop
+    of scalar replans.
   * **Stragglers** — each device's true speed drifts (`DeviceSpec.drift`);
     the engine audits measured vs predicted ED wall time with the same EMA
-    rule as the single-device runtime (`runtime.audit_profile`), so the next
-    period's p_ij reflect the degraded device.
+    rule as the single-device runtime (`runtime.audit_profile`), vectorized
+    across the fleet, so the next period's p_ij reflect the degraded device.
   * **Outages** — `DeviceSpec.outage` marks periods where a device's ES link
     is down; its instance is planned ED-only from the start.
+
+`run_period_reference()` keeps the PR-1 per-device implementation (padding,
+stripping, sequential backpressure replans, per-device audit) as the
+benchmark baseline and parity oracle for the vectorized loop.
 
 Padding uses phantom jobs with p_ed = 0 AND p_es = 0: free everywhere, so
 the LP gives each phantom the max-accuracy (ES) assignment integrally at
 zero budget cost, real-job tradeoffs are untouched, and phantoms are
-stripped before any accounting.  Phantom offload times must stay *small* —
-a huge sentinel (e.g. 1e9) mixed into the same ES-budget row as real
-sub-second p_es wrecks the simplex row scaling and silently voids the
-constraint; only the all-real-jobs outage path may use the uniform huge
-sentinel (the same trick as `replan_without_es`).
+stripped/masked before any accounting.  Phantom offload times must stay
+*small* — a huge sentinel (e.g. 1e9) mixed into the same ES-budget row as
+real sub-second p_es wrecks the simplex row scaling and silently voids the
+constraint; only real jobs on the outage / backpressure paths use the
+uniform huge sentinel (the same trick as `replan_without_es`).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.instances import (PAPER_ACC, PAPER_COMM, PAPER_P_ED,
                               PAPER_P_ES_PROC)
-from ..core.types import OffloadInstance, Schedule
-from .planner import Plan, plan_batch, replan_without_es
+from ..core.types import InstanceBatch, OffloadInstance, Schedule
+from .planner import (plan_batch, plan_batch_arrays, replan_without_es,
+                      replan_without_es_batch)
 from .profile import TierProfile, roofline_profile
 from .queue import RequestQueue
 from .runtime import audit_profile
@@ -79,6 +89,28 @@ class _DeviceState:
     spec: DeviceSpec
     profile: TierProfile        # current belief (EMA-updated on stragglers)
     n_updates: int = 0
+
+
+class _ShapeGroup:
+    """Array-resident view of every device sharing one (classes, m) shape:
+    stacked belief/base latency tables so one period's padded-instance
+    assembly, pricing, and audit are whole-group array ops."""
+
+    def __init__(self, ids: Sequence[int], states: Sequence[_DeviceState]):
+        self.ids = np.asarray(ids, dtype=np.int64)
+        self.classes = np.asarray(states[0].profile.classes)
+        self.p_ed = np.stack([st.profile.p_ed for st in states]
+                             ).astype(np.float64)          # belief (D, c, m)
+        self.p_es = np.stack([st.profile.p_es for st in states]
+                             ).astype(np.float64)          # (D, c)
+        self.acc = np.stack([st.profile.acc for st in states]
+                            ).astype(np.float64)           # (D, m+1)
+        self.base_p_ed = np.stack([st.spec.profile.p_ed for st in states]
+                                  ).astype(np.float64)     # truth (D, c, m)
+
+    @property
+    def m(self) -> int:
+        return self.p_ed.shape[2]
 
 
 def _ed_time_under(profile: TierProfile, job_classes: np.ndarray,
@@ -201,12 +233,172 @@ class FleetEngine:
         self.ema = ema
         self.history: List[FleetPeriodStats] = []
         self._period = 0
+        # ---- array residency: stack per-device profiles by shape group ---
+        by_key: Dict[tuple, List[int]] = {}
+        for d, st in enumerate(self.devices):
+            key = (tuple(np.asarray(st.profile.classes).tolist()),
+                   st.profile.p_ed.shape[1])
+            by_key.setdefault(key, []).append(d)
+        self._groups = [_ShapeGroup(ids, [self.devices[d] for d in ids])
+                        for ids in by_key.values()]
+        self._dev_slot: Dict[int, tuple] = {}    # device -> (group, row)
+        for g in self._groups:
+            for row, d in enumerate(g.ids):
+                self._dev_slot[int(d)] = (g, row)
 
     # ------------------------------------------------------------------
     def run(self, periods: int) -> List[FleetPeriodStats]:
         return [self.run_period() for _ in range(periods)]
 
+    # ------------------------------------------------------------------
+    # vectorized period loop (the hot path)
+    # ------------------------------------------------------------------
     def run_period(self) -> FleetPeriodStats:
+        t = self._period
+        self._period += 1
+        arrivals = self.queue.poll(t)
+        n_pad = self.queue.batch_max
+        D_all = len(self.devices)
+        outage = np.fromiter((st.spec.outage_at(t) for st in self.devices),
+                             dtype=bool, count=D_all)
+        drift = np.fromiter((st.spec.drift_at(t) for st in self.devices),
+                            dtype=np.float64, count=D_all)
+
+        plan_seconds = 0.0
+        staged = []                   # (group, mask, batch, base, assign)
+        es_demand_all = np.zeros(D_all)
+        for g in self._groups:
+            mask, batch, base = self._assemble(g, arrivals, outage, n_pad)
+            fp = plan_batch_arrays(batch, policy=self.policy,
+                                   backend=self.backend)
+            plan_seconds += fp.plan_seconds
+            assign = fp.assignment
+            es_demand_all[g.ids] = np.where(
+                mask & (assign == g.m), batch.p_es, 0.0).sum(axis=1)
+            staged.append((g, mask, batch, base, assign))
+
+        # --- ES capacity: admit offload demand server by server ----------
+        offl = np.nonzero(es_demand_all > 0)[0]     # O(offloaders) Python
+        demands = dict(zip(offl.tolist(), es_demand_all[offl].tolist()))
+        admitted, loads = self.pool.admit(demands, self.T)
+        bumped = sorted(set(demands) - set(admitted))
+        admitted_mask = np.zeros(D_all, dtype=bool)
+        admitted_mask[list(admitted)] = True
+
+        # --- backpressure: ONE batched ES-disabled replan per group ------
+        for g, mask, batch, base, assign in staged:
+            rows = np.nonzero(np.isin(g.ids, bumped))[0]
+            if not len(rows):
+                continue
+            if self.backend == "jax":
+                sub = InstanceBatch(p_ed=batch.p_ed[rows],
+                                    p_es=batch.p_es[rows],
+                                    acc=batch.acc[rows], T=batch.T[rows])
+                fb = replan_without_es_batch(sub, real_mask=mask[rows],
+                                             policy=self.policy)
+                plan_seconds += fb.plan_seconds
+                assign[rows] = fb.assignment
+            else:                     # sequential oracle path (PR-1 exact)
+                t0 = time.perf_counter()
+                for r in rows:
+                    k = int(mask[r].sum())
+                    stripped = OffloadInstance(
+                        p_ed=batch.p_ed[r, :k], p_es=batch.p_es[r, :k],
+                        acc=batch.acc[r], T=self.T)
+                    fbp = replan_without_es(stripped, policy=self.policy)
+                    assign[r, :k] = fbp.schedule.assignment
+                plan_seconds += time.perf_counter() - t0
+
+        # --- vectorized pricing, accounting, and straggler audit ---------
+        n_jobs = 0
+        total_acc = 0.0
+        worst_viol = 0.0
+        n_viol = 0
+        n_updates = 0
+        for g, mask, batch, base, assign in staged:
+            m = g.m
+            n_jobs += int(mask.sum())
+            acc_jobs = batch.acc[np.arange(len(g.ids))[:, None], assign]
+            total_acc += float(np.where(mask, acc_jobs, 0.0).sum())
+
+            on_ed = mask & (assign < m)
+            picked = np.clip(assign, 0, m - 1)[..., None]
+            ed_pred = np.where(
+                on_ed, np.take_along_axis(batch.p_ed, picked, axis=2)[..., 0],
+                0.0).sum(axis=1)
+            # ground truth: the device's BASE latencies times its true
+            # drift.  Pricing with the (EMA-updated) belief instead would
+            # make the audit see the raw drift factor forever and inflate
+            # the belief geometrically; against the base, it converges.
+            ed_wall = np.where(
+                on_ed, np.take_along_axis(base, picked, axis=2)[..., 0],
+                0.0).sum(axis=1) * drift[g.ids]
+            es_wall = np.where(admitted_mask[g.ids], es_demand_all[g.ids],
+                               0.0)
+            wall = np.maximum(ed_wall, es_wall)
+            viol = np.maximum(0.0, wall / self.T - 1.0)
+            worst_viol = max(worst_viol, float(viol.max(initial=0.0)))
+            n_viol += int((viol > 0).sum())
+
+            ratio = ed_wall / np.maximum(ed_pred, 1e-9)
+            upd = (ed_pred > 0) & (ratio > self.straggler_threshold)
+            if upd.any():
+                factor = (1 - self.ema) + self.ema * ratio
+                g.p_ed[upd] *= factor[upd, None, None]
+                for r in np.nonzero(upd)[0]:
+                    st = self.devices[int(g.ids[r])]
+                    st.profile = dataclasses.replace(
+                        st.profile, p_ed=g.p_ed[r].copy())
+                    st.n_updates += 1
+                n_updates += int(upd.sum())
+
+        stats = FleetPeriodStats(
+            period=t, n_devices=D_all, n_jobs=n_jobs,
+            plan_seconds=plan_seconds, total_accuracy=total_acc,
+            mean_job_accuracy=total_acc / n_jobs if n_jobs else 0.0,
+            n_violations=n_viol, worst_violation=worst_viol,
+            n_offloading=len(demands), n_backpressured=len(bumped),
+            n_outage=int(outage.sum()), n_straggler_updates=n_updates,
+            es_utilization=float(loads.sum()) / (self.pool.n_servers * self.T),
+            backlog=self.queue.backlog)
+        self.history.append(stats)
+        return stats
+
+    def _assemble(self, g: _ShapeGroup, arrivals, outage: np.ndarray,
+                  n_pad: int):
+        """One group's padded `InstanceBatch` as masked array gathers: no
+        per-device instance objects, one searchsorted + fancy-index per
+        group.  Returns (real-job mask, batch, base ED latencies)."""
+        D = len(g.ids)
+        lens = np.fromiter((len(arrivals[d]) for d in g.ids),
+                           dtype=np.int64, count=D)
+        mask = np.arange(n_pad)[None, :] < lens[:, None]
+        cls = np.full((D, n_pad), g.classes[0],
+                      dtype=np.asarray(self.queue.classes).dtype)
+        if lens.sum():
+            cls[mask] = np.concatenate(
+                [arrivals[d] for d in g.ids if len(arrivals[d])])
+        ci = np.searchsorted(g.classes, cls)
+        rows = np.arange(D)[:, None]
+        p_ed = g.p_ed[rows, ci]
+        p_es = g.p_es[rows, ci]
+        base = g.base_p_ed[rows, ci]
+        p_ed[~mask] = 0.0
+        p_es[~mask] = 0.0
+        base[~mask] = 0.0
+        p_es[outage[g.ids][:, None] & mask] = _OUTAGE_ES
+        batch = InstanceBatch(p_ed=p_ed, p_es=p_es, acc=g.acc.copy(),
+                              T=np.full(D, self.T))
+        return mask, batch, base
+
+    # ------------------------------------------------------------------
+    # PR-1 per-device reference loop (benchmark baseline + parity oracle)
+    # ------------------------------------------------------------------
+    def run_period_reference(self) -> FleetPeriodStats:
+        """The pre-vectorization period loop: per-device padding/stripping,
+        sequential backpressure replans, per-device audit.  Kept as the
+        oracle the array-resident `run_period` is tested against and as the
+        baseline `benchmarks/fleet_bench.py` measures speedup over."""
         t = self._period
         self._period += 1
         arrivals = self.queue.poll(t)
@@ -241,10 +433,6 @@ class FleetEngine:
             sched = scheds[d]
             n_jobs += sched.instance.n
             total_acc += sched.total_accuracy
-            # ground truth: the device's BASE latencies times its true drift.
-            # Pricing with the (EMA-updated) belief instead would make the
-            # audit see the raw drift factor forever and inflate the belief
-            # geometrically; against the base, the belief converges.
             ed_wall = _ed_time_under(st.spec.profile, arrivals[d],
                                      sched.assignment) * st.spec.drift_at(t)
             es_wall = 0.0 if d in bumped else sched.es_makespan
@@ -259,6 +447,8 @@ class FleetEngine:
                 st.profile = new_profile
                 st.n_updates += 1
                 n_updates += 1
+                g, row = self._dev_slot[d]      # keep the stacks in sync
+                g.p_ed[row] = new_profile.p_ed
 
         stats = FleetPeriodStats(
             period=t, n_devices=len(self.devices), n_jobs=n_jobs,

@@ -6,10 +6,26 @@ Policy selection:
   * `policy=` override  -> greedy (baseline) | dual (beyond-paper fast
                            Lagrangian scheduler) | lp (bound only)
 
-Fleet scale: `plan_batch` plans N devices per period.  Same-shape instances
-share ONE vmapped, jitted LP solve (`core.amr2.amr2_batch`) instead of N
-sequential simplex runs — the per-device NumPy path stays available as the
-oracle (`backend="numpy"`).
+Fleet scale: `plan_batch` plans N devices per period.  With
+``backend="jax"`` every policy with a batched solver runs as a handful of
+jitted calls per period instead of N sequential solves:
+
+  ============  ==========================  ===========================
+  policy        scalar path (oracle)        batched path (one jit/group)
+  ============  ==========================  ===========================
+  amr2 / auto   NumPy simplex + rounding    `amr2_batch` (vmapped LP +
+                                            vectorized rounding)
+  amdp / auto   per-device CCKP DP          `amdp_batch` (vmapped DP;
+                                            `impl="pallas"` kernel route)
+  dual          NumPy bisection             `dual_schedule_batch` (vmapped
+                                            jitted bisection)
+  greedy        per-device greedy           (no batched path)
+  ============  ==========================  ===========================
+
+The per-device NumPy path stays available as the oracle
+(`backend="numpy"`).  `plan_batch_arrays` is the array-level variant the
+fleet engine uses: it takes an `InstanceBatch` and returns stacked
+assignments without materializing per-device Plan/Schedule objects.
 """
 from __future__ import annotations
 
@@ -19,17 +35,34 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core import (InstanceBatch, OffloadInstance, Schedule, amdp, amr2,
-                    amr2_batch, greedy_rra)
-from ..core.dual import dual_schedule
+from ..core import (InstanceBatch, OffloadInstance, Schedule, amdp,
+                    amdp_batch, amr2, amr2_batch, amr2_batch_arrays,
+                    greedy_rra)
+from ..core.amr2 import ST_FALLBACK, STATUS_NAMES
+from ..core.dual import dual_schedule, dual_schedule_batch_arrays
+from ..core.types import next_pow2
+
+_BATCHED_POLICIES = ("auto", "amr2", "amdp", "dual")
 
 
 @dataclasses.dataclass
 class Plan:
     schedule: Schedule
-    per_model: Dict[int, np.ndarray]   # model index -> job ids
     plan_seconds: float
     policy: str
+    # model index -> job ids; computed lazily — the fleet path never reads
+    # it, and eagerly materializing it costs m+1 np.nonzero scans per device
+    # per period.
+    _per_model: Optional[Dict[int, np.ndarray]] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def per_model(self) -> Dict[int, np.ndarray]:
+        if self._per_model is None:
+            a = self.schedule.assignment
+            self._per_model = {i: np.nonzero(a == i)[0]
+                               for i in range(self.schedule.instance.m + 1)}
+        return self._per_model
 
     @property
     def predicted_makespan(self) -> float:
@@ -57,25 +90,27 @@ def plan(instance: OffloadInstance, *, policy: str = "auto",
 
 
 def _wrap(sched: Schedule, plan_seconds: float, policy: str) -> Plan:
-    per_model = {i: np.nonzero(sched.assignment == i)[0]
-                 for i in range(sched.instance.m + 1)}
-    return Plan(schedule=sched, per_model=per_model,
-                plan_seconds=plan_seconds, policy=policy)
+    return Plan(schedule=sched, plan_seconds=plan_seconds, policy=policy)
+
+
+def _bucket_pad(group: "list") -> "list":
+    """Pad a group up to a power-of-two size by repeating its last element
+    so a fluctuating group size reuses one of O(log B) compiled programs."""
+    return group + [group[-1]] * (next_pow2(len(group)) - len(group))
 
 
 def plan_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
                policy: str = "auto", backend: str = "jax") -> List[Plan]:
     """Plan a whole fleet's period in as few solver calls as possible.
 
-    With ``backend="jax"`` and an AMR^2-compatible policy, instances are
-    grouped by (n, m) shape and each group is planned by ONE jitted
-    `jax.vmap` LP solve — a uniform fleet is a single jit call per period.
-    ``policy="auto"`` keeps the scalar planner's dispatch: identical-job
-    instances still go to the exact AMDP (per device — the DP has no
-    batched path yet) and only the heterogeneous rest is vmapped.
-    ``policy="amdp"`` and ``backend="numpy"`` fall back to the sequential
-    per-device path, which doubles as the oracle the vmapped path is
-    tested against.
+    With ``backend="jax"`` instances are grouped by (n, m) shape and each
+    group runs through the policy's batched solver (see the module policy
+    table) — one jitted call per shape group.  ``policy="auto"`` keeps the
+    scalar planner's dispatch: identical-job instances go to the exact AMDP
+    — now via the vmapped `amdp_batch` instead of per-device scalar solves
+    — and the heterogeneous rest to the vmapped AMR^2.  ``backend="numpy"``
+    falls back to the sequential per-device path, which doubles as the
+    oracle the batched paths are tested against.
 
     Returns one Plan per instance, in input order.  `plan_seconds` on each
     Plan is the group's solve time amortised over its members.
@@ -86,31 +121,119 @@ def plan_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
         insts = list(instances)
     if not insts:
         return []
-    if backend != "jax" or policy not in ("auto", "amr2"):
+    if backend != "jax" or policy not in _BATCHED_POLICIES:
         return [plan(i, policy=policy, backend=backend) for i in insts]
 
     plans: List[Optional[Plan]] = [None] * len(insts)
-    groups: Dict[tuple, List[int]] = {}
+    amdp_idxs: List[int] = []
+    amr2_groups: Dict[tuple, List[int]] = {}
+    dual_groups: Dict[tuple, List[int]] = {}
     for idx, inst in enumerate(insts):
-        if policy == "auto" and inst.is_identical():
-            plans[idx] = plan(inst, policy="auto", backend=backend)
-            continue
-        groups.setdefault((inst.n, inst.m), []).append(idx)
-    for idxs in groups.values():
+        if policy == "dual":
+            dual_groups.setdefault((inst.n, inst.m), []).append(idx)
+        elif policy in ("auto", "amdp") and inst.is_identical():
+            amdp_idxs.append(idx)
+        else:
+            amr2_groups.setdefault((inst.n, inst.m), []).append(idx)
+
+    if amdp_idxs:                     # vmapped DP, grouped/bucketed inside
         t0 = time.perf_counter()
-        group = [insts[i] for i in idxs]
-        # Pad the batch axis up to a power of two (repeating the last
-        # instance) so a fluctuating group size — zero-arrival or
-        # identical-job devices peel off to the scalar path above — reuses
-        # one of O(log B) compiled programs instead of retracing the
-        # vmapped simplex for every distinct B.
-        bucket = 1 << (len(group) - 1).bit_length()
-        batch = InstanceBatch.stack(group + [group[-1]] * (bucket - len(group)))
-        scheds = amr2_batch(batch)[:len(group)]
+        scheds = amdp_batch([insts[i] for i in amdp_idxs])
+        dt = (time.perf_counter() - t0) / len(amdp_idxs)
+        for i, sched in zip(amdp_idxs, scheds):
+            plans[i] = _wrap(sched, dt, "amdp")
+
+    for idxs in amr2_groups.values():
+        t0 = time.perf_counter()
+        group = _bucket_pad([insts[i] for i in idxs])
+        scheds = amr2_batch(InstanceBatch.stack(group))[:len(idxs)]
         dt = (time.perf_counter() - t0) / len(idxs)
         for i, sched in zip(idxs, scheds):
             plans[i] = _wrap(sched, dt, "amr2")
+
+    for idxs in dual_groups.values():
+        t0 = time.perf_counter()
+        group = _bucket_pad([insts[i] for i in idxs])
+        batch = InstanceBatch.stack(group)
+        assign, status = dual_schedule_batch_arrays(batch)
+        dt = (time.perf_counter() - t0) / len(idxs)
+        for k, i in enumerate(idxs):
+            sched = Schedule(assignment=assign[k], instance=insts[i],
+                             solver="dual",
+                             status="ok" if status[k] == 0 else "fallback")
+            plans[i] = _wrap(sched, dt, "dual")
     return plans  # type: ignore[return-value]
+
+
+# --------------------------------------------------------------------------
+# Array-level fleet path — no per-device Plan/Schedule objects
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetPlan:
+    """Stacked planning result for one same-shape device batch."""
+    assignment: np.ndarray    # (B, n) int64
+    status: np.ndarray        # (B,) int: ST_OK / ST_FALLBACK / ST_INFEASIBLE
+    solver: np.ndarray        # (B,) str
+    plan_seconds: float
+
+
+_SCALAR_STATUS = {name: code for code, name in enumerate(STATUS_NAMES)}
+
+
+def plan_batch_arrays(batch: InstanceBatch, *, policy: str = "auto",
+                      backend: str = "jax") -> FleetPlan:
+    """`plan_batch` for the fleet hot path: one `InstanceBatch` in, stacked
+    assignment arrays out.  ``backend="jax"`` dispatches whole sub-batches
+    to the batched solvers (identical-job devices to `amdp_batch`, the rest
+    to `amr2_batch_arrays` / `dual_schedule_batch_arrays`); the per-device
+    Python cost is O(1) apart from the O(m) AMDP backtracks.
+    ``backend="numpy"`` runs the scalar per-device oracle."""
+    t0 = time.perf_counter()
+    B, n = batch.p_es.shape
+    m = batch.m
+    assignment = np.zeros((B, n), dtype=np.int64)
+    status = np.zeros(B, dtype=np.int64)
+    solver = np.empty(B, dtype=object)
+
+    if backend != "jax" or policy not in _BATCHED_POLICIES:
+        for b in range(B):            # sequential oracle path
+            p = plan(batch[b], policy=policy, backend=backend)
+            assignment[b] = p.schedule.assignment
+            status[b] = _SCALAR_STATUS.get(p.schedule.status, ST_FALLBACK)
+            solver[b] = p.schedule.solver
+        return FleetPlan(assignment=assignment, status=status, solver=solver,
+                         plan_seconds=time.perf_counter() - t0)
+
+    if policy in ("auto", "amdp"):
+        ident = batch.identical_mask()
+    else:
+        ident = np.zeros(B, dtype=bool)
+
+    rest = np.nonzero(~ident)[0]
+    if ident.any():
+        idxs = np.nonzero(ident)[0]
+        scheds = amdp_batch([batch[int(b)] for b in idxs])
+        for b, sched in zip(idxs, scheds):
+            assignment[b] = sched.assignment
+            status[b] = _SCALAR_STATUS[sched.status]
+            solver[b] = "amdp"
+    if len(rest):
+        rows = np.concatenate(
+            [rest, np.repeat(rest[-1:], next_pow2(len(rest)) - len(rest))])
+        sub = InstanceBatch(p_ed=batch.p_ed[rows], p_es=batch.p_es[rows],
+                            acc=batch.acc[rows], T=batch.T[rows])
+        if policy == "dual":
+            assign, st = dual_schedule_batch_arrays(sub)
+            assignment[rest] = assign[:len(rest)]
+            status[rest] = st[:len(rest)]
+            solver[rest] = "dual"
+        else:
+            assign, st, _, _ = amr2_batch_arrays(sub)
+            assignment[rest] = assign[:len(rest)]
+            status[rest] = st[:len(rest)]
+            solver[rest] = "amr2"
+    return FleetPlan(assignment=assignment, status=status, solver=solver,
+                     plan_seconds=time.perf_counter() - t0)
 
 
 def replan_without_es(instance: OffloadInstance, **kw) -> Plan:
@@ -121,3 +244,67 @@ def replan_without_es(instance: OffloadInstance, **kw) -> Plan:
         p_es=np.full(instance.n, 1e9),
         acc=instance.acc.copy(), T=instance.T)
     return plan(crippled, **kw)
+
+
+def replan_without_es_batch(batch: InstanceBatch, *,
+                            real_mask: Optional[np.ndarray] = None,
+                            policy: str = "auto",
+                            backend: str = "jax") -> FleetPlan:
+    """Batched `replan_without_es`: ONE ES-disabled batched solve for every
+    bumped device instead of a Python loop of scalar replans.
+
+    `real_mask` (B, n) marks real jobs; phantom padding keeps p_es = 0 (free
+    everywhere, stripped later) while real jobs get the uniform huge
+    sentinel that makes offloading infeasible.
+
+    Policy dispatch mirrors the scalar `replan_without_es` (which plans the
+    *stripped* crippled instance): under ``auto``/``amdp``, devices whose
+    real jobs share processing times route to the exact `amdp_batch` on
+    their stripped instances — the crippled p_es is uniform, so this is
+    precisely the scalar planner's identical-job dispatch — and only the
+    heterogeneous rest goes through the batched AMR^2."""
+    if real_mask is None:
+        real_mask = np.ones(batch.p_es.shape, dtype=bool)
+    p_es = np.where(real_mask, 1e9, 0.0)
+    crippled = InstanceBatch(p_ed=batch.p_ed.copy(), p_es=p_es,
+                             acc=batch.acc.copy(), T=batch.T.copy())
+    if backend != "jax" or policy not in ("auto", "amdp"):
+        return plan_batch_arrays(crippled, policy=policy, backend=backend)
+
+    t0 = time.perf_counter()
+    B, n = crippled.p_es.shape
+    m = crippled.m
+    k = real_mask.sum(axis=1)
+    first = np.argmax(real_mask, axis=1)            # first real job index
+    ref_row = crippled.p_ed[np.arange(B), first]    # (B, m)
+    hetero = (~np.isclose(crippled.p_ed, ref_row[:, None, :], rtol=1e-9)
+              ).any(axis=2) & real_mask
+    ident = (k > 0) & ~hetero.any(axis=1)
+
+    assignment = np.zeros((B, n), dtype=np.int64)
+    status = np.zeros(B, dtype=np.int64)
+    solver = np.empty(B, dtype=object)
+    if ident.any():
+        idxs = np.nonzero(ident)[0]
+        stripped = [OffloadInstance(
+            p_ed=crippled.p_ed[b][real_mask[b]],
+            p_es=crippled.p_es[b][real_mask[b]],
+            acc=crippled.acc[b], T=float(crippled.T[b]))
+            for b in idxs]
+        for b, sched in zip(idxs, amdp_batch(stripped)):
+            row = np.full(n, m, dtype=np.int64)     # phantoms: free ES
+            row[real_mask[b]] = sched.assignment
+            assignment[b] = row
+            status[b] = _SCALAR_STATUS[sched.status]
+            solver[b] = "amdp"
+    rest = np.nonzero(~ident)[0]
+    if len(rest):
+        sub = InstanceBatch(p_ed=crippled.p_ed[rest],
+                            p_es=crippled.p_es[rest],
+                            acc=crippled.acc[rest], T=crippled.T[rest])
+        fp = plan_batch_arrays(sub, policy="amr2", backend="jax")
+        assignment[rest] = fp.assignment
+        status[rest] = fp.status
+        solver[rest] = fp.solver
+    return FleetPlan(assignment=assignment, status=status, solver=solver,
+                     plan_seconds=time.perf_counter() - t0)

@@ -1,0 +1,136 @@
+"""Batched-solver parity: `amdp_batch` vs the scalar CCKP DP and
+`dual_schedule_batch` vs the NumPy Lagrangian oracle — both must reproduce
+the per-device solvers bit-for-bit (same integerization, same tie-breaks),
+plus the `plan_batch` dual-policy routing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InstanceBatch, OffloadInstance, amdp, amdp_batch,
+                        dual_schedule, dual_schedule_batch, paper_instance,
+                        random_instance)
+from repro.serving import plan_batch
+
+RES = 1e-2  # identical-job times are exact multiples -> lossless DP grids
+M = 2       # fixed model count: every amdp_batch call shares one jit trace
+
+
+def _ident(seed, n=None):
+    """Identical jobs with integer-multiple times (as in test_amdp)."""
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(2, 9))
+    p_ed = np.sort(rng.integers(1, 30, size=M).astype(np.float64)) * RES
+    p_es = float(rng.integers(5, 40)) * RES
+    acc = np.sort(rng.uniform(0.2, 0.99, size=M + 1))
+    T = float(rng.integers(10, 120)) * RES
+    return OffloadInstance(p_ed=np.tile(p_ed, (n, 1)),
+                           p_es=np.full(n, p_es), acc=acc, T=T)
+
+
+# ---------------------------------------------------------------------------
+# amdp_batch vs scalar amdp
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_amdp_batch_matches_scalar(seed):
+    insts = [_ident(seed * 10 + i) for i in range(5)]
+    scheds = amdp_batch(insts, resolution=RES)
+    for sched, inst in zip(scheds, insts):
+        ref = amdp(inst, resolution=RES)
+        assert sched.status == ref.status
+        assert sched.solver == "amdp"
+        np.testing.assert_array_equal(sched.assignment, ref.assignment)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_amdp_batch_parity_property(seed):
+    insts = [_ident(seed + i) for i in range(4)]
+    scheds = amdp_batch(insts, resolution=RES)
+    for sched, inst in zip(scheds, insts):
+        np.testing.assert_array_equal(
+            sched.assignment, amdp(inst, resolution=RES).assignment)
+
+
+def test_amdp_batch_pallas_matches_scalar():
+    """impl="pallas" routes through the cckp_dp kernel (interpret mode off
+    TPU) with devices subgrouped by their static integerized p vector."""
+    shared = _ident(3, n=6)
+    other = _ident(11, n=6)           # different p -> different subgroup
+    insts = [shared, shared, other]
+    scheds = amdp_batch(insts, resolution=RES, impl="pallas")
+    for sched, inst in zip(scheds, insts):
+        np.testing.assert_array_equal(
+            sched.assignment, amdp(inst, resolution=RES).assignment)
+
+
+def test_amdp_batch_rejects_heterogeneous():
+    with pytest.raises(ValueError, match="identical"):
+        amdp_batch([paper_instance(6, T=1.5, seed=0)])
+
+
+def test_amdp_batch_accepts_instance_batch_and_all_es():
+    # p_es tiny -> Lemma 3 sends everything to the ES without touching the DP
+    inst = OffloadInstance(p_ed=np.tile([0.1], (4, 1)),
+                           p_es=np.full(4, 0.01),
+                           acc=np.array([0.5, 0.9]), T=1.0)
+    batch = InstanceBatch.stack([inst, inst])
+    for sched in amdp_batch(batch):
+        assert (sched.assignment == 1).all()
+        assert sched.status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# dual_schedule_batch vs NumPy dual_schedule
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_dual_batch_matches_numpy_oracle(seed):
+    insts = [random_instance(10, 3, T=0.4 + 0.2 * b, seed=seed * 7 + b)
+             for b in range(5)]
+    scheds = dual_schedule_batch(insts)
+    for sched, inst in zip(scheds, insts):
+        ref = dual_schedule(inst)
+        assert sched.status == ref.status
+        np.testing.assert_array_equal(sched.assignment, ref.assignment)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_dual_batch_parity_property(seed):
+    insts = [random_instance(10, 3, T=0.3 + 0.3 * b, seed=seed + b)
+             for b in range(4)]
+    for sched, inst in zip(dual_schedule_batch(insts), insts):
+        ref = dual_schedule(inst)
+        assert sched.status == ref.status
+        np.testing.assert_array_equal(sched.assignment, ref.assignment)
+
+
+def test_dual_batch_fallback_branch_matches():
+    """Tiny T: even the harshest multiplier fails -> fastest-model fallback,
+    same as the NumPy path."""
+    insts = [random_instance(10, 3, T=1e-6, seed=s) for s in range(4)]
+    for sched, inst in zip(dual_schedule_batch(insts), insts):
+        ref = dual_schedule(inst)
+        assert sched.status == ref.status == "fallback"
+        np.testing.assert_array_equal(sched.assignment, ref.assignment)
+
+
+# ---------------------------------------------------------------------------
+# plan_batch policy routing for the new batched paths
+# ---------------------------------------------------------------------------
+def test_plan_batch_dual_policy_matches_oracle():
+    insts = [paper_instance(10, T=1.2, seed=s) for s in range(5)]
+    plans = plan_batch(insts, policy="dual", backend="jax")
+    oracle = plan_batch(insts, policy="dual", backend="numpy")
+    for p, o in zip(plans, oracle):
+        assert p.policy == "dual" and p.schedule.solver == "dual"
+        np.testing.assert_array_equal(p.schedule.assignment,
+                                      o.schedule.assignment)
+
+
+def test_plan_batch_auto_routes_identical_through_amdp_batch():
+    mix = [_ident(1, n=6), _ident(2, n=6), paper_instance(6, T=1.5, seed=0)]
+    plans = plan_batch(mix, policy="auto", backend="jax")
+    assert [p.policy for p in plans] == ["amdp", "amdp", "amr2"]
+    for p, inst in zip(plans[:2], mix[:2]):
+        np.testing.assert_array_equal(
+            p.schedule.assignment, amdp(inst, resolution=1e-3).assignment)

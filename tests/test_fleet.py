@@ -8,7 +8,8 @@ from repro.core import (InstanceBatch, OffloadInstance, amr2, amr2_batch,
                         solve_lp_batch)
 from repro.serving import (DeviceSpec, EdgeServerPool, FleetEngine,
                            RequestQueue, TierProfile, make_fleet, plan,
-                           plan_batch)
+                           plan_batch, replan_without_es,
+                           replan_without_es_batch)
 from repro.serving.fleet import _padded_instance, _strip_phantoms
 
 # one (B, n, m) shape shared across the jax-path tests -> a single jit trace
@@ -309,6 +310,126 @@ def test_fleet_rejects_bad_class_tables():
     with pytest.raises(ValueError, match="ascending"):
         FleetEngine([DeviceSpec(profile=unsorted)],
                     RequestQueue(1, (128, 512)), T=0.5)
+
+
+def test_batched_backpressure_replan_matches_sequential():
+    """The single batched ES-disabled solve must match the sequential
+    `replan_without_es` loop device-for-device."""
+    insts = _fleet_instances(seed=50)
+    batch = InstanceBatch.stack(insts)
+    fp = replan_without_es_batch(batch, policy="amr2")
+    for b, inst in enumerate(insts):
+        ref = replan_without_es(inst, policy="amr2")
+        assert (fp.assignment[b] < inst.m).all()        # everything on ED
+        got_acc = float(inst.acc[fp.assignment[b]].sum())
+        assert got_acc == pytest.approx(
+            ref.schedule.total_accuracy, abs=1e-6)
+        ed = float(inst.p_ed[np.arange(inst.n), fp.assignment[b]].sum())
+        assert ed == pytest.approx(ref.schedule.ed_makespan, abs=1e-9)
+
+
+def test_batched_backpressure_replan_with_phantom_padding():
+    """Phantom rows keep p_es = 0 (not the huge sentinel) and real-job
+    decisions match the stripped sequential replan."""
+    insts = _fleet_instances(seed=60)
+    k = N - 2                          # last two jobs of each row = phantoms
+    p_ed = np.stack([i.p_ed for i in insts])
+    p_es = np.stack([i.p_es for i in insts])
+    p_ed[:, k:] = 0.0
+    p_es[:, k:] = 0.0
+    batch = InstanceBatch(p_ed=p_ed, p_es=p_es,
+                          acc=np.stack([i.acc for i in insts]),
+                          T=np.array([i.T for i in insts]))
+    mask = np.zeros((B, N), dtype=bool)
+    mask[:, :k] = True
+    fp = replan_without_es_batch(batch, real_mask=mask, policy="amr2")
+    for b, inst in enumerate(insts):
+        stripped = OffloadInstance(p_ed=inst.p_ed[:k], p_es=inst.p_es[:k],
+                                   acc=inst.acc, T=inst.T)
+        ref = replan_without_es(stripped, policy="amr2")
+        assert (fp.assignment[b, :k] < inst.m).all()
+        got_acc = float(inst.acc[fp.assignment[b, :k]].sum())
+        assert got_acc == pytest.approx(
+            ref.schedule.total_accuracy, abs=1e-6)
+
+
+def test_batched_replan_auto_routes_identical_through_amdp():
+    """Under policy="auto" the batched replan must keep the scalar
+    dispatch: identical-job devices get the exact DP, bit-identical to the
+    sequential `replan_without_es`."""
+    from repro.core import identical_instance
+    insts = [identical_instance(N, M, T=1.0 + 0.1 * s, seed=s)
+             for s in range(B)]
+    batch = InstanceBatch.stack(insts)
+    fp = replan_without_es_batch(batch, policy="auto")
+    assert all(s == "amdp" for s in fp.solver)
+    for b, inst in enumerate(insts):
+        ref = replan_without_es(inst, policy="auto")
+        assert ref.schedule.solver == "amdp"
+        np.testing.assert_array_equal(fp.assignment[b],
+                                      ref.schedule.assignment)
+
+
+def test_vectorized_engine_matches_reference_loop_jax():
+    """Jax-backend engine parity: single-class arrivals make every bumped
+    device's stripped instance identical-job, so this exercises the
+    batched AMDP replan dispatch against the reference loop."""
+    def build():
+        specs = [DeviceSpec(profile=_profile()) for _ in range(4)]
+        q = RequestQueue(4, (64,), rate=6.0, batch_max=N, seed=2)
+        return FleetEngine(specs, q, n_servers=1, T=0.5, backend="jax")
+
+    vec, ref = build(), build()
+    for period in range(3):
+        sv = vec.run_period()
+        sr = ref.run_period_reference()
+        for f in ("n_jobs", "n_violations", "n_offloading",
+                  "n_backpressured", "n_outage", "n_straggler_updates",
+                  "backlog"):
+            assert getattr(sv, f) == getattr(sr, f), (period, f)
+        assert sv.total_accuracy == pytest.approx(sr.total_accuracy,
+                                                  abs=1e-6)
+    assert sum(s.n_backpressured for s in vec.history) > 0
+
+
+def test_vectorized_engine_matches_reference_loop():
+    """The array-resident `run_period` must reproduce the PR-1 per-device
+    reference loop stat-for-stat (numpy backend: both sides use the same
+    scalar solvers, so the comparison isolates the vectorized assembly,
+    admission, pricing, and audit bookkeeping)."""
+    def build():
+        specs = make_fleet(6, seed=3, horizon=8)
+        q = RequestQueue(6, (128, 512, 1024), rate=8.0, batch_max=8, seed=3)
+        return FleetEngine(specs, q, n_servers=1, T=1.2, backend="numpy")
+
+    vec, ref = build(), build()
+    for period in range(4):
+        sv = vec.run_period()
+        sr = ref.run_period_reference()
+        for f in ("n_jobs", "n_violations", "n_offloading",
+                  "n_backpressured", "n_outage", "n_straggler_updates",
+                  "backlog", "n_devices"):
+            assert getattr(sv, f) == getattr(sr, f), (period, f)
+        assert sv.total_accuracy == pytest.approx(sr.total_accuracy,
+                                                  abs=1e-9)
+        assert sv.worst_violation == pytest.approx(sr.worst_violation,
+                                                   abs=1e-9)
+        assert sv.es_utilization == pytest.approx(sr.es_utilization,
+                                                  abs=1e-12)
+    # the straggler audits must have produced identical beliefs
+    for dv, dr in zip(vec.devices, ref.devices):
+        np.testing.assert_allclose(dv.profile.p_ed, dr.profile.p_ed,
+                                   rtol=1e-12)
+
+
+def test_engine_jax_dual_policy_runs():
+    specs = [DeviceSpec(profile=_profile()) for _ in range(4)]
+    q = RequestQueue(4, (64,), rate=6.0, batch_max=N, seed=1)
+    eng = FleetEngine(specs, q, n_servers=1, T=0.5, backend="jax",
+                      policy="dual")
+    stats = eng.run(2)
+    assert all(s.n_jobs >= 0 for s in stats)
+    assert eng.summary()["periods"] == 2
 
 
 def test_make_fleet_is_heterogeneous():
