@@ -95,56 +95,56 @@ def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0):
 
 
 def parity():
-    """Batched vmapped planners vs per-device NumPy/scalar oracles."""
-    from repro.core import (InstanceBatch, amdp, amr2_batch, dual_schedule,
-                            dual_schedule_batch, identical_instance)
-    from repro.core.amdp import amdp_batch
-    from repro.serving import plan_batch
+    """Batched registry solves vs per-device NumPy/scalar oracles — every
+    path goes through `repro.api.solve`, the single front door."""
+    from repro import api
+    from repro.core import InstanceBatch, identical_instance
 
     insts, T = _parity_instances()
-    batch = InstanceBatch.stack(insts)
-    amr2_batch(batch)                                   # compile once
+    fp = api.FleetProblem.from_batch(InstanceBatch.stack(insts))
+    api.solve(fp, policy="amr2")                        # compile once
     t0 = time.perf_counter()
-    scheds = amr2_batch(batch)                          # ONE jit call
+    sol = api.solve(fp, policy="amr2")                  # ONE jit call
     batched_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    oracle = plan_batch(insts, backend="numpy")         # sequential simplex
+    oracle = api.solve(fp, policy="amr2", backend="numpy")  # seq. simplex
     oracle_s = time.perf_counter() - t0
 
-    max_gap = 0.0
-    for sched, op in zip(scheds, oracle):
-        gap = abs(sched.total_accuracy - op.schedule.total_accuracy)
-        max_gap = max(max_gap, gap)
-        assert gap <= 1e-6, \
-            f"batched/oracle accuracy mismatch: {gap:.2e}"
-        assert sched.makespan <= 2 * T + 1e-9, \
-            f"2T guarantee violated: {sched.makespan:.3f} > {2 * T}"
+    gaps = np.abs(sol.accuracy - oracle.accuracy)
+    max_gap = float(gaps.max())
+    assert max_gap <= 1e-6, \
+        f"batched/oracle accuracy mismatch: {max_gap:.2e}"
+    assert float(np.max(sol.makespan)) <= 2 * T + 1e-9, \
+        f"2T guarantee violated: {float(np.max(sol.makespan)):.3f} > {2 * T}"
 
     # --- dual: batched jitted bisection vs NumPy oracle, bit-identical ---
-    dual_schedule_batch(batch)                          # compile once
+    api.solve(fp, policy="dual")                        # compile once
     t0 = time.perf_counter()
-    dual_scheds = dual_schedule_batch(batch)
+    dual_sol = api.solve(fp, policy="dual")
     dual_batched_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    dual_oracle = [dual_schedule(inst) for inst in insts]
+    dual_oracle = api.solve(fp, policy="dual", backend="numpy")
     dual_oracle_s = time.perf_counter() - t0
-    for sched, op in zip(dual_scheds, dual_oracle):
-        np.testing.assert_array_equal(sched.assignment, op.assignment)
+    np.testing.assert_array_equal(dual_sol.assignment,
+                                  dual_oracle.assignment)
 
     # --- amdp: vmapped CCKP DP vs scalar DP, bit-identical ---------------
     ident = [identical_instance(PARITY_JOBS, 2, T=1.0 + 0.05 * (s % 8),
                                 seed=s) for s in range(PARITY_DEVICES)]
-    amdp_batch(ident)                                   # compile once
+    ident_fp = api.FleetProblem.from_batch(InstanceBatch.stack(ident))
+    api.solve(ident_fp, policy="amdp")                  # compile once
     t0 = time.perf_counter()
-    amdp_scheds = amdp_batch(ident)
+    amdp_sol = api.solve(ident_fp, policy="amdp")
     amdp_batched_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    amdp_oracle = [amdp(inst) for inst in ident]
+    amdp_oracle = api.solve(ident_fp, policy="amdp", backend="numpy")
     amdp_oracle_s = time.perf_counter() - t0
-    for sched, op in zip(amdp_scheds, amdp_oracle):
-        assert sched.status == op.status
-        np.testing.assert_array_equal(sched.assignment, op.assignment)
+    assert (np.atleast_1d(amdp_sol.solver) == "amdp").all()
+    np.testing.assert_array_equal(np.asarray(amdp_sol.status),
+                                  np.asarray(amdp_oracle.status))
+    np.testing.assert_array_equal(amdp_sol.assignment,
+                                  amdp_oracle.assignment)
 
     n = len(insts)
     _record("parity", {
@@ -178,12 +178,11 @@ def parity():
 
 
 def _engine(n_devices: int, *, policy: str = "auto", seed: int = 7):
-    from repro.serving import FleetEngine, RequestQueue, make_fleet
-    specs = make_fleet(n_devices, seed=seed, horizon=SCALE_PERIODS)
-    queue = RequestQueue(n_devices, (128, 512, 1024), rate=10.0,
-                         batch_max=PARITY_JOBS, seed=seed)
-    return FleetEngine(specs, queue, n_servers=max(1, n_devices // 16),
-                       T=1.2, policy=policy)
+    from repro.serving import FleetConfig, FleetEngine
+    return FleetEngine.from_config(FleetConfig(
+        n_devices=n_devices, T=1.2, n_servers=max(1, n_devices // 16),
+        policy=policy, rate=10.0, batch_max=PARITY_JOBS,
+        horizon=SCALE_PERIODS, seed=seed))
 
 
 def scaling():
@@ -238,9 +237,9 @@ def speedup():
       * *path speedup* — the new hot path (vectorized engine, amr2 or
         dual) against the PR-1 serving configuration
         (`run_period_reference`, policy "auto"), the number the ROADMAP
-        tracks.  The reference loop's `plan_batch` itself already benefits
-        from this PR's batched solvers, so this UNDERSTATES the gain over
-        the literal PR-1 code.
+        tracks.  The reference loop's `solve_many` itself already benefits
+        from the batched solvers, so this UNDERSTATES the gain over the
+        literal PR-1 code.
     """
     n = int(os.environ.get("FLEET_BENCH_SPEEDUP_DEVICES", _BIG))
     periods = _periods(n)

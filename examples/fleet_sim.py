@@ -3,10 +3,13 @@
     PYTHONPATH=src python examples/fleet_sim.py --devices 64 --periods 20 \
         [--servers 2] [--rate 10] [--batch-max 12] [--t 1.2] [--seed 0]
 
-Every period the whole fleet is planned by ONE vmapped LP solve
-(`serving.plan_batch`); devices that lose the ES-capacity admission race
-replan onto their local model ladder, drifting devices trigger the EMA
-straggler audit, and per-device ES-link outages are planned around.
+The whole run is described by ONE declarative `FleetConfig`
+(`FleetEngine.from_config`): every period the fleet is planned by a
+handful of batched registry solves (`repro.api.solve` on per-shape-group
+`FleetProblem`s); devices that lose the ES-capacity admission race replan
+onto their local model ladder in one batched ES-disabled solve, drifting
+devices trigger the EMA straggler audit, and per-device ES-link outages
+are planned around.
 """
 from __future__ import annotations
 
@@ -25,15 +28,15 @@ def main(argv=None):
     ap.add_argument("--policy", default="auto")
     args = ap.parse_args(argv)
 
-    from repro.serving import FleetEngine, RequestQueue, make_fleet
+    from repro.serving import FleetConfig, FleetEngine
 
-    specs = make_fleet(args.devices, seed=args.seed,
-                       horizon=max(args.periods, 2))
-    queue = RequestQueue(args.devices, (128, 512, 1024), rate=args.rate,
-                         batch_max=args.batch_max, seed=args.seed)
-    engine = FleetEngine(specs, queue, n_servers=args.servers, T=args.t,
-                         policy=args.policy)
+    config = FleetConfig(
+        n_devices=args.devices, T=args.t, n_servers=args.servers,
+        policy=args.policy, rate=args.rate, batch_max=args.batch_max,
+        horizon=max(args.periods, 2), seed=args.seed)
+    engine = FleetEngine.from_config(config)
 
+    specs = [st.spec for st in engine.devices]
     print(f"[fleet] {args.devices} devices ({sum(1 for s in specs if s.drift is not None)}"
           f" stragglers, {sum(1 for s in specs if s.outage is not None)} flaky links)"
           f" | {args.servers} ES servers | T={args.t}s")

@@ -11,8 +11,8 @@ from repro.configs import get_smoke_config
 from repro.core import paper_instance
 from repro.launch.steps import make_train_step
 from repro.models import decode_step, init_params, prefill
+from repro.api import solve
 from repro.optim import adamw_init
-from repro.serving import plan
 
 
 def main():
@@ -42,9 +42,9 @@ def main():
 
     # 4. the paper: plan a batch of 30 inference jobs under a 2 s budget
     inst = paper_instance(30, T=2.0, seed=0)
-    p = plan(inst)
-    print(f"offload plan [{p.policy}]: {p.schedule.summary()}")
-    print(f"jobs per model: {p.schedule.counts()}  "
+    sol = solve(inst)                   # registry front door, policy="auto"
+    print(f"offload plan [{sol.solver}]: {sol.to_schedule().summary()}")
+    print(f"jobs per model: {sol.to_schedule().counts()}  "
           f"(last = offloaded to ES tier)")
 
 

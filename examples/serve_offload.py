@@ -20,13 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_edge import CONFIG as ES_CFG, ED_VARIANTS
-from repro.core import OffloadInstance
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.steps import make_train_step
 from repro.models import forward, init_params, logits_from_h
 from repro.optim import adamw_init
-from repro.serving import (ServingRuntime, TierProfile, execute,
-                           measure_latency, plan)
+from repro.api import solve
+from repro.serving import ServingRuntime, TierProfile, measure_latency
 
 
 def build_models(seed: int = 0, train_steps: int = 30):
@@ -112,14 +111,14 @@ def main():
     for tf in (0.3, 0.6, 1.0, 1.6):
         T = base_T * tf
         inst = profile.instance(np.full(n, 64), T)
-        p = plan(inst, policy="amr2")
-        g = plan(inst, policy="greedy")
-        d = plan(inst, policy="dual")
-        print(f"{T:8.3f} {p.policy:>7} {p.schedule.total_accuracy:7.2f} "
-              f"{(p.schedule.lp_accuracy or 0):7.2f} "
-              f"{g.schedule.total_accuracy:8.2f} "
-              f"{d.schedule.total_accuracy:7.2f}  "
-              f"{p.schedule.counts().tolist()}")
+        p = solve(inst, policy="amr2")
+        g = solve(inst, policy="greedy")
+        d = solve(inst, policy="dual")
+        print(f"{T:8.3f} {p.solver:>7} {p.accuracy:7.2f} "
+              f"{float(p.lp_accuracy or 0):7.2f} "
+              f"{g.accuracy:8.2f} "
+              f"{d.accuracy:7.2f}  "
+              f"{p.to_schedule().counts().tolist()}")
 
     # the serving loop with failures + stragglers (Fig 6 + fault story)
     print(f"\n== period-T serving loop ==")

@@ -1,0 +1,56 @@
+"""CI smoke: run `examples/fleet_sim.py` against the unified `repro.api`
+surface and fail if any DeprecationWarning originates from a repo-internal
+call site.
+
+External callers may keep using the `serving.plan*` shims (they warn and
+delegate), but every internal path — the fleet engine, the executor, the
+runtime, the examples — must be on `repro.api` directly.  A warning whose
+frame lives under this repository therefore means a migration regression.
+
+    PYTHONPATH=src python scripts/smoke_fleet_api.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "examples"))
+
+
+def main() -> int:
+    import fleet_sim
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always", DeprecationWarning)
+        fleet_sim.main(["--devices", "16", "--periods", "4",
+                        "--servers", "1"])
+        fleet_sim.main(["--devices", "8", "--periods", "2",
+                        "--policy", "dual"])
+
+    # Only the repo's own code trees count as internal — an in-repo venv or
+    # vendored site-packages must not fail the gate on third-party warnings.
+    internal_trees = tuple(os.path.join(REPO, d) + os.sep
+                           for d in ("src", "examples", "benchmarks",
+                                     "scripts"))
+    internal = [
+        w for w in caught
+        if issubclass(w.category, DeprecationWarning)
+        and os.path.abspath(str(w.filename)).startswith(internal_trees)
+    ]
+    if internal:
+        print("\nFAIL: DeprecationWarning raised from repo-internal "
+              "call sites:", file=sys.stderr)
+        for w in internal:
+            print(f"  {w.filename}:{w.lineno}: {w.message}",
+                  file=sys.stderr)
+        return 1
+    print("\n[smoke] fleet_sim ran clean on repro.api "
+          f"({len(caught)} external/unrelated warnings ignored)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

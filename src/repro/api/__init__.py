@@ -1,0 +1,31 @@
+"""`repro.api` — the unified solver surface.
+
+One front door (`solve` / `solve_many`), one problem vocabulary
+(`Problem`, `FleetProblem` — JAX pytrees), one result type (`Solution`),
+and a capability-declaring registry (`register_solver`, `solvers`) that
+every planning algorithm plugs into:
+
+    >>> from repro import api
+    >>> sol = api.solve(api.Problem(p_ed, p_es, acc, T))        # auto
+    >>> sol = api.solve(fleet_problem, policy="dual")           # batched
+    >>> sol = api.solve(fleet_problem, es_disabled=True)        # replan
+    >>> api.solver_names()
+    ['amdp', 'amr2', 'dual', 'greedy', 'lp']
+
+The legacy `serving.plan*` entry points are deprecation shims over this
+module; new code (and every repo-internal call site) uses `api` directly.
+"""
+from ..core.problem import (ES_DISABLED_SENTINEL, SOLUTION_STATUS_NAMES,
+                            FleetProblem, Problem, Solution)
+from .front import batched_policies, solve, solve_many
+from .registry import (Solver, SolverInfo, get_solver, register_solver,
+                       solver_names, solver_table, solvers)
+from . import solvers as _builtin_solvers  # noqa: F401  (register entries)
+
+__all__ = [
+    "Problem", "FleetProblem", "Solution",
+    "SOLUTION_STATUS_NAMES", "ES_DISABLED_SENTINEL",
+    "solve", "solve_many", "batched_policies",
+    "Solver", "SolverInfo", "register_solver", "get_solver",
+    "solver_names", "solvers", "solver_table",
+]

@@ -1,0 +1,327 @@
+"""`solve` / `solve_many`: the single front door over the solver registry.
+
+Dispatch rules (the same table the legacy planner used, now in one place):
+
+  * ``policy="auto"`` — identical-job problems route to the exact AMDP,
+    heterogeneous ones to AMR²; a fleet is split by `identical_mask` and
+    each side goes through its solver's batched path in one call.
+  * ``policy=<name>`` — any registry entry (`repro.api.solver_names()`).
+    ``policy="amdp"`` on heterogeneous jobs falls back to AMR² (the DP's
+    precondition), mirroring the scalar planner.
+  * ``backend`` — ``"jax"`` (fleet default) runs each batched solver as a
+    handful of jitted calls; ``"numpy"`` (single-problem default) is the
+    sequential per-device oracle path.  A fleet solve with a non-batched
+    solver under ``backend="jax"`` raises instead of silently running
+    sequentially under a misleading tag.
+  * ``es_disabled=True`` — plan with offloading made infeasible (uniform
+    huge p_es on real jobs): the backpressure / ES-outage replan path.
+    Identical-job detection then looks at the *real* (non-phantom) jobs
+    only, exactly like the legacy batched replan.
+"""
+from __future__ import annotations
+
+import inspect
+import time
+from typing import Callable, Dict, List, Sequence, Union
+
+import numpy as np
+
+from ..core.problem import (ES_DISABLED_SENTINEL, FleetProblem, Problem,
+                            Solution)
+from ..core.types import InstanceBatch, OffloadInstance
+from . import solvers as _solvers          # noqa: F401  (populate registry)
+from .registry import get_solver, solver_names, solvers
+
+AnyProblem = Union[Problem, FleetProblem, OffloadInstance, InstanceBatch]
+
+
+def batched_policies() -> "tuple[str, ...]":
+    """Policies with a batched (one-jit-call-per-group) fleet path:
+    ``auto`` plus every registry entry declaring ``batched=True``.
+    Computed from the registry so new entries dispatch correctly."""
+    return ("auto",) + tuple(n for n, info in solvers().items()
+                             if info.batched)
+
+
+def _fallback_name(policy: str) -> str:
+    """The solver handling a fleet's non-identical rows: AMR² complements
+    the ``auto``/``amdp`` identical-job split; any other named batched
+    solver handles its whole fleet itself."""
+    return "amr2" if policy in ("auto", "amdp") else policy
+
+
+def _coerce(problem: AnyProblem) -> Union[Problem, FleetProblem]:
+    if isinstance(problem, (Problem, FleetProblem)):
+        return problem
+    if isinstance(problem, OffloadInstance):
+        return Problem.from_instance(problem)
+    if isinstance(problem, InstanceBatch):
+        return FleetProblem.from_batch(problem)
+    raise TypeError(
+        f"solve() wants a Problem/FleetProblem (or legacy OffloadInstance/"
+        f"InstanceBatch); got {type(problem).__name__}")
+
+
+def _filter_opts(fn: Callable, opts: Dict) -> Dict:
+    """Options ``fn`` accepts.  Dispatch may reroute a problem to a solver
+    other than the one named by ``policy`` (amdp→amr2 fallback, the auto
+    split, the es-disabled rest path); solver-specific options — e.g. the
+    DP's ``impl="pallas"`` — must not crash the rerouted call."""
+    if not opts:                          # hot path: no introspection cost
+        return opts
+    params = inspect.signature(fn).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD
+           for p in params.values()):
+        return opts
+    return {k: v for k, v in opts.items() if k in params}
+
+
+def _validate_opts(policy: str, opts: Dict) -> None:
+    """Typo guard: an explicitly named policy must accept every option on
+    at least one of its entry points (``auto`` opts are best-effort — each
+    dispatched solver takes the subset it understands)."""
+    if policy == "auto" or not opts:
+        return
+    solver = get_solver(policy)
+    accepted: set = set()
+    for meth in ("solve_one", "solve_fleet"):
+        fn = getattr(solver, meth, None)
+        if fn is not None:
+            accepted |= set(inspect.signature(fn).parameters)
+    unknown = set(opts) - accepted
+    if unknown:
+        raise TypeError(
+            f"solver {policy!r} does not accept option(s) "
+            f"{sorted(unknown)}")
+
+
+def solve(problem: AnyProblem, *, policy: str = "auto",
+          backend: str = None, es_disabled: bool = False,
+          **opts) -> Solution:
+    """Plan one `Problem` or a whole `FleetProblem` through the registry.
+
+    Returns a `Solution`; ``solution.plan_seconds`` is the wall time of the
+    whole call (fleet solves amortize internally)."""
+    problem = _coerce(problem)
+    _validate_opts(policy, opts)
+    if es_disabled and policy != "auto" \
+            and not get_solver(policy).info.supports_es_disabled:
+        raise ValueError(
+            f"solver {policy!r} declares supports_es_disabled=False; "
+            f"it cannot drive the backpressure/outage replan path")
+    if isinstance(problem, FleetProblem):
+        backend = backend or "jax"
+        if es_disabled:
+            return _solve_fleet_es_disabled(problem, policy, backend, **opts)
+        return _solve_fleet(problem, policy, backend, **opts)
+    backend = backend or "numpy"
+    if es_disabled:
+        problem = problem.es_disabled()
+    return _solve_one(problem, policy, backend, **opts)
+
+
+# --------------------------------------------------------------------------
+# single problem
+# --------------------------------------------------------------------------
+def _resolve_policy(problem: Problem, policy: str) -> str:
+    if policy == "auto":
+        policy = "amdp" if problem.is_identical() else "amr2"
+    if policy == "amdp" and not problem.is_identical():
+        policy = "amr2"                   # the DP's identical-jobs premise
+    return policy
+
+
+def _solve_one(problem: Problem, policy: str, backend: str,
+               **opts) -> Solution:
+    t0 = time.perf_counter()
+    solver = get_solver(_resolve_policy(problem, policy))
+    sol = solver.solve_one(problem, backend=backend,
+                           **_filter_opts(solver.solve_one, opts))
+    sol.plan_seconds = time.perf_counter() - t0
+    return sol
+
+
+# --------------------------------------------------------------------------
+# fleet problem (the array-resident hot path)
+# --------------------------------------------------------------------------
+def _check_fleet_policy(policy: str, backend: str) -> None:
+    if policy == "auto":
+        return
+    solver = get_solver(policy)           # unknown names raise here
+    if backend == "jax" and not solver.info.batched:
+        raise ValueError(
+            f"policy={policy!r} has no batched path; pass backend='numpy' "
+            f"for the sequential oracle (batched solvers: "
+            f"{[n for n in solver_names() if get_solver(n).info.batched]})")
+
+
+def _empty_solution(fleet: FleetProblem) -> Solution:
+    return Solution(problem=fleet,
+                    assignment=np.zeros((0, fleet.n), dtype=np.int64),
+                    status=np.zeros(0, dtype=np.int64),
+                    solver=np.empty(0, dtype=object))
+
+
+def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
+                 **opts) -> Solution:
+    t0 = time.perf_counter()
+    _check_fleet_policy(policy, backend)
+    B, n = fleet.p_es.shape
+    if B == 0:
+        return _empty_solution(fleet)
+
+    assignment = np.zeros((B, n), dtype=np.int64)
+    status = np.zeros(B, dtype=np.int64)
+    solver_tag = np.empty(B, dtype=object)
+
+    if backend != "jax" or policy not in batched_policies():
+        for b in range(B):                # sequential oracle path
+            sol = _solve_one(fleet[b], policy, backend, **opts)
+            assignment[b] = sol.assignment
+            status[b] = int(sol.status)
+            solver_tag[b] = sol.solver
+        return Solution(problem=fleet, assignment=assignment, status=status,
+                        solver=solver_tag,
+                        plan_seconds=time.perf_counter() - t0)
+
+    if policy in ("auto", "amdp"):
+        ident = fleet.identical_mask()
+    else:
+        ident = np.zeros(B, dtype=bool)
+
+    if ident.any():
+        idxs = np.nonzero(ident)[0]
+        amdp = get_solver("amdp")
+        sub = amdp.solve_fleet(fleet.take(idxs),
+                               **_filter_opts(amdp.solve_fleet, opts))
+        assignment[idxs] = sub.assignment
+        status[idxs] = sub.status
+        solver_tag[idxs] = "amdp"
+    rest = np.nonzero(~ident)[0]
+    if len(rest):
+        name = _fallback_name(policy)
+        solver = get_solver(name)
+        sub = solver.solve_fleet(fleet.take(rest),
+                                 **_filter_opts(solver.solve_fleet, opts))
+        assignment[rest] = sub.assignment
+        status[rest] = sub.status
+        solver_tag[rest] = name
+    return Solution(problem=fleet, assignment=assignment, status=status,
+                    solver=solver_tag,
+                    plan_seconds=time.perf_counter() - t0)
+
+
+def _solve_fleet_es_disabled(fleet: FleetProblem, policy: str, backend: str,
+                             **opts) -> Solution:
+    """ONE batched ES-disabled solve for a whole sub-fleet (backpressure /
+    outage): real jobs get the uniform huge p_es sentinel, phantom padding
+    stays free, and under ``auto``/``amdp`` devices whose *real* jobs share
+    processing times route to the exact DP on their stripped instances —
+    precisely the scalar planner's identical-job dispatch, since the
+    crippled p_es is uniform."""
+    mask = fleet.real_mask
+    p_es = np.where(mask, ES_DISABLED_SENTINEL, 0.0)
+    crippled = FleetProblem(p_ed=fleet.p_ed.copy(), p_es=p_es,
+                            acc=fleet.acc.copy(), T=fleet.T.copy(),
+                            real_mask=mask)
+    if backend != "jax" or policy not in ("auto", "amdp"):
+        return _solve_fleet(crippled, policy, backend, **opts)
+
+    t0 = time.perf_counter()
+    B, n = crippled.p_es.shape
+    m = crippled.m
+    k = mask.sum(axis=1)
+    first = np.argmax(mask, axis=1)                 # first real job index
+    ref_row = crippled.p_ed[np.arange(B), first]    # (B, m)
+    hetero = (~np.isclose(crippled.p_ed, ref_row[:, None, :], rtol=1e-9)
+              ).any(axis=2) & mask
+    ident = (k > 0) & ~hetero.any(axis=1)
+
+    assignment = np.zeros((B, n), dtype=np.int64)
+    status = np.zeros(B, dtype=np.int64)
+    solver_tag = np.empty(B, dtype=object)
+    if ident.any():
+        # stripped instances have differing real-job counts; amdp_batch
+        # pads/buckets its DP grids internally, so feed it directly
+        from ..core.amdp import amdp_batch
+        from .solvers import _STATUS_CODE
+        idxs = np.nonzero(ident)[0]
+        insts = [crippled.instance(int(b), strip=True) for b in idxs]
+        for b, sched in zip(idxs, amdp_batch(
+                insts, **_filter_opts(amdp_batch, opts))):
+            row = np.full(n, m, dtype=np.int64)     # phantoms: free ES
+            row[mask[b]] = sched.assignment
+            assignment[b] = row
+            status[b] = _STATUS_CODE[sched.status]
+            solver_tag[b] = "amdp"
+    rest = np.nonzero(~ident)[0]
+    if len(rest):
+        sub = _solve_fleet(crippled.take(rest), "amr2", "jax", **opts)
+        assignment[rest] = sub.assignment
+        status[rest] = sub.status
+        solver_tag[rest] = np.atleast_1d(sub.solver)
+    return Solution(problem=crippled, assignment=assignment, status=status,
+                    solver=solver_tag,
+                    plan_seconds=time.perf_counter() - t0)
+
+
+# --------------------------------------------------------------------------
+# many single problems (mixed shapes): the object-path batcher
+# --------------------------------------------------------------------------
+def solve_many(problems: Sequence[AnyProblem], *, policy: str = "auto",
+               backend: str = "jax", **opts) -> List[Solution]:
+    """Plan a sequence of (possibly mixed-shape) problems in as few solver
+    calls as possible: identical-job problems batch through the vmapped DP
+    regardless of shape, the rest group by (n, m) and run through their
+    solver's batched path once per group.  Returns one `Solution` per
+    problem, in input order; ``plan_seconds`` is the group's solve time
+    amortized over its members.  An empty sequence returns ``[]``."""
+    probs = [_coerce(p) for p in problems]
+    if any(isinstance(p, FleetProblem) for p in probs):
+        raise TypeError("solve_many wants single problems; pass a "
+                        "FleetProblem to solve() instead")
+    if not probs:
+        return []
+    _validate_opts(policy, opts)
+    _check_fleet_policy(policy, backend)
+    if backend != "jax" or policy not in batched_policies():
+        return [_solve_one(p, policy, backend, **opts) for p in probs]
+
+    sols: List[Solution] = [None] * len(probs)      # type: ignore
+    amdp_idxs: List[int] = []
+    groups: dict = {}
+    for idx, p in enumerate(probs):
+        if policy in ("auto", "amdp") and p.is_identical():
+            amdp_idxs.append(idx)
+        else:
+            groups.setdefault((_fallback_name(policy), p.n, p.m),
+                              []).append(idx)
+
+    if amdp_idxs:                 # vmapped DP, grouped/bucketed inside
+        from ..core.amdp import amdp_batch
+        t0 = time.perf_counter()
+        scheds = amdp_batch([probs[i].to_instance() for i in amdp_idxs],
+                            **_filter_opts(amdp_batch, opts))
+        dt = (time.perf_counter() - t0) / len(amdp_idxs)
+        for i, sched in zip(amdp_idxs, scheds):
+            sols[i] = Solution.from_schedule(sched, solver="amdp",
+                                             plan_seconds=dt,
+                                             problem=probs[i])
+
+    for (name, n, m), idxs in groups.items():
+        t0 = time.perf_counter()
+        sub = FleetProblem.from_problems([probs[i] for i in idxs], pad_to=n)
+        solver = get_solver(name)
+        fsol = solver.solve_fleet(sub,
+                                  **_filter_opts(solver.solve_fleet, opts))
+        dt = (time.perf_counter() - t0) / len(idxs)
+        for row, i in enumerate(idxs):
+            sols[i] = Solution(
+                problem=probs[i], assignment=fsol.assignment[row],
+                status=np.int64(fsol.status[row]), solver=name,
+                plan_seconds=dt,
+                lp_accuracy=(None if fsol.lp_accuracy is None
+                             else fsol.lp_accuracy[row]),
+                n_fractional=(None if fsol.n_fractional is None
+                              else fsol.n_fractional[row]))
+    return sols

@@ -1,0 +1,102 @@
+"""Solver registry: one named entry per planning algorithm.
+
+Every solver the repo implements — the paper's AMR² and AMDP, the greedy
+baseline, the beyond-paper dual scheduler, and the LP bound — registers
+itself here with a declared capability set, and `repro.api.solve` is the
+single front door that dispatches on those capabilities.  Adding a new
+scenario/algorithm is a ``@register_solver`` entry, not another
+``elif policy ==`` chain across the serving stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+from ..core.problem import FleetProblem, Problem, Solution
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverInfo:
+    """A registry entry's declared capabilities.
+
+    ``batched``, ``supports_es_disabled``, and ``bound_only`` are enforced
+    by the front door / engine; ``exact_on_identical`` is descriptive
+    metadata — `solve`'s ``auto`` routing currently pairs the paper's
+    AMDP/AMR² specifically (the DP's precondition is structural, not just
+    a quality claim), it does not yet generalize over this flag."""
+    name: str
+    batched: bool                 # has a solve_fleet (vmapped/jitted) path
+    exact_on_identical: bool      # optimal when all jobs share proc. times
+    supports_es_disabled: bool    # usable for backpressure/outage replans
+    bound_only: bool = False      # yields an upper bound, not a schedule
+    description: str = ""
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """What a registry entry must provide.
+
+    ``solve_one`` plans a single `Problem`.  Batched solvers additionally
+    implement ``solve_fleet`` over a same-shape `FleetProblem`; the front
+    door never calls ``solve_fleet`` on a solver whose info says
+    ``batched=False``.
+    """
+    info: SolverInfo
+
+    def solve_one(self, problem: Problem, *, backend: str = "numpy",
+                  **opts) -> Solution: ...
+
+    def solve_fleet(self, fleet: FleetProblem, **opts) -> Solution: ...
+
+
+_REGISTRY: Dict[str, Solver] = {}
+
+
+def register_solver(name: str, *, batched: bool, exact_on_identical: bool,
+                    supports_es_disabled: bool, bound_only: bool = False,
+                    description: str = "") -> Callable:
+    """Class decorator: instantiate and register a solver under ``name``."""
+    def deco(cls):
+        solver = cls()
+        solver.info = SolverInfo(
+            name=name, batched=batched,
+            exact_on_identical=exact_on_identical,
+            supports_es_disabled=supports_es_disabled,
+            bound_only=bound_only, description=description)
+        _REGISTRY[name] = solver
+        return cls
+    return deco
+
+
+def get_solver(name: str) -> Solver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (or policy='auto')") from None
+
+
+def solver_names() -> "list[str]":
+    return sorted(_REGISTRY)
+
+
+def solvers() -> Dict[str, SolverInfo]:
+    """name -> capabilities, for introspection and the README table."""
+    return {name: s.info for name, s in sorted(_REGISTRY.items())}
+
+
+def solver_table() -> str:
+    """The registry rendered as a markdown capability table."""
+    rows = ["| solver | batched | exact on identical | es-disabled | "
+            "description |",
+            "|--------|---------|--------------------|-------------|"
+            "-------------|"]
+    for name, info in solvers().items():
+        rows.append(
+            f"| `{name}` | {'yes' if info.batched else 'no'} "
+            f"| {'yes' if info.exact_on_identical else 'no'} "
+            f"| {'yes' if info.supports_es_disabled else 'no'} "
+            f"| {info.description}"
+            f"{' (bound only)' if info.bound_only else ''} |")
+    return "\n".join(rows)

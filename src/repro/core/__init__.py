@@ -1,6 +1,12 @@
 """The paper's contribution: offloading/assignment algorithms for inference
-jobs under a makespan budget (Fresa & Champati, 2021)."""
+jobs under a makespan budget (Fresa & Champati, 2021).
+
+`Problem`/`FleetProblem`/`Solution` are the pytree-registered API-level
+values consumed by `repro.api`; `OffloadInstance`/`InstanceBatch` are the
+validated NumPy containers the solver implementations work on."""
 from .types import OffloadInstance, InstanceBatch, Schedule
+from .problem import (Problem, FleetProblem, Solution,
+                      SOLUTION_STATUS_NAMES, ES_DISABLED_SENTINEL)
 from .lp import (solve_lp, solve_lp_batch, LPResult, BatchLPResult,
                  OPTIMAL, INFEASIBLE, UNBOUNDED)
 from .amr2 import (amr2, amr2_batch, amr2_batch_arrays, solve_lp_relaxation,
@@ -15,6 +21,8 @@ from .instances import (paper_instance, random_instance, identical_instance,
 
 __all__ = [
     "OffloadInstance", "InstanceBatch", "Schedule",
+    "Problem", "FleetProblem", "Solution",
+    "SOLUTION_STATUS_NAMES", "ES_DISABLED_SENTINEL",
     "solve_lp", "solve_lp_batch", "LPResult", "BatchLPResult",
     "OPTIMAL", "INFEASIBLE", "UNBOUNDED",
     "amr2", "amr2_batch", "amr2_batch_arrays", "solve_lp_relaxation",

@@ -1,3 +1,9 @@
+"""Serving layer: tier profiles, the period loop, and the fleet engine.
+
+Planning entry points live in `repro.api` (`solve`, `solve_many`, the
+solver registry); the legacy `plan*` names below are deprecation shims
+kept importable for external callers.
+"""
 from .profile import (TierProfile, measure_profiles, measure_latency,
                       comm_time, roofline_profile)
 from .planner import (FleetPlan, Plan, plan, plan_batch, plan_batch_arrays,
@@ -5,15 +11,23 @@ from .planner import (FleetPlan, Plan, plan, plan_batch, plan_batch_arrays,
 from .executor import ExecutionReport, execute
 from .runtime import ServingRuntime, PeriodStats, audit_profile
 from .queue import RequestQueue
-from .fleet import (DeviceSpec, EdgeServerPool, FleetEngine, FleetPeriodStats,
-                    make_fleet, paper_style_profile, roofline_style_profile)
+from .fleet import (DeviceSpec, EdgeServerPool, FleetConfig, FleetEngine,
+                    FleetPeriodStats, make_fleet, paper_style_profile,
+                    roofline_style_profile)
 
-__all__ = ["TierProfile", "measure_profiles", "measure_latency", "comm_time",
-           "roofline_profile",
-           "FleetPlan", "Plan", "plan", "plan_batch", "plan_batch_arrays",
-           "replan_without_es", "replan_without_es_batch",
-           "ExecutionReport", "execute",
-           "ServingRuntime", "PeriodStats", "audit_profile",
-           "RequestQueue",
-           "DeviceSpec", "EdgeServerPool", "FleetEngine", "FleetPeriodStats",
-           "make_fleet", "paper_style_profile", "roofline_style_profile"]
+__all__ = [
+    # profiles
+    "TierProfile", "measure_profiles", "measure_latency", "comm_time",
+    "roofline_profile",
+    # deprecated planner shims (see repro.api)
+    "FleetPlan", "Plan", "plan", "plan_batch", "plan_batch_arrays",
+    "replan_without_es", "replan_without_es_batch",
+    # execution + single-device runtime
+    "ExecutionReport", "execute",
+    "ServingRuntime", "PeriodStats", "audit_profile",
+    # traffic + fleet engine
+    "RequestQueue",
+    "DeviceSpec", "EdgeServerPool", "FleetConfig", "FleetEngine",
+    "FleetPeriodStats", "make_fleet", "paper_style_profile",
+    "roofline_style_profile",
+]

@@ -1,10 +1,11 @@
 """Tiered plan execution.
 
-Executes a Plan against real model apply fns (ED ladder + ES), tracking
-per-tier clocks with *measured* wall time — the quantity Fig. 6 of the
-paper compares against the predicted makespan.  Jobs routed to the same
-model run as one batched call (DESIGN.md records this deviation: the ILP's
-budget semantics are unchanged, p_ij is per-job amortized batch latency).
+Executes a planning result — a `repro.api.Solution` or a legacy `Plan` —
+against real model apply fns (ED ladder + ES), tracking per-tier clocks
+with *measured* wall time — the quantity Fig. 6 of the paper compares
+against the predicted makespan.  Jobs routed to the same model run as one
+batched call (DESIGN.md records this deviation: the ILP's budget semantics
+are unchanged, p_ij is per-job amortized batch latency).
 
 `es_fail=True` simulates an ES-tier outage mid-period: offloaded jobs
 bounce and the runtime replans them onto the ED ladder (paper's m-model
@@ -18,7 +19,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from .planner import Plan, plan, replan_without_es
+from ..api import Problem, solve
 
 
 @dataclasses.dataclass
@@ -34,9 +35,24 @@ class ExecutionReport:
         return max(self.ed_wall, self.es_wall)
 
 
-def execute(plan_: Plan, apply_ed: List[Callable], apply_es: Callable,
+def _instance_of(plan_):
+    """The planned instance, for a legacy `Plan` or an api `Solution`."""
+    if hasattr(plan_, "schedule"):            # legacy Plan
+        return plan_.schedule.instance
+    return plan_.problem.to_instance()        # api Solution
+
+
+def _predicted_makespan(plan_) -> float:
+    if hasattr(plan_, "schedule"):
+        return plan_.predicted_makespan
+    return float(plan_.makespan)
+
+
+def execute(plan_, apply_ed: List[Callable], apply_es: Callable,
             jobs: List[object], *, es_fail: bool = False,
             comm_simulator: Optional[Callable] = None) -> ExecutionReport:
+    """``plan_`` is a `repro.api.Solution` (preferred) or a legacy
+    `serving.Plan`; both expose the ``per_model`` routing this needs."""
     m = len(apply_ed)
     results: Dict[int, object] = {}
     ed_wall = 0.0
@@ -47,11 +63,10 @@ def execute(plan_: Plan, apply_ed: List[Callable], apply_es: Callable,
     if len(es_ids):
         if es_fail:
             # ES unreachable: replan the bounced jobs on the ED ladder
-            inst = plan_.schedule.instance
-            sub = inst.__class__(p_ed=inst.p_ed[es_ids],
-                                 p_es=inst.p_es[es_ids],
-                                 acc=inst.acc, T=inst.T)
-            fb = replan_without_es(sub)
+            inst = _instance_of(plan_)
+            sub = Problem(p_ed=inst.p_ed[es_ids], p_es=inst.p_es[es_ids],
+                          acc=inst.acc, T=inst.T)
+            fb = solve(sub, es_disabled=True)
             replanned = True
             for i in range(m):
                 ids = es_ids[fb.per_model.get(i, np.array([], np.int64))]
@@ -80,6 +95,6 @@ def execute(plan_: Plan, apply_ed: List[Callable], apply_es: Callable,
                 results[int(j)] = r
 
     return ExecutionReport(
-        predicted_makespan=plan_.predicted_makespan,
+        predicted_makespan=_predicted_makespan(plan_),
         ed_wall=ed_wall, es_wall=es_wall, results=results,
         replanned=replanned)

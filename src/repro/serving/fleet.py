@@ -11,15 +11,15 @@ away:
     period (Poisson or trace), up to the planning-window cap.
   * **Planning** — devices live as *stacked arrays* per shape group
     (belief/base latency profiles, accuracies): padded-instance assembly is
-    one masked gather per group, and the group plans via
-    `plan_batch_arrays` — vmapped AMR^2 / AMDP / dual solvers, no
-    per-device Schedule objects on the hot path.
+    one masked gather per group into a `FleetProblem`, and the group plans
+    via `repro.api.solve` — vmapped AMR^2 / AMDP / dual solvers from the
+    registry, no per-device Schedule objects on the hot path.
   * **ES capacity** — the pool offers `n_servers x T` seconds of service per
     period.  Each server's admitted offload demand must fit in T (the
     paper's constraint (2), per server).  Devices that lose the admission
     race are *backpressured*: they replan ED-only in ONE batched
-    ES-disabled solve (`replan_without_es_batch`) instead of a Python loop
-    of scalar replans.
+    ES-disabled solve (`api.solve(..., es_disabled=True)`) instead of a
+    Python loop of scalar replans.
   * **Stragglers** — each device's true speed drifts (`DeviceSpec.drift`);
     the engine audits measured vs predicted ED wall time with the same EMA
     rule as the single-device runtime (`runtime.audit_profile`), vectorized
@@ -48,16 +48,18 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..api import solve, solve_many
 from ..core.instances import (PAPER_ACC, PAPER_COMM, PAPER_P_ED,
                               PAPER_P_ES_PROC)
-from ..core.types import InstanceBatch, OffloadInstance, Schedule
-from .planner import (plan_batch, plan_batch_arrays, replan_without_es,
-                      replan_without_es_batch)
+from ..core.problem import ES_DISABLED_SENTINEL, FleetProblem, Problem
+from ..core.types import OffloadInstance, Schedule
 from .profile import TierProfile, roofline_profile
 from .queue import RequestQueue
 from .runtime import audit_profile
 
-_OUTAGE_ES = 1e9   # ES-link down: uniform huge p_es (replan_without_es trick)
+# ES-link down: uniform huge p_es, the same sentinel the api's es_disabled
+# path applies to real jobs
+_OUTAGE_ES = ES_DISABLED_SENTINEL
 
 
 @dataclasses.dataclass
@@ -197,8 +199,72 @@ def _strip_phantoms(padded: Schedule, k: int) -> Schedule:
                     status=padded.status, solver=padded.solver)
 
 
+@dataclasses.dataclass
+class FleetConfig:
+    """Declarative fleet-engine construction: the policy, the backpressure
+    behaviour (ES pool size), the traffic model, and the fleet composition
+    in one value — `FleetEngine.from_config` is the one-call equivalent of
+    the `make_fleet` + `RequestQueue` + `FleetEngine` recipe.
+
+    Pass ``devices`` to use an explicit fleet; otherwise a heterogeneous
+    `make_fleet(n_devices, ...)` fleet is generated from ``seed`` and the
+    composition fractions below."""
+
+    # engine
+    n_devices: int
+    T: float
+    n_servers: int = 1
+    policy: str = "auto"
+    backend: str = "jax"
+    straggler_threshold: float = 1.5
+    ema: float = 0.5
+    # traffic (RequestQueue)
+    classes: Sequence[int] = (128, 512, 1024)
+    rate: float = 10.0
+    batch_max: int = 12
+    trace: Optional[np.ndarray] = None
+    class_probs: Optional[Sequence[float]] = None
+    # fleet composition (make_fleet) — ignored when `devices` is given
+    devices: Optional[Sequence[DeviceSpec]] = None
+    roofline_frac: float = 0.5
+    straggler_frac: float = 0.25
+    outage_frac: float = 0.1
+    drift_mag: float = 3.0
+    horizon: int = 64
+    seed: int = 0
+
+    def build_devices(self) -> List[DeviceSpec]:
+        if self.devices is not None:
+            if len(self.devices) != self.n_devices:
+                raise ValueError(
+                    f"config names {self.n_devices} devices but "
+                    f"{len(self.devices)} DeviceSpecs were given")
+            return list(self.devices)
+        return make_fleet(self.n_devices, classes=self.classes,
+                          roofline_frac=self.roofline_frac,
+                          straggler_frac=self.straggler_frac,
+                          outage_frac=self.outage_frac,
+                          drift_mag=self.drift_mag, horizon=self.horizon,
+                          seed=self.seed)
+
+    def build_queue(self) -> RequestQueue:
+        return RequestQueue(self.n_devices, self.classes, rate=self.rate,
+                            batch_max=self.batch_max, seed=self.seed,
+                            trace=self.trace, class_probs=self.class_probs)
+
+
 class FleetEngine:
     """Drives the whole fleet, one period at a time."""
+
+    @classmethod
+    def from_config(cls, config: FleetConfig) -> "FleetEngine":
+        """Build the engine a `FleetConfig` describes (same fleet, queue,
+        and policy as the equivalent manual construction)."""
+        return cls(config.build_devices(), config.build_queue(),
+                   n_servers=config.n_servers, T=config.T,
+                   policy=config.policy, backend=config.backend,
+                   straggler_threshold=config.straggler_threshold,
+                   ema=config.ema)
 
     def __init__(self, devices: Sequence[DeviceSpec], queue: RequestQueue, *,
                  n_servers: int = 1, T: float, policy: str = "auto",
@@ -206,6 +272,21 @@ class FleetEngine:
                  ema: float = 0.5):
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
+        if policy != "auto":
+            from ..api import get_solver
+            info = get_solver(policy).info        # also rejects unknowns
+            if info.bound_only:
+                raise ValueError(
+                    f"policy={policy!r} is a bound-only solver; its "
+                    f"assignments need not satisfy the budgets, so it "
+                    f"cannot drive the serving engine")
+            if backend == "jax" and not info.batched:
+                # fail at construction, not deep inside period 0 after
+                # arrivals were already dequeued
+                raise ValueError(
+                    f"policy={policy!r} has no batched path; construct "
+                    f"the engine with backend='numpy' for the sequential "
+                    f"oracle loop")
         for d, spec in enumerate(devices):
             cls = np.asarray(spec.profile.classes)
             if cls.size > 1 and np.any(np.diff(cls) <= 0):
@@ -265,17 +346,15 @@ class FleetEngine:
                             dtype=np.float64, count=D_all)
 
         plan_seconds = 0.0
-        staged = []                   # (group, mask, batch, base, assign)
+        staged = []                   # (group, fleet_problem, base, assign)
         es_demand_all = np.zeros(D_all)
         for g in self._groups:
-            mask, batch, base = self._assemble(g, arrivals, outage, n_pad)
-            fp = plan_batch_arrays(batch, policy=self.policy,
-                                   backend=self.backend)
-            plan_seconds += fp.plan_seconds
-            assign = fp.assignment
-            es_demand_all[g.ids] = np.where(
-                mask & (assign == g.m), batch.p_es, 0.0).sum(axis=1)
-            staged.append((g, mask, batch, base, assign))
+            fp, base = self._assemble(g, arrivals, outage, n_pad)
+            sol = solve(fp, policy=self.policy, backend=self.backend)
+            plan_seconds += sol.plan_seconds
+            assign = sol.assignment
+            es_demand_all[g.ids] = sol.es_makespan
+            staged.append((g, fp, base, assign))
 
         # --- ES capacity: admit offload demand server by server ----------
         offl = np.nonzero(es_demand_all > 0)[0]     # O(offloaders) Python
@@ -286,27 +365,26 @@ class FleetEngine:
         admitted_mask[list(admitted)] = True
 
         # --- backpressure: ONE batched ES-disabled replan per group ------
-        for g, mask, batch, base, assign in staged:
+        for g, fp, base, assign in staged:
             rows = np.nonzero(np.isin(g.ids, bumped))[0]
             if not len(rows):
                 continue
             if self.backend == "jax":
-                sub = InstanceBatch(p_ed=batch.p_ed[rows],
-                                    p_es=batch.p_es[rows],
-                                    acc=batch.acc[rows], T=batch.T[rows])
-                fb = replan_without_es_batch(sub, real_mask=mask[rows],
-                                             policy=self.policy)
+                fb = solve(fp.take(rows), policy=self.policy,
+                           es_disabled=True)
                 plan_seconds += fb.plan_seconds
                 assign[rows] = fb.assignment
             else:                     # sequential oracle path (PR-1 exact)
                 t0 = time.perf_counter()
+                mask = fp.real_mask
                 for r in rows:
                     k = int(mask[r].sum())
-                    stripped = OffloadInstance(
-                        p_ed=batch.p_ed[r, :k], p_es=batch.p_es[r, :k],
-                        acc=batch.acc[r], T=self.T)
-                    fbp = replan_without_es(stripped, policy=self.policy)
-                    assign[r, :k] = fbp.schedule.assignment
+                    stripped = Problem(
+                        p_ed=fp.p_ed[r, :k], p_es=fp.p_es[r, :k],
+                        acc=fp.acc[r], T=self.T)
+                    fbp = solve(stripped, policy=self.policy,
+                                backend="numpy", es_disabled=True)
+                    assign[r, :k] = fbp.assignment
                 plan_seconds += time.perf_counter() - t0
 
         # --- vectorized pricing, accounting, and straggler audit ---------
@@ -315,16 +393,17 @@ class FleetEngine:
         worst_viol = 0.0
         n_viol = 0
         n_updates = 0
-        for g, mask, batch, base, assign in staged:
+        for g, fp, base, assign in staged:
             m = g.m
+            mask = fp.real_mask
             n_jobs += int(mask.sum())
-            acc_jobs = batch.acc[np.arange(len(g.ids))[:, None], assign]
+            acc_jobs = fp.acc[np.arange(len(g.ids))[:, None], assign]
             total_acc += float(np.where(mask, acc_jobs, 0.0).sum())
 
             on_ed = mask & (assign < m)
             picked = np.clip(assign, 0, m - 1)[..., None]
             ed_pred = np.where(
-                on_ed, np.take_along_axis(batch.p_ed, picked, axis=2)[..., 0],
+                on_ed, np.take_along_axis(fp.p_ed, picked, axis=2)[..., 0],
                 0.0).sum(axis=1)
             # ground truth: the device's BASE latencies times its true
             # drift.  Pricing with the (EMA-updated) belief instead would
@@ -366,9 +445,9 @@ class FleetEngine:
 
     def _assemble(self, g: _ShapeGroup, arrivals, outage: np.ndarray,
                   n_pad: int):
-        """One group's padded `InstanceBatch` as masked array gathers: no
+        """One group's padded `FleetProblem` as masked array gathers: no
         per-device instance objects, one searchsorted + fancy-index per
-        group.  Returns (real-job mask, batch, base ED latencies)."""
+        group.  Returns (fleet problem, base ED latencies)."""
         D = len(g.ids)
         lens = np.fromiter((len(arrivals[d]) for d in g.ids),
                            dtype=np.int64, count=D)
@@ -387,9 +466,9 @@ class FleetEngine:
         p_es[~mask] = 0.0
         base[~mask] = 0.0
         p_es[outage[g.ids][:, None] & mask] = _OUTAGE_ES
-        batch = InstanceBatch(p_ed=p_ed, p_es=p_es, acc=g.acc.copy(),
-                              T=np.full(D, self.T))
-        return mask, batch, base
+        fp = FleetProblem(p_ed=p_ed, p_es=p_es, acc=g.acc.copy(),
+                          T=np.full(D, self.T), real_mask=mask)
+        return fp, base
 
     # ------------------------------------------------------------------
     # PR-1 per-device reference loop (benchmark baseline + parity oracle)
@@ -408,10 +487,11 @@ class FleetEngine:
         padded = [_padded_instance(st.profile, arrivals[d], self.T, n_pad,
                                    disable_es=outages[d])
                   for d, st in enumerate(self.devices)]
-        plans = plan_batch(padded, policy=self.policy, backend=self.backend)
-        plan_seconds = sum(p.plan_seconds for p in plans)
-        scheds = [_strip_phantoms(p.schedule, len(arrivals[d]))
-                  for d, p in enumerate(plans)]
+        sols = solve_many([Problem.from_instance(p) for p in padded],
+                          policy=self.policy, backend=self.backend)
+        plan_seconds = sum(s.plan_seconds for s in sols)
+        scheds = [_strip_phantoms(s.to_schedule(), len(arrivals[d]))
+                  for d, s in enumerate(sols)]
 
         # --- ES capacity: admit offload demand server by server ----------
         demands = {d: s.es_makespan for d, s in enumerate(scheds)
@@ -419,8 +499,9 @@ class FleetEngine:
         admitted, loads = self.pool.admit(demands, self.T)
         bumped = sorted(set(demands) - set(admitted))
         for d in bumped:  # backpressure: replan ED-only (few devices)
-            fb = replan_without_es(scheds[d].instance, policy=self.policy)
-            scheds[d] = fb.schedule
+            fb = solve(Problem.from_instance(scheds[d].instance),
+                       policy=self.policy, es_disabled=True)
+            scheds[d] = fb.to_schedule()
             plan_seconds += fb.plan_seconds
 
         # --- simulated execution + straggler audit -----------------------

@@ -1,52 +1,73 @@
-"""Batch planner: the paper's algorithms as serving policies.
+"""DEPRECATED planner entry points — thin shims over `repro.api`.
 
-Policy selection:
-  * identical jobs      -> AMDP   (optimal, pseudo-poly; paper §VI)
-  * heterogeneous jobs  -> AMR^2  (2T / 2(a_max - a_min) guarantees; §IV-V)
-  * `policy=` override  -> greedy (baseline) | dual (beyond-paper fast
-                           Lagrangian scheduler) | lp (bound only)
+The four parallel entry points this module used to implement (`plan`,
+`plan_batch`, `plan_batch_arrays`, `replan_without_es`/`_batch`) are now
+one front door: ``repro.api.solve`` (single problem or `FleetProblem`)
+and ``repro.api.solve_many`` (mixed-shape sequences), dispatching through
+the solver registry.  Migration map:
 
-Fleet scale: `plan_batch` plans N devices per period.  With
-``backend="jax"`` every policy with a batched solver runs as a handful of
-jitted calls per period instead of N sequential solves:
+  ==============================  =====================================
+  legacy                          `repro.api`
+  ==============================  =====================================
+  ``plan(inst, policy=...)``      ``solve(Problem.from_instance(inst),
+                                  policy=...)``
+  ``plan_batch(insts)``           ``solve_many(insts)``
+  ``plan_batch_arrays(batch)``    ``solve(FleetProblem.from_batch(batch))``
+  ``replan_without_es(inst)``     ``solve(inst, es_disabled=True)``
+  ``replan_without_es_batch(b)``  ``solve(FleetProblem.from_batch(b,
+                                  real_mask), es_disabled=True)``
+  ==============================  =====================================
 
-  ============  ==========================  ===========================
-  policy        scalar path (oracle)        batched path (one jit/group)
-  ============  ==========================  ===========================
-  amr2 / auto   NumPy simplex + rounding    `amr2_batch` (vmapped LP +
-                                            vectorized rounding)
-  amdp / auto   per-device CCKP DP          `amdp_batch` (vmapped DP;
-                                            `impl="pallas"` kernel route)
-  dual          NumPy bisection             `dual_schedule_batch` (vmapped
-                                            jitted bisection)
-  greedy        per-device greedy           (no batched path)
-  ============  ==========================  ===========================
-
-The per-device NumPy path stays available as the oracle
-(`backend="numpy"`).  `plan_batch_arrays` is the array-level variant the
-fleet engine uses: it takes an `InstanceBatch` and returns stacked
-assignments without materializing per-device Plan/Schedule objects.
+Each shim emits a ``DeprecationWarning`` once per process and delegates;
+behaviour (dispatch table, bucketing, timings, return types) is unchanged.
+Repo-internal call sites use `repro.api` directly — CI runs the fleet
+example with these warnings promoted to errors for internal frames.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core import (InstanceBatch, OffloadInstance, Schedule, amdp,
-                    amdp_batch, amr2, amr2_batch, amr2_batch_arrays,
-                    greedy_rra)
-from ..core.amr2 import ST_FALLBACK, STATUS_NAMES
-from ..core.dual import dual_schedule, dual_schedule_batch_arrays
-from ..core.types import next_pow2
+from .. import api
+from ..core.problem import FleetProblem, Problem, Solution
+from ..core.types import InstanceBatch, OffloadInstance, Schedule
 
-_BATCHED_POLICIES = ("auto", "amr2", "amdp", "dual")
+_WARNED: set = set()
+
+
+def _deprecated(name: str, replacement: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"repro.serving.{name} is deprecated; use {replacement} "
+        f"(see repro.api)", DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make every shim warn again."""
+    _WARNED.clear()
+
+
+def _reject_bound_only(policy: str) -> None:
+    """The legacy planner never produced bound-only pseudo-schedules
+    (``plan(policy="lp")`` raised ValueError); keep that contract — legacy
+    callers sweeping policy names must not silently receive assignments
+    that need not satisfy the budgets.  New code wanting the LP bound uses
+    ``api.solve(..., policy="lp")`` explicitly."""
+    if policy != "auto" and api.get_solver(policy).info.bound_only:
+        raise ValueError(
+            f"policy {policy!r} is bound-only and was never a legacy "
+            f"planner policy; call repro.api.solve(..., policy={policy!r}) "
+            f"for the bound")
 
 
 @dataclasses.dataclass
 class Plan:
+    """Legacy single-device planning result (wraps a core `Schedule`)."""
     schedule: Schedule
     plan_seconds: float
     policy: str
@@ -69,242 +90,80 @@ class Plan:
         return self.schedule.makespan
 
 
-def plan(instance: OffloadInstance, *, policy: str = "auto",
-         backend: str = "numpy") -> Plan:
-    t0 = time.perf_counter()
-    if policy == "auto":
-        policy = "amdp" if instance.is_identical() else "amr2"
-    if policy == "amdp" and not instance.is_identical():
-        policy = "amr2"
-    if policy == "amr2":
-        sched = amr2(instance, backend=backend)
-    elif policy == "amdp":
-        sched = amdp(instance)
-    elif policy == "greedy":
-        sched = greedy_rra(instance)
-    elif policy == "dual":
-        sched = dual_schedule(instance)
-    else:
-        raise ValueError(policy)
-    return _wrap(sched, time.perf_counter() - t0, policy)
-
-
-def _wrap(sched: Schedule, plan_seconds: float, policy: str) -> Plan:
-    return Plan(schedule=sched, plan_seconds=plan_seconds, policy=policy)
-
-
-def _bucket_pad(group: "list") -> "list":
-    """Pad a group up to a power-of-two size by repeating its last element
-    so a fluctuating group size reuses one of O(log B) compiled programs."""
-    return group + [group[-1]] * (next_pow2(len(group)) - len(group))
-
-
-def plan_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
-               policy: str = "auto", backend: str = "jax") -> List[Plan]:
-    """Plan a whole fleet's period in as few solver calls as possible.
-
-    With ``backend="jax"`` instances are grouped by (n, m) shape and each
-    group runs through the policy's batched solver (see the module policy
-    table) — one jitted call per shape group.  ``policy="auto"`` keeps the
-    scalar planner's dispatch: identical-job instances go to the exact AMDP
-    — now via the vmapped `amdp_batch` instead of per-device scalar solves
-    — and the heterogeneous rest to the vmapped AMR^2.  ``backend="numpy"``
-    falls back to the sequential per-device path, which doubles as the
-    oracle the batched paths are tested against.
-
-    Returns one Plan per instance, in input order.  `plan_seconds` on each
-    Plan is the group's solve time amortised over its members.
-    """
-    if isinstance(instances, InstanceBatch):
-        insts = [instances[b] for b in range(len(instances))]
-    else:
-        insts = list(instances)
-    if not insts:
-        return []
-    if backend != "jax" or policy not in _BATCHED_POLICIES:
-        return [plan(i, policy=policy, backend=backend) for i in insts]
-
-    plans: List[Optional[Plan]] = [None] * len(insts)
-    amdp_idxs: List[int] = []
-    amr2_groups: Dict[tuple, List[int]] = {}
-    dual_groups: Dict[tuple, List[int]] = {}
-    for idx, inst in enumerate(insts):
-        if policy == "dual":
-            dual_groups.setdefault((inst.n, inst.m), []).append(idx)
-        elif policy in ("auto", "amdp") and inst.is_identical():
-            amdp_idxs.append(idx)
-        else:
-            amr2_groups.setdefault((inst.n, inst.m), []).append(idx)
-
-    if amdp_idxs:                     # vmapped DP, grouped/bucketed inside
-        t0 = time.perf_counter()
-        scheds = amdp_batch([insts[i] for i in amdp_idxs])
-        dt = (time.perf_counter() - t0) / len(amdp_idxs)
-        for i, sched in zip(amdp_idxs, scheds):
-            plans[i] = _wrap(sched, dt, "amdp")
-
-    for idxs in amr2_groups.values():
-        t0 = time.perf_counter()
-        group = _bucket_pad([insts[i] for i in idxs])
-        scheds = amr2_batch(InstanceBatch.stack(group))[:len(idxs)]
-        dt = (time.perf_counter() - t0) / len(idxs)
-        for i, sched in zip(idxs, scheds):
-            plans[i] = _wrap(sched, dt, "amr2")
-
-    for idxs in dual_groups.values():
-        t0 = time.perf_counter()
-        group = _bucket_pad([insts[i] for i in idxs])
-        batch = InstanceBatch.stack(group)
-        assign, status = dual_schedule_batch_arrays(batch)
-        dt = (time.perf_counter() - t0) / len(idxs)
-        for k, i in enumerate(idxs):
-            sched = Schedule(assignment=assign[k], instance=insts[i],
-                             solver="dual",
-                             status="ok" if status[k] == 0 else "fallback")
-            plans[i] = _wrap(sched, dt, "dual")
-    return plans  # type: ignore[return-value]
-
-
-# --------------------------------------------------------------------------
-# Array-level fleet path — no per-device Plan/Schedule objects
-# --------------------------------------------------------------------------
 @dataclasses.dataclass
 class FleetPlan:
-    """Stacked planning result for one same-shape device batch."""
+    """Legacy stacked planning result for one same-shape device batch."""
     assignment: np.ndarray    # (B, n) int64
     status: np.ndarray        # (B,) int: ST_OK / ST_FALLBACK / ST_INFEASIBLE
     solver: np.ndarray        # (B,) str
     plan_seconds: float
 
 
-_SCALAR_STATUS = {name: code for code, name in enumerate(STATUS_NAMES)}
+def _to_plan(sol: Solution) -> Plan:
+    return Plan(schedule=sol.to_schedule(), plan_seconds=sol.plan_seconds,
+                policy=sol.solver_name)
+
+
+def _to_fleet_plan(sol: Solution) -> FleetPlan:
+    return FleetPlan(assignment=sol.assignment,
+                     status=np.asarray(sol.status),
+                     solver=np.atleast_1d(sol.solver),
+                     plan_seconds=sol.plan_seconds)
+
+
+def plan(instance: OffloadInstance, *, policy: str = "auto",
+         backend: str = "numpy") -> Plan:
+    """Deprecated: use ``repro.api.solve``."""
+    _deprecated("plan", "api.solve(problem, policy=...)")
+    _reject_bound_only(policy)
+    return _to_plan(api.solve(Problem.from_instance(instance),
+                              policy=policy, backend=backend))
+
+
+def plan_batch(instances: Union[InstanceBatch, Sequence[OffloadInstance]], *,
+               policy: str = "auto", backend: str = "jax") -> List[Plan]:
+    """Deprecated: use ``repro.api.solve_many`` (or ``solve`` on a
+    `FleetProblem` for the array-level fleet path)."""
+    _deprecated("plan_batch", "api.solve_many(problems, policy=...)")
+    _reject_bound_only(policy)
+    if isinstance(instances, InstanceBatch):
+        insts = [instances[b] for b in range(len(instances))]
+    else:
+        insts = list(instances)
+    if not insts:
+        return []
+    sols = api.solve_many([Problem.from_instance(i) for i in insts],
+                          policy=policy, backend=backend)
+    return [_to_plan(s) for s in sols]
 
 
 def plan_batch_arrays(batch: InstanceBatch, *, policy: str = "auto",
                       backend: str = "jax") -> FleetPlan:
-    """`plan_batch` for the fleet hot path: one `InstanceBatch` in, stacked
-    assignment arrays out.  ``backend="jax"`` dispatches whole sub-batches
-    to the batched solvers (identical-job devices to `amdp_batch`, the rest
-    to `amr2_batch_arrays` / `dual_schedule_batch_arrays`); the per-device
-    Python cost is O(1) apart from the O(m) AMDP backtracks.
-    ``backend="numpy"`` runs the scalar per-device oracle."""
-    t0 = time.perf_counter()
-    B, n = batch.p_es.shape
-    m = batch.m
-    assignment = np.zeros((B, n), dtype=np.int64)
-    status = np.zeros(B, dtype=np.int64)
-    solver = np.empty(B, dtype=object)
-
-    if backend != "jax" or policy not in _BATCHED_POLICIES:
-        for b in range(B):            # sequential oracle path
-            p = plan(batch[b], policy=policy, backend=backend)
-            assignment[b] = p.schedule.assignment
-            status[b] = _SCALAR_STATUS.get(p.schedule.status, ST_FALLBACK)
-            solver[b] = p.schedule.solver
-        return FleetPlan(assignment=assignment, status=status, solver=solver,
-                         plan_seconds=time.perf_counter() - t0)
-
-    if policy in ("auto", "amdp"):
-        ident = batch.identical_mask()
-    else:
-        ident = np.zeros(B, dtype=bool)
-
-    rest = np.nonzero(~ident)[0]
-    if ident.any():
-        idxs = np.nonzero(ident)[0]
-        scheds = amdp_batch([batch[int(b)] for b in idxs])
-        for b, sched in zip(idxs, scheds):
-            assignment[b] = sched.assignment
-            status[b] = _SCALAR_STATUS[sched.status]
-            solver[b] = "amdp"
-    if len(rest):
-        rows = np.concatenate(
-            [rest, np.repeat(rest[-1:], next_pow2(len(rest)) - len(rest))])
-        sub = InstanceBatch(p_ed=batch.p_ed[rows], p_es=batch.p_es[rows],
-                            acc=batch.acc[rows], T=batch.T[rows])
-        if policy == "dual":
-            assign, st = dual_schedule_batch_arrays(sub)
-            assignment[rest] = assign[:len(rest)]
-            status[rest] = st[:len(rest)]
-            solver[rest] = "dual"
-        else:
-            assign, st, _, _ = amr2_batch_arrays(sub)
-            assignment[rest] = assign[:len(rest)]
-            status[rest] = st[:len(rest)]
-            solver[rest] = "amr2"
-    return FleetPlan(assignment=assignment, status=status, solver=solver,
-                     plan_seconds=time.perf_counter() - t0)
+    """Deprecated: use ``repro.api.solve`` on a `FleetProblem`."""
+    _deprecated("plan_batch_arrays",
+                "api.solve(FleetProblem.from_batch(batch), policy=...)")
+    _reject_bound_only(policy)
+    return _to_fleet_plan(api.solve(FleetProblem.from_batch(batch),
+                                    policy=policy, backend=backend))
 
 
 def replan_without_es(instance: OffloadInstance, **kw) -> Plan:
-    """ES-tier failure: the paper's m-model special case — force every job
-    onto the ED ladder by making offloading infeasible (p_es >> T)."""
-    crippled = OffloadInstance(
-        p_ed=instance.p_ed.copy(),
-        p_es=np.full(instance.n, 1e9),
-        acc=instance.acc.copy(), T=instance.T)
-    return plan(crippled, **kw)
+    """Deprecated: use ``repro.api.solve(..., es_disabled=True)``."""
+    _deprecated("replan_without_es", "api.solve(problem, es_disabled=True)")
+    return _to_plan(api.solve(Problem.from_instance(instance),
+                              es_disabled=True, **kw))
 
 
 def replan_without_es_batch(batch: InstanceBatch, *,
                             real_mask: Optional[np.ndarray] = None,
                             policy: str = "auto",
                             backend: str = "jax") -> FleetPlan:
-    """Batched `replan_without_es`: ONE ES-disabled batched solve for every
-    bumped device instead of a Python loop of scalar replans.
-
-    `real_mask` (B, n) marks real jobs; phantom padding keeps p_es = 0 (free
-    everywhere, stripped later) while real jobs get the uniform huge
-    sentinel that makes offloading infeasible.
-
-    Policy dispatch mirrors the scalar `replan_without_es` (which plans the
-    *stripped* crippled instance): under ``auto``/``amdp``, devices whose
-    real jobs share processing times route to the exact `amdp_batch` on
-    their stripped instances — the crippled p_es is uniform, so this is
-    precisely the scalar planner's identical-job dispatch — and only the
-    heterogeneous rest goes through the batched AMR^2."""
-    if real_mask is None:
-        real_mask = np.ones(batch.p_es.shape, dtype=bool)
-    p_es = np.where(real_mask, 1e9, 0.0)
-    crippled = InstanceBatch(p_ed=batch.p_ed.copy(), p_es=p_es,
-                             acc=batch.acc.copy(), T=batch.T.copy())
-    if backend != "jax" or policy not in ("auto", "amdp"):
-        return plan_batch_arrays(crippled, policy=policy, backend=backend)
-
-    t0 = time.perf_counter()
-    B, n = crippled.p_es.shape
-    m = crippled.m
-    k = real_mask.sum(axis=1)
-    first = np.argmax(real_mask, axis=1)            # first real job index
-    ref_row = crippled.p_ed[np.arange(B), first]    # (B, m)
-    hetero = (~np.isclose(crippled.p_ed, ref_row[:, None, :], rtol=1e-9)
-              ).any(axis=2) & real_mask
-    ident = (k > 0) & ~hetero.any(axis=1)
-
-    assignment = np.zeros((B, n), dtype=np.int64)
-    status = np.zeros(B, dtype=np.int64)
-    solver = np.empty(B, dtype=object)
-    if ident.any():
-        idxs = np.nonzero(ident)[0]
-        stripped = [OffloadInstance(
-            p_ed=crippled.p_ed[b][real_mask[b]],
-            p_es=crippled.p_es[b][real_mask[b]],
-            acc=crippled.acc[b], T=float(crippled.T[b]))
-            for b in idxs]
-        for b, sched in zip(idxs, amdp_batch(stripped)):
-            row = np.full(n, m, dtype=np.int64)     # phantoms: free ES
-            row[real_mask[b]] = sched.assignment
-            assignment[b] = row
-            status[b] = _SCALAR_STATUS[sched.status]
-            solver[b] = "amdp"
-    rest = np.nonzero(~ident)[0]
-    if len(rest):
-        sub = InstanceBatch(p_ed=crippled.p_ed[rest],
-                            p_es=crippled.p_es[rest],
-                            acc=crippled.acc[rest], T=crippled.T[rest])
-        fp = plan_batch_arrays(sub, policy="amr2", backend="jax")
-        assignment[rest] = fp.assignment
-        status[rest] = fp.status
-        solver[rest] = fp.solver
-    return FleetPlan(assignment=assignment, status=status, solver=solver,
-                     plan_seconds=time.perf_counter() - t0)
+    """Deprecated: use ``repro.api.solve`` on a `FleetProblem` with
+    ``es_disabled=True``."""
+    _deprecated("replan_without_es_batch",
+                "api.solve(FleetProblem.from_batch(batch, real_mask), "
+                "es_disabled=True)")
+    _reject_bound_only(policy)
+    fp = FleetProblem.from_batch(batch, real_mask=real_mask)
+    return _to_fleet_plan(api.solve(fp, policy=policy, backend=backend,
+                                    es_disabled=True))

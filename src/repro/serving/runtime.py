@@ -14,9 +14,9 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..api import Problem, Solution, solve
 from ..core.types import OffloadInstance
 from .executor import ExecutionReport, execute
-from .planner import Plan, plan
 from .profile import TierProfile
 
 
@@ -70,30 +70,35 @@ class ServingRuntime:
     def run_period(self, jobs: List[object], job_classes: np.ndarray, *,
                    es_fail: bool = False) -> PeriodStats:
         inst = self.profile.instance(job_classes, self.T)
-        p = plan(inst, policy=self.policy)
-        report = execute(p, self.apply_ed, self.apply_es, jobs,
+        sol = solve(Problem.from_instance(inst), policy=self.policy)
+        report = execute(sol, self.apply_ed, self.apply_es, jobs,
                          es_fail=es_fail)
-        updated = self._audit(p, report, job_classes)
+        updated = self._audit(sol, report, job_classes)
         stats = PeriodStats(
-            n_jobs=len(jobs), policy=p.policy,
-            predicted_makespan=p.predicted_makespan,
+            n_jobs=len(jobs), policy=sol.solver_name,
+            predicted_makespan=float(sol.makespan),
             wall_makespan=report.wall_makespan,
-            total_accuracy=p.schedule.total_accuracy,
-            plan_seconds=p.plan_seconds,
+            total_accuracy=float(sol.accuracy),
+            plan_seconds=sol.plan_seconds,
             violation=max(0.0, report.wall_makespan / self.T - 1.0),
             replanned=report.replanned, profile_updated=updated)
         self.history.append(stats)
         return stats
 
-    def _audit(self, p: Plan, report: ExecutionReport,
+    def _audit(self, sol: Solution, report: ExecutionReport,
                job_classes: np.ndarray) -> bool:
         """Straggler detection: compare measured tier wall time against the
         profile's prediction; EMA-update the profile on drift.  Replanned
         periods are skipped — their measured walls reflect the fallback
-        schedule, not the profile being audited."""
+        schedule, not the profile being audited.
+
+        ``sol`` is an api `Solution` (or a legacy `Plan`, for callers still
+        on the shims)."""
         if report.replanned:
             return False
+        predicted_ed = (sol.schedule.ed_makespan if hasattr(sol, "schedule")
+                        else float(sol.ed_makespan))
         self.profile, updated = audit_profile(
-            self.profile, p.schedule.ed_makespan, report.ed_wall,
+            self.profile, predicted_ed, report.ed_wall,
             threshold=self.straggler_threshold, ema=self.ema)
         return updated

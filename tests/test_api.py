@@ -1,0 +1,370 @@
+"""`repro.api`: registry capabilities, solve() parity with the scalar
+oracles and the legacy shims, pytree round-trips, FleetConfig construction,
+and the deprecation contract of the old planner entry points."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.core import (InstanceBatch, identical_instance, paper_instance,
+                        random_instance)
+from repro.serving import (FleetConfig, FleetEngine, RequestQueue, make_fleet,
+                           planner)
+
+# one (B, n, m) shape shared across the jax-path tests -> a single jit trace
+N, M = 6, 2
+T = 1.5
+
+
+def _hetero(seed, n=N):
+    return paper_instance(n, T=T, seed=seed)
+
+
+def _ident(seed, n=N):
+    return identical_instance(n, M, T=1.0 + 0.1 * (seed % 5), seed=seed)
+
+
+def _problems(insts):
+    return [api.Problem.from_instance(i) for i in insts]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_all_solvers():
+    assert api.solver_names() == ["amdp", "amr2", "dual", "greedy", "lp"]
+    infos = api.solvers()
+    assert infos["amdp"].exact_on_identical
+    assert not infos["greedy"].batched
+    assert infos["lp"].bound_only and not infos["lp"].supports_es_disabled
+    for name in ("amr2", "amdp", "dual", "lp"):
+        assert infos[name].batched
+    # the table renders one row per solver
+    assert api.solver_table().count("\n") == len(infos) + 1
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown solver"):
+        api.solve(_problems([_hetero(0)])[0], policy="simulated-annealing")
+
+
+def test_solve_rejects_foreign_types():
+    with pytest.raises(TypeError, match="solve\\(\\) wants"):
+        api.solve(np.zeros((3, 2)))
+
+
+# ---------------------------------------------------------------------------
+# single-problem solve: every policy, parity with the scalar planner
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy,solver", [
+    ("auto", "amr2"), ("amr2", "amr2"), ("amdp", "amr2"),  # amdp falls back
+    ("dual", "dual"), ("greedy", "greedy")])
+def test_solve_single_policies(policy, solver):
+    sol = api.solve(_problems([_hetero(1)])[0], policy=policy)
+    assert sol.solver == solver
+    assert sol.plan_seconds > 0
+    sched = sol.to_schedule()
+    assert sched.total_accuracy == pytest.approx(float(sol.accuracy))
+    assert sched.makespan == pytest.approx(float(sol.makespan))
+
+
+def test_solve_auto_routes_identical_to_amdp():
+    sol = api.solve(_problems([_ident(0)])[0])
+    assert sol.solver == "amdp" and sol.status_name == "ok"
+
+
+def test_lp_is_an_upper_bound():
+    from repro.core import brute_force
+    inst = _hetero(2)
+    p = _problems([inst])[0]
+    bound = api.solve(p, policy="lp")
+    exact = brute_force(inst)                   # feasible integral optimum
+    assert bound.status_name == "bound"
+    assert float(bound.lp_accuracy) >= exact.total_accuracy - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# fleet solve: batched vs sequential oracle, es_disabled, empty input
+# ---------------------------------------------------------------------------
+def test_solve_fleet_matches_sequential_oracle():
+    fp = api.FleetProblem.from_batch(
+        InstanceBatch.stack([_hetero(10 + s) for s in range(4)]))
+    for policy in ("auto", "dual"):
+        fast = api.solve(fp, policy=policy, backend="jax")
+        slow = api.solve(fp, policy=policy, backend="numpy")
+        np.testing.assert_array_equal(fast.assignment, slow.assignment)
+        np.testing.assert_array_equal(fast.status, slow.status)
+
+
+def test_solve_fleet_auto_mixes_solvers():
+    insts = [_ident(3), _hetero(3)]
+    fp = api.FleetProblem.from_batch(InstanceBatch.stack(insts))
+    sol = api.solve(fp)
+    assert list(sol.solver) == ["amdp", "amr2"]
+    assert sol.solver_name == "mixed"
+
+
+def test_solve_fleet_es_disabled_keeps_everything_local():
+    insts = [_hetero(20 + s) for s in range(4)]
+    fp = api.FleetProblem.from_batch(InstanceBatch.stack(insts))
+    sol = api.solve(fp, es_disabled=True)
+    assert (sol.assignment < fp.m).all()
+    for b, inst in enumerate(insts):
+        ed = float(inst.p_ed[np.arange(inst.n), sol.assignment[b]].sum())
+        assert ed <= inst.T + 1e-9
+
+
+def test_solve_greedy_jax_backend_raises():
+    fp = api.FleetProblem.from_batch(
+        InstanceBatch.stack([_hetero(0), _hetero(1)]))
+    with pytest.raises(ValueError, match="no batched path"):
+        api.solve(fp, policy="greedy")          # fleet default backend: jax
+    with pytest.raises(ValueError, match="no batched path"):
+        api.solve_many(_problems([_hetero(0)]), policy="greedy",
+                       backend="jax")
+    seq = api.solve(fp, policy="greedy", backend="numpy")
+    assert set(np.atleast_1d(seq.solver)) == {"greedy"}
+
+
+def test_solver_opts_survive_dispatch_rerouting():
+    """Solver-specific options must not crash when dispatch reroutes to a
+    different solver (amdp→amr2 fallback, auto split, es-disabled rest)."""
+    het = _problems([_hetero(0)])[0]
+    assert api.solve(het, policy="amdp", impl="jnp").solver == "amr2"
+    mix = api.FleetProblem.from_batch(
+        InstanceBatch.stack([_ident(0), _hetero(0)]))
+    assert list(api.solve(mix, policy="amdp", impl="jnp").solver) == \
+        ["amdp", "amr2"]
+    api.solve(mix, policy="amdp", impl="jnp", es_disabled=True)
+    with pytest.raises(TypeError, match="does not accept"):
+        api.solve(het, policy="amr2", imp="pallas")     # typo'd option
+
+
+def test_capability_flags_are_enforced():
+    het = _problems([_hetero(0)])[0]
+    with pytest.raises(ValueError, match="supports_es_disabled"):
+        api.solve(het, policy="lp", es_disabled=True)
+    with pytest.raises(ValueError, match="bound-only"):
+        FleetEngine.from_config(FleetConfig(n_devices=2, T=1.0,
+                                            policy="lp"))
+
+
+def test_new_registry_entry_gets_batched_dispatch():
+    """The advertised extension path: a @register_solver entry with
+    solve_fleet must be dispatched through it (not the sequential loop,
+    not rerouted to amr2) without any front-door edits."""
+    from repro.api.registry import _REGISTRY
+
+    calls = {"fleet": 0}
+
+    @api.register_solver("test-echo", batched=True,
+                         exact_on_identical=False,
+                         supports_es_disabled=True,
+                         description="test-only")
+    class EchoSolver:
+        def solve_one(self, problem, *, backend="numpy"):
+            return api.Solution(problem=problem,
+                                assignment=np.zeros(problem.n, np.int64),
+                                status=np.int64(0), solver="test-echo")
+
+        def solve_fleet(self, fleet):
+            calls["fleet"] += 1
+            return api.Solution(
+                problem=fleet,
+                assignment=np.zeros((len(fleet), fleet.n), np.int64),
+                status=np.zeros(len(fleet), np.int64),
+                solver=np.full(len(fleet), "test-echo", object))
+
+    try:
+        assert "test-echo" in api.batched_policies()
+        fp = api.FleetProblem.from_batch(
+            InstanceBatch.stack([_hetero(0), _hetero(1)]))
+        sol = api.solve(fp, policy="test-echo", backend="jax")
+        assert calls["fleet"] == 1                  # batched path, once
+        assert set(np.atleast_1d(sol.solver)) == {"test-echo"}
+        sols = api.solve_many(_problems([_hetero(0), _hetero(1)]),
+                              policy="test-echo", backend="jax")
+        assert calls["fleet"] == 2
+        assert all(s.solver == "test-echo" for s in sols)
+    finally:
+        _REGISTRY.pop("test-echo", None)
+
+
+def test_shims_reject_bound_only_policy():
+    """Legacy planner contract: plan(policy="lp") raised ValueError and
+    still must — bound-only pseudo-schedules never flow through the shims."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="bound-only"):
+            planner.plan(_hetero(0), policy="lp")
+        with pytest.raises(ValueError, match="bound-only"):
+            planner.plan_batch([_hetero(0)], policy="lp")
+
+
+def test_solve_empty_inputs():
+    assert api.solve_many([]) == []
+    empty = api.FleetProblem(p_ed=np.zeros((0, N, M)),
+                             p_es=np.zeros((0, N)),
+                             acc=np.zeros((0, M + 1)), T=np.zeros(0),
+                             real_mask=np.zeros((0, N), bool))
+    sol = api.solve(empty)
+    assert sol.assignment.shape == (0, N)
+    sol_es = api.solve(empty, es_disabled=True)
+    assert sol_es.assignment.shape == (0, N)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: registry output bit-matches the legacy entry points
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_registry_matches_legacy_property(seed):
+    """Two properties per policy, bit-for-bit: (a) the batched registry
+    path (`solve_many`, backend="jax") reproduces the *scalar oracle* path
+    (`plan(..., backend="numpy")` → the per-device NumPy/DP solvers), the
+    genuinely independent implementation pair; (b) the legacy shims
+    (`plan_batch`/`replan_without_es_batch`) stay faithful delegates —
+    same assignments, solver tags, and status codes as calling the
+    registry directly."""
+    insts = [_hetero(seed + i) for i in range(3)] + [_ident(seed)]
+    probs = _problems(insts)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for policy in ("auto", "amr2", "amdp", "dual", "greedy"):
+            backend = "numpy" if policy == "greedy" else "jax"
+            legacy = planner.plan_batch(insts, policy=policy,
+                                        backend=backend)
+            sols = api.solve_many(probs, policy=policy, backend=backend)
+            for sol, pl in zip(sols, legacy):
+                assert sol.solver_name == pl.policy
+                np.testing.assert_array_equal(sol.assignment,
+                                              pl.schedule.assignment)
+            # scalar path parity: one-off solves match the batch
+            for sol, inst in zip(sols, insts):
+                one = planner.plan(inst, policy=policy, backend="numpy")
+                np.testing.assert_array_equal(sol.assignment,
+                                              one.schedule.assignment)
+        # batched ES-disabled replan parity
+        batch = InstanceBatch.stack(insts[:3])
+        legacy_fp = planner.replan_without_es_batch(batch, policy="auto")
+        sol = api.solve(api.FleetProblem.from_batch(batch), policy="auto",
+                        es_disabled=True)
+        np.testing.assert_array_equal(sol.assignment, legacy_fp.assignment)
+        np.testing.assert_array_equal(np.asarray(sol.status),
+                                      legacy_fp.status)
+
+
+# ---------------------------------------------------------------------------
+# pytree registration (acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_problem_pytree_roundtrip():
+    p = _problems([_hetero(0)])[0]
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    assert len(leaves) == 4
+    q = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(q, api.Problem)
+    np.testing.assert_array_equal(q.p_ed, p.p_ed)
+    np.testing.assert_array_equal(q.p_es, p.p_es)
+    assert q.T == p.T
+
+
+def test_fleet_problem_pytree_roundtrip():
+    fp = api.FleetProblem.from_batch(
+        InstanceBatch.stack([_hetero(s) for s in range(3)]))
+    leaves, treedef = jax.tree_util.tree_flatten(fp)
+    assert len(leaves) == 5                     # incl. real_mask
+    fq = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(fq, api.FleetProblem)
+    for f in ("p_ed", "p_es", "acc", "T", "real_mask"):
+        np.testing.assert_array_equal(getattr(fq, f), getattr(fp, f))
+    # pytree-ness is what makes the fleet shardable: tree_map must work
+    doubled = jax.tree_util.tree_map(lambda x: x, fp)
+    assert isinstance(doubled, api.FleetProblem)
+
+
+def test_fleet_problem_pack_pads_with_phantoms():
+    probs = _problems([_hetero(0, n=4), _hetero(1, n=6)])
+    fp = api.FleetProblem.from_problems(probs)
+    assert fp.n == 8                            # next_pow2(6)
+    assert fp.real_mask.sum() == 10
+    assert (fp.p_es[~fp.real_mask] == 0).all()
+    with pytest.raises(ValueError, match="share the model count"):
+        api.FleetProblem.from_problems(
+            [probs[0], api.Problem(p_ed=np.ones((2, 3)), p_es=np.ones(2),
+                                   acc=np.linspace(0.1, 0.9, 4), T=1.0)])
+
+
+# ---------------------------------------------------------------------------
+# FleetConfig / FleetEngine.from_config (acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_from_config_reproduces_manual_construction():
+    cfg = FleetConfig(n_devices=6, T=1.2, n_servers=1, rate=8.0,
+                      batch_max=8, seed=3, horizon=8, backend="numpy")
+    via_config = FleetEngine.from_config(cfg)
+    manual = FleetEngine(
+        make_fleet(6, seed=3, horizon=8),
+        RequestQueue(6, (128, 512, 1024), rate=8.0, batch_max=8, seed=3),
+        n_servers=1, T=1.2, backend="numpy")
+    for _ in range(3):
+        sv, sr = via_config.run_period(), manual.run_period()
+        for f in ("n_jobs", "n_violations", "n_offloading",
+                  "n_backpressured", "n_outage", "n_straggler_updates",
+                  "backlog"):
+            assert getattr(sv, f) == getattr(sr, f), f
+        assert sv.total_accuracy == pytest.approx(sr.total_accuracy,
+                                                  abs=1e-9)
+
+
+def test_from_config_explicit_devices_and_mismatch():
+    specs = make_fleet(4, seed=0)
+    cfg = FleetConfig(n_devices=4, T=1.0, devices=specs)
+    eng = FleetEngine.from_config(cfg)
+    assert len(eng.devices) == 4
+    with pytest.raises(ValueError, match="DeviceSpecs"):
+        FleetEngine.from_config(
+            FleetConfig(n_devices=3, T=1.0, devices=specs))
+
+
+# ---------------------------------------------------------------------------
+# deprecation contract of the legacy shims
+# ---------------------------------------------------------------------------
+def test_shims_warn_exactly_once():
+    insts = [_hetero(0) for _ in range(2)]
+    batch = InstanceBatch.stack(insts)
+    cases = [
+        ("plan", lambda: planner.plan(insts[0])),
+        ("plan_batch", lambda: planner.plan_batch(insts, backend="numpy")),
+        ("plan_batch_arrays",
+         lambda: planner.plan_batch_arrays(batch, backend="numpy")),
+        ("replan_without_es", lambda: planner.replan_without_es(insts[0])),
+        ("replan_without_es_batch",
+         lambda: planner.replan_without_es_batch(batch, backend="numpy")),
+    ]
+    for name, fn in cases:
+        planner._reset_deprecation_warnings()
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            fn()
+            fn()
+        dep = [w for w in caught
+               if issubclass(w.category, DeprecationWarning)
+               and f"repro.serving.{name} is deprecated" in str(w.message)]
+        assert len(dep) == 1, (name, [str(w.message) for w in caught])
+    planner._reset_deprecation_warnings()
+
+
+def test_shim_results_keep_legacy_types():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        p = planner.plan(_hetero(0))
+        assert isinstance(p, planner.Plan)
+        ids = np.sort(np.concatenate(list(p.per_model.values())))
+        np.testing.assert_array_equal(ids, np.arange(N))
+        fp = planner.plan_batch_arrays(
+            InstanceBatch.stack([_hetero(0), _hetero(1)]))
+        assert isinstance(fp, planner.FleetPlan)
+        assert fp.assignment.shape == (2, N)
+        assert set(fp.solver) == {"amr2"}

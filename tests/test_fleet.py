@@ -123,9 +123,13 @@ def test_plan_batch_bucketing_matches_oracle():
                 amr2(inst).total_accuracy, abs=1e-6)
 
 
-def test_plan_batch_non_amr2_policy_falls_back():
+def test_plan_batch_greedy_needs_numpy_backend():
+    """Greedy has no batched path: the jax backend refuses loudly instead
+    of silently running the sequential loop under a misleading tag."""
     insts = _fleet_instances(seed=30)
-    plans = plan_batch(insts, policy="greedy")
+    with pytest.raises(ValueError, match="no batched path"):
+        plan_batch(insts, policy="greedy", backend="jax")
+    plans = plan_batch(insts, policy="greedy", backend="numpy")
     assert all(p.policy == "greedy" for p in plans)
     assert plan_batch([], backend="jax") == []
 
