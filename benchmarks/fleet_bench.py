@@ -2,15 +2,24 @@
 
 Sections:
 
-  * ``fleet/parity``   — plans the SAME >=64-device fleet twice per solver:
-    batched vs the per-device NumPy oracle —
+  * ``fleet/parity/B`` — plans the SAME fleet twice per solver at the 64-
+    AND 256-device points (``FLEET_BENCH_PARITY_SIZES``), batched vs the
+    per-device NumPy oracle —
       - vmapped AMR^2 vs the sequential simplex (accuracy gap <= 1e-6 and
         the paper's 2T makespan guarantee per device),
       - vmapped `dual_schedule_batch` vs the NumPy `dual_schedule`
         (bit-identical assignments),
       - vmapped `amdp_batch` vs the scalar CCKP DP on identical-job
         devices (bit-identical assignments),
-    and reports batched-vs-sequential planning throughput.
+    and reports batched-vs-sequential planning throughput.  Results merge
+    into ``BENCH_fleet.json`` keyed by device count, so the documented
+    256-device baseline is reproduced by the benchmark itself.
+  * ``fleet/warm_cold/B`` — consecutive-period LP re-solves at 64/256/1024
+    devices (``FLEET_BENCH_WARM_SIZES``): period t's optimal bases warm-
+    start period t+1's batched AMR^2 solve (`solve(..., warm_start=)`),
+    asserting bit-tight warm/cold LP-objective parity plus a bounded
+    rounded-accuracy gap vs the per-device NumPy oracle, and reporting
+    warm-vs-cold throughput plus warm-basis acceptance rates.
   * ``fleet/scale/B``  — runs the full serving engine (Poisson queue, ES
     pool, stragglers, outages) at increasing fleet sizes (through the
     256/1024-device points) and reports devices-planned/sec plus aggregate
@@ -20,9 +29,13 @@ Sections:
     the 256-device point.
 
 Every section also folds its numbers into ``BENCH_fleet.json`` (repo root;
-override with ``BENCH_FLEET_JSON``) so the perf trajectory accumulates
-across hosts/PRs.  ``FLEET_BENCH_SIZES`` / ``FLEET_BENCH_PERIODS`` /
-``FLEET_BENCH_SPEEDUP_DEVICES`` shrink the run for CI smoke jobs.
+override with ``BENCH_FLEET_JSON``).  Sections merge dict-into-dict (one
+level per nesting), so a partial run — e.g. the CI smoke job, which only
+runs the small device counts — updates its keys and leaves every
+previously-recorded key intact (`scripts/check_bench_keys.py` enforces
+this in CI).  ``FLEET_BENCH_SIZES`` / ``FLEET_BENCH_PERIODS`` /
+``FLEET_BENCH_SPEEDUP_DEVICES`` / ``FLEET_BENCH_PARITY_SIZES`` /
+``FLEET_BENCH_WARM_SIZES`` shrink the run for CI smoke jobs.
 
 Standalone:  PYTHONPATH=src python benchmarks/fleet_bench.py
 CSV via the harness:  python benchmarks/run.py fleet
@@ -48,13 +61,24 @@ _JSON_PATH = os.environ.get(
 _RESULTS: dict = {}
 
 
+def _merge(old, new):
+    """Dict-into-dict merge, recursing so a partial run (one device count,
+    one policy) never drops previously-recorded sibling keys."""
+    if isinstance(old, dict) and isinstance(new, dict):
+        out = dict(old)
+        for k, v in new.items():
+            out[k] = _merge(old.get(k), v) if k in old else v
+        return out
+    return new
+
+
 def _record(section: str, payload) -> None:
     """Fold one section's numbers into BENCH_fleet.json.
 
-    Merges into the existing document (a partial run — e.g. the CI smoke
-    job, which only runs some sections — updates its sections and leaves
-    the rest intact) and rewrites after every section so an interrupted run
-    still leaves a valid file."""
+    Merges into the existing document — recursively for dict payloads, so
+    e.g. a 64-device-only smoke run updates ``parity["64"]`` and leaves
+    ``parity["256"]`` intact — and rewrites after every section so an
+    interrupted run still leaves a valid file."""
     _RESULTS[section] = payload
     doc = {}
     try:
@@ -62,8 +86,9 @@ def _record(section: str, payload) -> None:
             doc = json.load(fh)
     except (OSError, ValueError):
         pass
-    doc.update({"host": platform.node(), "platform": platform.platform(),
-                "unix_time": time.time(), **_RESULTS})
+    doc = _merge(doc, {"host": platform.node(),
+                       "platform": platform.platform(),
+                       "unix_time": time.time(), **_RESULTS})
     with open(_JSON_PATH, "w") as fh:
         json.dump(doc, fh, indent=2, sort_keys=True)
         fh.write("\n")
@@ -81,26 +106,48 @@ def _periods(n_devices: int) -> int:
     return min(cap, 5 if n_devices >= _BIG else SCALE_PERIODS)
 
 
-def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0):
+def _parity_instances(n_devices=PARITY_DEVICES, n_jobs=PARITY_JOBS, seed=0,
+                      periods=1):
+    """One fleet, `periods` consecutive arrival draws: a list of
+    per-period instance lists sharing the same device profiles (the
+    warm-start scenario: only the job classes change period to period)."""
     from repro.serving.fleet import make_fleet
     rng = np.random.default_rng(seed)
     specs = make_fleet(n_devices, seed=seed, straggler_frac=0.0,
                        outage_frac=0.0)
     T = 1.2
-    insts = []
-    for spec in specs:
-        classes = rng.choice(spec.profile.classes, size=n_jobs)
-        insts.append(spec.profile.instance(classes, T))
-    return insts, T
+    rounds = []
+    for _ in range(periods):
+        insts = []
+        for spec in specs:
+            classes = rng.choice(spec.profile.classes, size=n_jobs)
+            insts.append(spec.profile.instance(classes, T))
+        rounds.append(insts)
+    if periods == 1:
+        return rounds[0], T
+    return rounds, T
 
 
-def parity():
-    """Batched registry solves vs per-device NumPy/scalar oracles — every
-    path goes through `repro.api.solve`, the single front door."""
+def _parity_sizes():
+    env = os.environ.get("FLEET_BENCH_PARITY_SIZES")
+    if env:
+        return tuple(int(x) for x in env.split(","))
+    return (64, 256)
+
+
+def _warm_sizes():
+    env = os.environ.get("FLEET_BENCH_WARM_SIZES")
+    if env:
+        return tuple(int(x) for x in env.split(","))
+    return (64, 256, 1024)
+
+
+def _parity_at(n_devices: int):
+    """One parity round at a given device count.  Returns (entry, rows)."""
     from repro import api
     from repro.core import InstanceBatch, identical_instance
 
-    insts, T = _parity_instances()
+    insts, T = _parity_instances(n_devices)
     fp = api.FleetProblem.from_batch(InstanceBatch.stack(insts))
     api.solve(fp, policy="amr2")                        # compile once
     t0 = time.perf_counter()
@@ -130,8 +177,9 @@ def parity():
                                   dual_oracle.assignment)
 
     # --- amdp: vmapped CCKP DP vs scalar DP, bit-identical ---------------
+    n_ident = min(n_devices, PARITY_DEVICES)  # scalar DP oracle is slow
     ident = [identical_instance(PARITY_JOBS, 2, T=1.0 + 0.05 * (s % 8),
-                                seed=s) for s in range(PARITY_DEVICES)]
+                                seed=s) for s in range(n_ident)]
     ident_fp = api.FleetProblem.from_batch(InstanceBatch.stack(ident))
     api.solve(ident_fp, policy="amdp")                  # compile once
     t0 = time.perf_counter()
@@ -147,7 +195,7 @@ def parity():
                                   amdp_oracle.assignment)
 
     n = len(insts)
-    _record("parity", {
+    entry = {
         "devices": n, "jobs_per_device": PARITY_JOBS,
         "amr2_max_acc_gap": max_gap,
         "amr2_batched_devices_per_s": n / batched_s,
@@ -157,24 +205,144 @@ def parity():
         "amdp_batched_devices_per_s": len(ident) / amdp_batched_s,
         "amdp_oracle_devices_per_s": len(ident) / amdp_oracle_s,
         "assertions": "passed",
-    })
-    return [
-        ("fleet/parity/batched", batched_s / n * 1e6,
+    }
+    rows = [
+        (f"fleet/parity/{n}/batched", batched_s / n * 1e6,
          f"devices={n};devices_per_s={n / batched_s:.0f};"
          f"max_acc_gap={max_gap:.1e};single_jit_call=1"),
-        ("fleet/parity/numpy_oracle", oracle_s / n * 1e6,
+        (f"fleet/parity/{n}/numpy_oracle", oracle_s / n * 1e6,
          f"devices={n};devices_per_s={n / oracle_s:.0f};"
          f"speedup={oracle_s / batched_s:.1f}x"),
-        ("fleet/parity/dual_batched", dual_batched_s / n * 1e6,
+        (f"fleet/parity/{n}/dual_batched", dual_batched_s / n * 1e6,
          f"devices={n};devices_per_s={n / dual_batched_s:.0f};"
          f"speedup_vs_numpy={dual_oracle_s / dual_batched_s:.1f}x;"
          f"assignments=bit_identical"),
-        ("fleet/parity/amdp_batched", amdp_batched_s / len(ident) * 1e6,
+        (f"fleet/parity/{n}/amdp_batched", amdp_batched_s / len(ident) * 1e6,
          f"devices={len(ident)};"
          f"devices_per_s={len(ident) / amdp_batched_s:.0f};"
          f"speedup_vs_scalar={amdp_oracle_s / amdp_batched_s:.1f}x;"
          f"assignments=bit_identical"),
     ]
+    return entry, rows
+
+
+def parity():
+    """Batched registry solves vs per-device NumPy/scalar oracles — every
+    path goes through `repro.api.solve`, the single front door.  Runs at
+    BOTH the 64- and 256-device points (the device count is part of the
+    BENCH_fleet.json merge key) so the documented 256-device baseline is
+    actually reproduced here, not extrapolated from the 64-device run."""
+    entries = {}
+    out = []
+    for n_devices in _parity_sizes():
+        entry, rows = _parity_at(n_devices)
+        entries[str(n_devices)] = entry
+        out.extend(rows)
+    _record("parity", entries)
+    return out
+
+
+def warm_cold():
+    """Warm-started vs cold batched LP across consecutive fleet periods.
+
+    Period t is solved cold; its per-device optimal bases
+    (`Solution.basis`) warm-start period t+1, whose profiles are identical
+    but whose arrival classes are freshly drawn — exactly the fleet
+    engine's period-to-period situation.  Asserts (a) bit-tight warm/cold
+    parity on the LP OBJECTIVE (vertex-invariant), (b) the rounded
+    accuracy within AMR^2's own rounding bound of the per-device NumPy
+    oracle (warm and cold may land on different optimal vertices of a
+    degenerate LP, so exact assignment parity is not guaranteed — the
+    observed gap is recorded), and (c) the 2T makespan guarantee; then
+    reports warm-vs-cold throughput and the warm-basis acceptance rate."""
+    from repro import api
+    from repro.core import InstanceBatch
+    from repro.core.amr2 import build_lp_arrays_batch
+    from repro.core.lp import solve_lp_batch
+
+    entries = {}
+    out = []
+    reps = 5                    # min-of-reps: the CPU dev hosts time-share
+    for n_devices in _warm_sizes():
+        (prev, cur), T = _parity_instances(n_devices, periods=2)
+        fp_prev = api.FleetProblem.from_batch(InstanceBatch.stack(prev))
+        fp = api.FleetProblem.from_batch(InstanceBatch.stack(cur))
+        sol_prev = api.solve(fp_prev, policy="amr2")    # period t (cold)
+        basis = sol_prev.basis
+
+        api.solve(fp, policy="amr2")                    # compile cold
+        api.solve(fp, policy="amr2", warm_start=basis)  # compile warm
+        cold_s = min(_timed(lambda: api.solve(fp, policy="amr2"))
+                     for _ in range(reps))
+        warm_s = min(_timed(lambda: api.solve(
+            fp, policy="amr2", warm_start=basis)) for _ in range(reps))
+        warm_sol = api.solve(fp, policy="amr2", warm_start=basis)
+
+        oracle = api.solve(fp, policy="amr2", backend="numpy")
+        gap = float(np.abs(warm_sol.accuracy - oracle.accuracy).max())
+        # rounded accuracies from two optimal vertices of a degenerate LP
+        # can legitimately differ (different fractional-job sets), but
+        # never by more than AMR^2's own rounding slack per device
+        acc = np.asarray(fp.acc)
+        round_bound = float((2 * (acc.max(axis=1) - acc.min(axis=1))).max())
+        assert gap <= round_bound + 1e-9, \
+            f"warm/oracle accuracy gap {gap:.3e} exceeds the AMR2 " \
+            f"rounding bound {round_bound:.3e}"
+        assert float(np.max(warm_sol.makespan)) <= 2 * T + 1e-9
+
+        # warm acceptance, pivot counts, and timing straight from the LP
+        # layer (isolates the simplex gain from the fixed api-side costs:
+        # LP-array assembly, canonicalization, rounding)
+        c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(
+            InstanceBatch.stack(cur))
+        res_w = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, warm_basis=basis)
+        res_c = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+        # the vertex-invariant check: warm and cold must agree on the LP
+        # OBJECTIVE bit-tight even when they sit on different optimal
+        # vertices of a degenerate instance
+        obj_gap = float(np.abs(res_w.fun - res_c.fun).max())
+        assert obj_gap <= 1e-6, \
+            f"warm/cold LP objective mismatch: {obj_gap:.3e}"
+        lp_warm_s = min(_timed(lambda: solve_lp_batch(
+            c, A_ub, b_ub, A_eq, b_eq, warm_basis=basis))
+            for _ in range(reps))
+        lp_cold_s = min(_timed(lambda: solve_lp_batch(
+            c, A_ub, b_ub, A_eq, b_eq)) for _ in range(reps))
+        warm_rate = float(np.asarray(res_w.warm).mean())
+        n = n_devices
+        entry = {
+            "devices": n, "jobs_per_device": PARITY_JOBS,
+            "warm_max_acc_gap": gap,
+            "warm_cold_obj_gap": obj_gap,
+            "amr2_cold_devices_per_s": n / cold_s,
+            "amr2_warm_devices_per_s": n / warm_s,
+            "warm_speedup": cold_s / warm_s,
+            "lp_cold_devices_per_s": n / lp_cold_s,
+            "lp_warm_devices_per_s": n / lp_warm_s,
+            "lp_warm_speedup": lp_cold_s / lp_warm_s,
+            "warm_accept_rate": warm_rate,
+            "warm_mean_pivots": float(np.asarray(res_w.niter).mean()),
+            "cold_mean_pivots": float(np.asarray(res_c.niter).mean()),
+            "assertions": "passed",
+        }
+        entries[str(n)] = entry
+        out.append((
+            f"fleet/warm_cold/{n}", warm_s / n * 1e6,
+            f"devices={n};warm_devices_per_s={n / warm_s:.0f};"
+            f"cold_devices_per_s={n / cold_s:.0f};"
+            f"speedup={cold_s / warm_s:.1f}x;"
+            f"warm_accept_rate={warm_rate:.2f};"
+            f"pivots_warm={entry['warm_mean_pivots']:.1f};"
+            f"pivots_cold={entry['cold_mean_pivots']:.1f};"
+            f"max_acc_gap={gap:.1e}"))
+    _record("warm_cold", entries)
+    return out
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def _engine(n_devices: int, *, policy: str = "auto", seed: int = 7):
@@ -188,7 +356,7 @@ def _engine(n_devices: int, *, policy: str = "auto", seed: int = 7):
 def scaling():
     """End-to-end engine throughput + accuracy/violation vs fleet size."""
     out = []
-    entries = []
+    entries: dict = {}
     for n_devices in _scale_sizes():
         periods = _periods(n_devices)
         policies = ("auto", "dual") if n_devices >= _BIG else ("auto",)
@@ -209,7 +377,7 @@ def scaling():
                 "violation_rate": s["violation_rate"],
                 "backpressure_rate": s["backpressure_rate"],
             }
-            entries.append(entry)
+            entries.setdefault(str(n_devices), {})[policy] = entry
             tag = f"fleet/scale/{n_devices}" + (
                 "" if policy == "auto" else f"/{policy}")
             out.append((
@@ -291,7 +459,7 @@ def speedup():
         "dual_accuracy_delta": (new_dual["mean_job_accuracy"]
                                 - pr1["mean_job_accuracy"]),
     }
-    _record("speedup", entry)
+    _record("speedup", {str(n): entry})
     return [
         ("fleet/speedup/pr1_reference", 1e6
          / max(pr1["devices_per_s_wall"], 1e-9),
@@ -311,7 +479,7 @@ def speedup():
     ]
 
 
-ALL = [parity, scaling, speedup]
+ALL = [parity, warm_cold, scaling, speedup]
 
 
 def main():

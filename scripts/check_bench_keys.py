@@ -1,0 +1,67 @@
+"""BENCH_fleet.json merge-on-write guard for CI.
+
+The fleet bench merges each section dict-into-dict so a partial run (the
+CI smoke job only exercises the small device counts) must never drop
+previously-recorded keys — e.g. the committed 256-device parity baseline
+must survive a 64-device smoke run.  Usage:
+
+    python scripts/check_bench_keys.py snapshot BENCH_fleet.json keys.json
+    ... run the bench ...
+    python scripts/check_bench_keys.py verify BENCH_fleet.json keys.json
+
+``verify`` exits 1 if any recursively-collected dict key path from the
+snapshot is missing from the current document.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def key_paths(doc, prefix=""):
+    """Every nested dict key path, e.g. 'parity/256/amr2_max_acc_gap'."""
+    paths = []
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            p = f"{prefix}/{k}" if prefix else str(k)
+            paths.append(p)
+            paths.extend(key_paths(v, p))
+    return paths
+
+
+def main(argv) -> int:
+    if len(argv) != 4 or argv[1] not in ("snapshot", "verify"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    mode, bench_path, keys_path = argv[1], argv[2], argv[3]
+    try:
+        with open(bench_path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"cannot read {bench_path}: {e}", file=sys.stderr)
+        return 1
+
+    if mode == "snapshot":
+        with open(keys_path, "w") as fh:
+            json.dump(sorted(key_paths(doc)), fh, indent=1)
+        print(f"[check_bench_keys] snapshot: {len(key_paths(doc))} key "
+              f"paths from {bench_path}")
+        return 0
+
+    with open(keys_path) as fh:
+        before = set(json.load(fh))
+    after = set(key_paths(doc))
+    lost = sorted(before - after)
+    if lost:
+        print(f"FAIL: {len(lost)} previously-recorded BENCH key path(s) "
+              f"lost on merge-on-write:", file=sys.stderr)
+        for p in lost[:40]:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"[check_bench_keys] ok: all {len(before)} recorded key paths "
+          f"survived the merge ({len(after) - len(before)} new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -15,8 +15,9 @@ every planning algorithm plugs into:
 The legacy `serving.plan*` entry points are deprecation shims over this
 module; new code (and every repo-internal call site) uses `api` directly.
 """
-from ..core.problem import (ES_DISABLED_SENTINEL, SOLUTION_STATUS_NAMES,
-                            FleetProblem, Problem, Solution)
+from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED,
+                            SOLUTION_STATUS_NAMES, FleetProblem, Problem,
+                            Solution)
 from .front import batched_policies, solve, solve_many
 from .registry import (Solver, SolverInfo, get_solver, register_solver,
                        solver_names, solver_table, solvers)
@@ -24,7 +25,7 @@ from . import solvers as _builtin_solvers  # noqa: F401  (register entries)
 
 __all__ = [
     "Problem", "FleetProblem", "Solution",
-    "SOLUTION_STATUS_NAMES", "ES_DISABLED_SENTINEL",
+    "SOLUTION_STATUS_NAMES", "ST_UNSOLVED", "ES_DISABLED_SENTINEL",
     "solve", "solve_many", "batched_policies",
     "Solver", "SolverInfo", "register_solver", "get_solver",
     "solver_names", "solvers", "solver_table",

@@ -22,12 +22,13 @@ from __future__ import annotations
 
 import inspect
 import time
-from typing import Callable, Dict, List, Sequence, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core.problem import (ES_DISABLED_SENTINEL, FleetProblem, Problem,
-                            Solution)
+from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED, FleetProblem,
+                            Problem, Solution)
 from ..core.types import InstanceBatch, OffloadInstance
 from . import solvers as _solvers          # noqa: F401  (populate registry)
 from .registry import get_solver, solver_names, solvers
@@ -95,15 +96,42 @@ def _validate_opts(policy: str, opts: Dict) -> None:
             f"{sorted(unknown)}")
 
 
+def _check_strict(sol: Solution, strict: bool) -> Solution:
+    """Surface solver non-convergence (status "unsolved": LP iteration
+    limit / unbounded) instead of silently returning a degraded plan."""
+    n_bad = int((np.atleast_1d(sol.status) == ST_UNSOLVED).sum())
+    if n_bad:
+        msg = (f"{n_bad} problem(s) were not solved to optimality "
+               f"(status 'unsolved': simplex iteration limit or unbounded "
+               f"LP); raise maxiter, or pass strict=False to accept the "
+               f"best-effort assignment")
+        if strict:
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    return sol
+
+
 def solve(problem: AnyProblem, *, policy: str = "auto",
           backend: str = None, es_disabled: bool = False,
+          strict: bool = True, warm_start: Optional[np.ndarray] = None,
           **opts) -> Solution:
     """Plan one `Problem` or a whole `FleetProblem` through the registry.
+
+    ``warm_start`` feeds an LP-backed solver (amr2/lp) the previous
+    period's optimal simplex basis (`Solution.basis`) so the solve prices
+    out of the old vertex instead of running two cold phases; devices whose
+    basis row is -1 (or no longer valid) fall back to the cold solve.
+    ``strict`` controls what happens when a solver fails to converge (e.g.
+    a capped ``maxiter``): True (default) raises, False warns and returns
+    the best-effort `Solution` with status "unsolved".
 
     Returns a `Solution`; ``solution.plan_seconds`` is the wall time of the
     whole call (fleet solves amortize internally)."""
     problem = _coerce(problem)
+    if warm_start is not None:
+        opts["warm_start"] = np.asarray(warm_start)
     _validate_opts(policy, opts)
+    opts.setdefault("on_error", "mark")   # front door surfaces via strict
     if es_disabled and policy != "auto" \
             and not get_solver(policy).info.supports_es_disabled:
         raise ValueError(
@@ -112,12 +140,16 @@ def solve(problem: AnyProblem, *, policy: str = "auto",
     if isinstance(problem, FleetProblem):
         backend = backend or "jax"
         if es_disabled:
-            return _solve_fleet_es_disabled(problem, policy, backend, **opts)
-        return _solve_fleet(problem, policy, backend, **opts)
+            return _check_strict(
+                _solve_fleet_es_disabled(problem, policy, backend, **opts),
+                strict)
+        return _check_strict(_solve_fleet(problem, policy, backend, **opts),
+                             strict)
     backend = backend or "numpy"
     if es_disabled:
         problem = problem.es_disabled()
-    return _solve_one(problem, policy, backend, **opts)
+    return _check_strict(_solve_one(problem, policy, backend, **opts),
+                         strict)
 
 
 # --------------------------------------------------------------------------
@@ -162,6 +194,16 @@ def _empty_solution(fleet: FleetProblem) -> Solution:
                     solver=np.empty(0, dtype=object))
 
 
+def _take_rows(opts: Dict, rows: np.ndarray) -> Dict:
+    """Opts for a row-subset dispatch: per-device option arrays (only
+    ``warm_start`` today) are sliced to the subset's rows."""
+    if opts.get("warm_start") is None:
+        return opts
+    sub = dict(opts)
+    sub["warm_start"] = np.asarray(opts["warm_start"])[rows]
+    return sub
+
+
 def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
                  **opts) -> Solution:
     t0 = time.perf_counter()
@@ -173,15 +215,46 @@ def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
     assignment = np.zeros((B, n), dtype=np.int64)
     status = np.zeros(B, dtype=np.int64)
     solver_tag = np.empty(B, dtype=object)
+    basis: Optional[np.ndarray] = None
+    lp_acc: Optional[np.ndarray] = None
+
+    def _merge_basis(rows: np.ndarray, sub_basis: Optional[np.ndarray]
+                     ) -> None:
+        nonlocal basis
+        if sub_basis is None:
+            return
+        if basis is None:       # -1 rows: devices another solver handled
+            basis = np.full((B, sub_basis.shape[1]), -1, dtype=np.int64)
+        basis[rows] = sub_basis
+
+    def _merge_lp_acc(rows: np.ndarray, sub_acc) -> None:
+        nonlocal lp_acc
+        if sub_acc is None:
+            return
+        if lp_acc is None:      # NaN rows: no LP bound for those devices
+            lp_acc = np.full(B, np.nan)
+        lp_acc[rows] = np.atleast_1d(np.asarray(sub_acc, np.float64))
 
     if backend != "jax" or policy not in batched_policies():
+        warm = opts.get("warm_start")
         for b in range(B):                # sequential oracle path
-            sol = _solve_one(fleet[b], policy, backend, **opts)
+            o = opts
+            if warm is not None:
+                o = dict(opts)
+                wb = np.asarray(warm)[b]
+                if (wb >= 0).all():       # -1 rows: no basis for this device
+                    o["warm_start"] = wb
+                else:
+                    del o["warm_start"]
+            sol = _solve_one(fleet[b], policy, backend, **o)
             assignment[b] = sol.assignment
             status[b] = int(sol.status)
             solver_tag[b] = sol.solver
+            if sol.basis is not None:
+                _merge_basis(np.array([b]), np.asarray(sol.basis)[None])
+            _merge_lp_acc(np.array([b]), sol.lp_accuracy)
         return Solution(problem=fleet, assignment=assignment, status=status,
-                        solver=solver_tag,
+                        solver=solver_tag, basis=basis, lp_accuracy=lp_acc,
                         plan_seconds=time.perf_counter() - t0)
 
     if policy in ("auto", "amdp"):
@@ -193,21 +266,27 @@ def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
         idxs = np.nonzero(ident)[0]
         amdp = get_solver("amdp")
         sub = amdp.solve_fleet(fleet.take(idxs),
-                               **_filter_opts(amdp.solve_fleet, opts))
+                               **_filter_opts(amdp.solve_fleet,
+                                              _take_rows(opts, idxs)))
         assignment[idxs] = sub.assignment
         status[idxs] = sub.status
         solver_tag[idxs] = "amdp"
+        _merge_basis(idxs, sub.basis)
+        _merge_lp_acc(idxs, sub.lp_accuracy)
     rest = np.nonzero(~ident)[0]
     if len(rest):
         name = _fallback_name(policy)
         solver = get_solver(name)
         sub = solver.solve_fleet(fleet.take(rest),
-                                 **_filter_opts(solver.solve_fleet, opts))
+                                 **_filter_opts(solver.solve_fleet,
+                                                _take_rows(opts, rest)))
         assignment[rest] = sub.assignment
         status[rest] = sub.status
         solver_tag[rest] = name
+        _merge_basis(rest, sub.basis)
+        _merge_lp_acc(rest, sub.lp_accuracy)
     return Solution(problem=fleet, assignment=assignment, status=status,
-                    solver=solver_tag,
+                    solver=solver_tag, basis=basis, lp_accuracy=lp_acc,
                     plan_seconds=time.perf_counter() - t0)
 
 
@@ -254,14 +333,26 @@ def _solve_fleet_es_disabled(fleet: FleetProblem, policy: str, backend: str,
             assignment[b] = row
             status[b] = _STATUS_CODE[sched.status]
             solver_tag[b] = "amdp"
+    basis: Optional[np.ndarray] = None
+    lp_acc: Optional[np.ndarray] = None
     rest = np.nonzero(~ident)[0]
     if len(rest):
-        sub = _solve_fleet(crippled.take(rest), "amr2", "jax", **opts)
+        sub = _solve_fleet(crippled.take(rest), "amr2", "jax",
+                           **_take_rows(opts, rest))
         assignment[rest] = sub.assignment
         status[rest] = sub.status
         solver_tag[rest] = np.atleast_1d(sub.solver)
+        # keep the LP outputs flowing like the plain fleet path (amdp rows
+        # stay -1/NaN), so warm-start chaining and the bound survive a
+        # replan identically on every backend
+        if sub.basis is not None:
+            basis = np.full((B, sub.basis.shape[1]), -1, dtype=np.int64)
+            basis[rest] = sub.basis
+        if sub.lp_accuracy is not None:
+            lp_acc = np.full(B, np.nan)
+            lp_acc[rest] = np.atleast_1d(sub.lp_accuracy)
     return Solution(problem=crippled, assignment=assignment, status=status,
-                    solver=solver_tag,
+                    solver=solver_tag, basis=basis, lp_accuracy=lp_acc,
                     plan_seconds=time.perf_counter() - t0)
 
 
@@ -269,23 +360,47 @@ def _solve_fleet_es_disabled(fleet: FleetProblem, policy: str, backend: str,
 # many single problems (mixed shapes): the object-path batcher
 # --------------------------------------------------------------------------
 def solve_many(problems: Sequence[AnyProblem], *, policy: str = "auto",
-               backend: str = "jax", **opts) -> List[Solution]:
+               backend: str = "jax", strict: bool = True,
+               warm_start: Optional[Sequence] = None,
+               **opts) -> List[Solution]:
     """Plan a sequence of (possibly mixed-shape) problems in as few solver
     calls as possible: identical-job problems batch through the vmapped DP
     regardless of shape, the rest group by (n, m) and run through their
     solver's batched path once per group.  Returns one `Solution` per
     problem, in input order; ``plan_seconds`` is the group's solve time
-    amortized over its members.  An empty sequence returns ``[]``."""
+    amortized over its members.  An empty sequence returns ``[]``.
+
+    ``warm_start`` is one basis (`Solution.basis`) or None per problem,
+    aligned with ``problems``; each LP-backed group stacks its members'
+    bases (missing ones become cold -1 rows).  ``strict`` mirrors
+    `solve`: raise (default) or warn on "unsolved" solver statuses."""
     probs = [_coerce(p) for p in problems]
     if any(isinstance(p, FleetProblem) for p in probs):
         raise TypeError("solve_many wants single problems; pass a "
                         "FleetProblem to solve() instead")
+    if warm_start is not None and len(warm_start) != len(probs):
+        raise ValueError(
+            f"warm_start must align with problems: got {len(warm_start)} "
+            f"bases for {len(probs)} problems")
     if not probs:
         return []
     _validate_opts(policy, opts)
+    opts.setdefault("on_error", "mark")
     _check_fleet_policy(policy, backend)
+
+    def _done(sols: List[Solution]) -> List[Solution]:
+        for s in sols:
+            _check_strict(s, strict)
+        return sols
+
     if backend != "jax" or policy not in batched_policies():
-        return [_solve_one(p, policy, backend, **opts) for p in probs]
+        out = []
+        for i, p in enumerate(probs):
+            o = opts
+            if warm_start is not None and warm_start[i] is not None:
+                o = {**opts, "warm_start": np.asarray(warm_start[i])}
+            out.append(_solve_one(p, policy, backend, **o))
+        return _done(out)
 
     sols: List[Solution] = [None] * len(probs)      # type: ignore
     amdp_idxs: List[int] = []
@@ -312,8 +427,19 @@ def solve_many(problems: Sequence[AnyProblem], *, policy: str = "auto",
         t0 = time.perf_counter()
         sub = FleetProblem.from_problems([probs[i] for i in idxs], pad_to=n)
         solver = get_solver(name)
+        o = opts
+        if warm_start is not None:
+            bases = [warm_start[i] for i in idxs]
+            have = [np.asarray(b) for b in bases if b is not None]
+            if have:
+                wb = np.full((len(idxs), have[0].shape[0]), -1,
+                             dtype=np.int64)
+                for row, b in enumerate(bases):
+                    if b is not None:
+                        wb[row] = np.asarray(b)
+                o = {**opts, "warm_start": wb}
         fsol = solver.solve_fleet(sub,
-                                  **_filter_opts(solver.solve_fleet, opts))
+                                  **_filter_opts(solver.solve_fleet, o))
         dt = (time.perf_counter() - t0) / len(idxs)
         for row, i in enumerate(idxs):
             sols[i] = Solution(
@@ -323,5 +449,6 @@ def solve_many(problems: Sequence[AnyProblem], *, policy: str = "auto",
                 lp_accuracy=(None if fsol.lp_accuracy is None
                              else fsol.lp_accuracy[row]),
                 n_fractional=(None if fsol.n_fractional is None
-                              else fsol.n_fractional[row]))
-    return sols
+                              else fsol.n_fractional[row]),
+                basis=(None if fsol.basis is None else fsol.basis[row]))
+    return _done(sols)

@@ -29,6 +29,7 @@ class SolverInfo:
     exact_on_identical: bool      # optimal when all jobs share proc. times
     supports_es_disabled: bool    # usable for backpressure/outage replans
     bound_only: bool = False      # yields an upper bound, not a schedule
+    warm_start: bool = False      # accepts warm_start= (Solution.basis)
     description: str = ""
 
 
@@ -54,6 +55,7 @@ _REGISTRY: Dict[str, Solver] = {}
 
 def register_solver(name: str, *, batched: bool, exact_on_identical: bool,
                     supports_es_disabled: bool, bound_only: bool = False,
+                    warm_start: bool = False,
                     description: str = "") -> Callable:
     """Class decorator: instantiate and register a solver under ``name``."""
     def deco(cls):
@@ -62,7 +64,8 @@ def register_solver(name: str, *, batched: bool, exact_on_identical: bool,
             name=name, batched=batched,
             exact_on_identical=exact_on_identical,
             supports_es_disabled=supports_es_disabled,
-            bound_only=bound_only, description=description)
+            bound_only=bound_only, warm_start=warm_start,
+            description=description)
         _REGISTRY[name] = solver
         return cls
     return deco
@@ -89,14 +92,15 @@ def solvers() -> Dict[str, SolverInfo]:
 def solver_table() -> str:
     """The registry rendered as a markdown capability table."""
     rows = ["| solver | batched | exact on identical | es-disabled | "
-            "description |",
+            "warm-start | description |",
             "|--------|---------|--------------------|-------------|"
-            "-------------|"]
+            "------------|-------------|"]
     for name, info in solvers().items():
         rows.append(
             f"| `{name}` | {'yes' if info.batched else 'no'} "
             f"| {'yes' if info.exact_on_identical else 'no'} "
             f"| {'yes' if info.supports_es_disabled else 'no'} "
+            f"| {'yes' if info.warm_start else 'no'} "
             f"| {info.description}"
             f"{' (bound only)' if info.bound_only else ''} |")
     return "\n".join(rows)

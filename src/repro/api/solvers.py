@@ -10,11 +10,14 @@ row) so fluctuating fleet sizes reuse O(log B) compiled programs.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 from ..core.amdp import amdp, amdp_batch
-from ..core.amr2 import (ST_INFEASIBLE, amr2, amr2_batch_arrays,
-                         build_lp_arrays_batch, solve_lp_relaxation)
+from ..core.amr2 import (ST_INFEASIBLE, ST_UNSOLVED, amr2_batch_arrays,
+                         build_lp_arrays_batch, round_relaxation,
+                         solve_lp_relaxation)
 from ..core.dual import dual_schedule, dual_schedule_batch_arrays
 from ..core.greedy import greedy_rra
 from ..core.lp import INFEASIBLE, OPTIMAL, solve_lp_batch
@@ -35,28 +38,42 @@ def _pow2_rows(B: int) -> np.ndarray:
 
 @register_solver(
     "amr2", batched=True, exact_on_identical=False,
-    supports_es_disabled=True,
+    supports_es_disabled=True, warm_start=True,
     description="LP-relax + round (paper Alg. 1–2): ≤2T makespan, "
                 "≤2(a_max−a_min) accuracy gap")
 class AMR2Solver:
     def solve_one(self, problem: Problem, *, backend: str = "numpy",
-                  frac_tol: float = 1e-4) -> Solution:
-        sched = amr2(problem.to_instance(), backend=backend,
-                          frac_tol=frac_tol)
-        return Solution.from_schedule(sched, solver="amr2", problem=problem)
+                  frac_tol: float = 1e-4, maxiter: Optional[int] = None,
+                  warm_start: Optional[np.ndarray] = None,
+                  on_error: str = "raise") -> Solution:
+        inst = problem.to_instance()
+        xbar, a_lp, status, basis = solve_lp_relaxation(
+            inst, backend=backend, maxiter=maxiter, warm_basis=warm_start)
+        sched = round_relaxation(inst, xbar, a_lp, status,
+                                 frac_tol=frac_tol, on_error=on_error)
+        sol = Solution.from_schedule(sched, solver="amr2", problem=problem)
+        sol.basis = np.asarray(basis, np.int64)
+        return sol
 
-    def solve_fleet(self, fleet: FleetProblem, *,
-                    frac_tol: float = 1e-4) -> Solution:
+    def solve_fleet(self, fleet: FleetProblem, *, frac_tol: float = 1e-4,
+                    maxiter: Optional[int] = None,
+                    warm_start: Optional[np.ndarray] = None,
+                    impl: str = "jnp", on_error: str = "raise") -> Solution:
         B = len(fleet)
-        sub = fleet.take(_pow2_rows(B)).to_batch()
-        assign, status, n_frac, lp_acc = amr2_batch_arrays(
-            sub, frac_tol=frac_tol)
+        rows = _pow2_rows(B)
+        sub = fleet.take(rows).to_batch()
+        wb = None if warm_start is None else np.asarray(warm_start)[rows]
+        assign, status, n_frac, lp_acc, basis = amr2_batch_arrays(
+            sub, frac_tol=frac_tol, maxiter=maxiter, warm_basis=wb,
+            impl=impl, on_error=on_error)
         lp_acc = lp_acc[:B].copy()
-        lp_acc[status[:B] == ST_INFEASIBLE] = np.nan   # no bound: LP infeas.
+        lp_acc[(status[:B] == ST_INFEASIBLE)
+               | (status[:B] == ST_UNSOLVED)] = np.nan   # no bound
         return Solution(problem=fleet, assignment=assign[:B],
                         status=status[:B],
                         solver=np.full(B, "amr2", dtype=object),
-                        lp_accuracy=lp_acc, n_fractional=n_frac[:B])
+                        lp_accuracy=lp_acc, n_fractional=n_frac[:B],
+                        basis=np.asarray(basis[:B], np.int64))
 
 
 @register_solver(
@@ -121,38 +138,53 @@ class GreedySolver:
 
 @register_solver(
     "lp", batched=True, exact_on_identical=False,
-    supports_es_disabled=False, bound_only=True,
+    supports_es_disabled=False, bound_only=True, warm_start=True,
     description="LP relaxation A*_LP upper bound; assignment is the argmax "
                 "of a possibly fractional optimum")
 class LPBoundSolver:
     """Bound-only entry: `accuracy`'s integral counterpart is bounded above
     by ``lp_accuracy``; the argmax assignment need not satisfy the budgets."""
 
-    def solve_one(self, problem: Problem, *, backend: str = "numpy"
-                  ) -> Solution:
-        xbar, a_lp, status = solve_lp_relaxation(
-            problem.to_instance(), backend=backend)
+    def solve_one(self, problem: Problem, *, backend: str = "numpy",
+                  maxiter: Optional[int] = None,
+                  warm_start: Optional[np.ndarray] = None,
+                  on_error: str = "raise") -> Solution:
+        xbar, a_lp, status, basis = solve_lp_relaxation(
+            problem.to_instance(), backend=backend, maxiter=maxiter,
+            warm_basis=warm_start)
         if status == INFEASIBLE:
             return Solution(problem=problem,
                             assignment=np.argmin(problem.p_ed, axis=1),
                             status=np.int64(_STATUS_CODE["infeasible"]),
                             solver="lp")
         if status != OPTIMAL:
-            raise RuntimeError(f"LP relaxation failed (status={status})")
+            if on_error != "mark":
+                raise RuntimeError(f"LP relaxation failed (status={status})")
+            return Solution(
+                problem=problem,
+                assignment=np.argmax(xbar, axis=1).astype(np.int64),
+                status=np.int64(ST_UNSOLVED), solver="lp")
         return Solution(problem=problem,
                         assignment=np.argmax(xbar, axis=1).astype(np.int64),
                         status=np.int64(ST_BOUND), solver="lp",
-                        lp_accuracy=np.float64(a_lp))
+                        lp_accuracy=np.float64(a_lp),
+                        basis=np.asarray(basis, np.int64))
 
-    def solve_fleet(self, fleet: FleetProblem) -> Solution:
+    def solve_fleet(self, fleet: FleetProblem, *,
+                    maxiter: Optional[int] = None,
+                    warm_start: Optional[np.ndarray] = None,
+                    impl: str = "jnp", on_error: str = "raise") -> Solution:
         B = len(fleet)
-        sub = fleet.take(_pow2_rows(B)).to_batch()
+        rows = _pow2_rows(B)
+        sub = fleet.take(rows).to_batch()
         c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(sub)
-        res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+        wb = None if warm_start is None else np.asarray(warm_start)[rows]
+        res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, maxiter=maxiter,
+                             warm_basis=wb, impl=impl)
         xbar = res.x.reshape(len(sub), fleet.n, fleet.m + 1)[:B]
         st = np.asarray(res.status)[:B]
         bad = (st != OPTIMAL) & (st != INFEASIBLE)
-        if bad.any():
+        if bad.any() and on_error != "mark":
             raise RuntimeError(
                 f"LP relaxation failed (status={int(st[bad][0])})")
         assignment = np.argmax(xbar, axis=2).astype(np.int64)
@@ -161,8 +193,10 @@ class LPBoundSolver:
             assignment[infeas] = np.argmin(fleet.p_ed[infeas], axis=2)
         status = np.where(infeas, _STATUS_CODE["infeasible"],
                           ST_BOUND).astype(np.int64)
+        status[bad] = ST_UNSOLVED
         lp_acc = np.asarray(-res.fun, dtype=np.float64)[:B].copy()
-        lp_acc[infeas] = np.nan
+        lp_acc[infeas | bad] = np.nan
         return Solution(problem=fleet, assignment=assignment, status=status,
                         solver=np.full(B, "lp", dtype=object),
-                        lp_accuracy=lp_acc)
+                        lp_accuracy=lp_acc,
+                        basis=np.asarray(res.basis[:B], np.int64))

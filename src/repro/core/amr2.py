@@ -30,6 +30,13 @@ _FRAC_TOL = 1e-4
 # --------------------------------------------------------------------------
 # LP relaxation of P
 # --------------------------------------------------------------------------
+def _unsolved(status: int) -> bool:
+    """Statuses that mean the LP solver did not finish (iteration limit,
+    unbounded — anything that is neither a solution nor an infeasibility
+    certificate)."""
+    return status not in (OPTIMAL, INFEASIBLE)
+
+
 def build_lp_arrays(inst: OffloadInstance):
     """Variables x[j, i] flattened j-major, i in 0..m (i == m is the ES)."""
     n, m = inst.n, inst.m
@@ -50,12 +57,19 @@ def build_lp_arrays(inst: OffloadInstance):
     return c, A_ub, b_ub, A_eq, b_eq
 
 
-def solve_lp_relaxation(inst: OffloadInstance, *, backend: str = "numpy"):
-    """Returns (xbar (n, m+1), A*_LP, status)."""
+def solve_lp_relaxation(inst: OffloadInstance, *, backend: str = "numpy",
+                        maxiter: Optional[int] = None,
+                        warm_basis: Optional[np.ndarray] = None):
+    """Returns (xbar (n, m+1), A*_LP, status, basis).
+
+    ``warm_basis`` (the basis returned by a previous call on a
+    structurally identical instance) starts the simplex from that vertex;
+    see `solve_lp`."""
     c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays(inst)
-    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                   maxiter=maxiter, warm_basis=warm_basis)
     xbar = res.x.reshape(inst.n, inst.m + 1)
-    return xbar, -res.fun, res.status
+    return xbar, -res.fun, res.status, res.basis
 
 
 # --------------------------------------------------------------------------
@@ -148,16 +162,27 @@ def algorithm2_case_tree(inst: OffloadInstance, j1: int, j2: int
 # AMR^2 (Algorithm 1)
 # --------------------------------------------------------------------------
 def amr2(inst: OffloadInstance, *, backend: str = "numpy",
-         frac_tol: float = _FRAC_TOL) -> Schedule:
-    xbar, a_lp, status = solve_lp_relaxation(inst, backend=backend)
-    return round_relaxation(inst, xbar, a_lp, status, frac_tol=frac_tol)
+         frac_tol: float = _FRAC_TOL, maxiter: Optional[int] = None,
+         warm_basis: Optional[np.ndarray] = None,
+         on_error: str = "raise") -> Schedule:
+    xbar, a_lp, status, _ = solve_lp_relaxation(
+        inst, backend=backend, maxiter=maxiter, warm_basis=warm_basis)
+    return round_relaxation(inst, xbar, a_lp, status, frac_tol=frac_tol,
+                            on_error=on_error)
 
 
 def round_relaxation(inst: OffloadInstance, xbar: np.ndarray, a_lp: float,
                      status: int, *, frac_tol: float = _FRAC_TOL,
-                     solver: str = "amr2") -> Schedule:
+                     solver: str = "amr2",
+                     on_error: str = "raise") -> Schedule:
     """Algorithm 1 lines 2-11: turn a basic LP-relaxation solution into an
-    integral schedule.  Shared by the scalar and vmapped-batch AMR^2 paths."""
+    integral schedule.  Shared by the scalar and vmapped-batch AMR^2 paths.
+
+    A non-converged LP (iteration limit / unbounded — a capped ``maxiter``)
+    must never be rounded as if optimal: ``on_error="raise"`` (default)
+    raises, ``on_error="mark"`` returns a best-effort schedule tagged
+    ``status="unsolved"`` so callers (the `repro.api` front door) can
+    surface it per their ``strict`` setting."""
     if status == INFEASIBLE:
         # P infeasible (its relaxation already is): best-effort everything on
         # the fastest ED model so the caller still gets a schedule object.
@@ -166,7 +191,12 @@ def round_relaxation(inst: OffloadInstance, xbar: np.ndarray, a_lp: float,
                         lp_accuracy=None, n_fractional=0,
                         status="infeasible", solver=solver)
     if status != OPTIMAL:
-        raise RuntimeError(f"LP relaxation did not converge (status={status})")
+        if on_error != "mark":
+            raise RuntimeError(
+                f"LP relaxation did not converge (status={status})")
+        return Schedule(assignment=np.argmax(xbar, axis=1).astype(np.int64),
+                        instance=inst, lp_accuracy=None, n_fractional=0,
+                        status="unsolved", solver=solver)
 
     frac = fractional_jobs(xbar, frac_tol)
     assignment = np.argmax(xbar, axis=1).astype(np.int64)
@@ -223,14 +253,18 @@ def build_lp_arrays_batch(batch: InstanceBatch):
     return c, A_ub, b_ub, A_eq, b_eq
 
 
-# status codes shared by the vectorized rounding and the fleet arrays path
+# status codes shared by the vectorized rounding and the fleet arrays path;
+# the numbering matches `problem.SOLUTION_STATUS_NAMES` (3 is the api-level
+# "bound" pseudo-status, never produced here)
 ST_OK, ST_FALLBACK, ST_INFEASIBLE = 0, 1, 2
-STATUS_NAMES = ("ok", "fallback", "infeasible")
+ST_UNSOLVED = 4
+STATUS_NAMES = ("ok", "fallback", "infeasible", "bound", "unsolved")
 
 
 def round_relaxation_batch(batch: InstanceBatch, xbar: np.ndarray,
                            status: np.ndarray, *,
-                           frac_tol: float = _FRAC_TOL):
+                           frac_tol: float = _FRAC_TOL,
+                           on_error: str = "raise"):
     """Vectorized `round_relaxation` across a whole batch.
 
     Algorithm 1's rounding cases run as array ops over the devices that hit
@@ -246,20 +280,21 @@ def round_relaxation_batch(batch: InstanceBatch, xbar: np.ndarray,
     m = mp1 - 1
     status = np.asarray(status)
     bad = (status != OPTIMAL) & (status != INFEASIBLE)
-    if bad.any():
+    if bad.any() and on_error != "mark":
         raise RuntimeError(
             f"LP relaxation did not converge (status={int(status[bad][0])})")
 
     assignment = np.argmax(xbar, axis=2).astype(np.int64)
     sched_status = np.zeros(B, dtype=np.int64)
     n_frac = np.zeros(B, dtype=np.int64)
+    sched_status[bad] = ST_UNSOLVED     # best-effort argmax, never rounded
 
     infeas = status == INFEASIBLE
     if infeas.any():
         assignment[infeas] = np.argmin(batch.p_ed[infeas], axis=2)
         sched_status[infeas] = ST_INFEASIBLE
 
-    ok = ~infeas
+    ok = ~infeas & ~bad
     frac_rows = (((xbar > frac_tol) & (xbar < 1.0 - frac_tol)).any(axis=2)
                  & ok[:, None])
     fc = frac_rows.sum(axis=1)
@@ -323,19 +358,28 @@ def round_relaxation_batch(batch: InstanceBatch, xbar: np.ndarray,
     return assignment, sched_status, n_frac
 
 
-def amr2_batch_arrays(batch: InstanceBatch, *, frac_tol: float = _FRAC_TOL):
+def amr2_batch_arrays(batch: InstanceBatch, *, frac_tol: float = _FRAC_TOL,
+                      maxiter: Optional[int] = None,
+                      warm_basis: Optional[np.ndarray] = None,
+                      impl: str = "jnp", on_error: str = "raise"):
     """Array-level batched AMR^2 for the fleet hot path: ONE vmapped LP
     solve + vectorized rounding, no per-device Schedule objects.
 
+    ``warm_basis`` (B, R) feeds the revised-simplex warm start — the basis
+    each device's LP ended on last period (`solve_lp_batch`); rows of -1
+    force a cold solve for that device.  ``impl="pallas"`` runs the warm
+    pivots through the `kernels/simplex_pivot` kernel.
+
     Returns ``(assignment (B, n), sched_status (B,), n_fractional (B,),
-    lp_accuracy (B,))``."""
+    lp_accuracy (B,), basis (B, R))``."""
     c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(batch)
-    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, maxiter=maxiter,
+                         warm_basis=warm_basis, impl=impl)
     B, n = batch.p_es.shape
     xbar = res.x.reshape(B, n, batch.m + 1)
     assignment, sched_status, n_frac = round_relaxation_batch(
-        batch, xbar, res.status, frac_tol=frac_tol)
-    return assignment, sched_status, n_frac, -res.fun
+        batch, xbar, res.status, frac_tol=frac_tol, on_error=on_error)
+    return assignment, sched_status, n_frac, -res.fun, res.basis
 
 
 def amr2_batch(batch: InstanceBatch, *,
@@ -347,10 +391,11 @@ def amr2_batch(batch: InstanceBatch, *,
     oracle to rounding-identical assignments); the rounding of at most two
     fractional jobs per instance is vectorized across the batch
     (`round_relaxation_batch`)."""
-    assignment, sched_status, n_frac, lp_acc = amr2_batch_arrays(
+    assignment, sched_status, n_frac, lp_acc, _ = amr2_batch_arrays(
         batch, frac_tol=frac_tol)
     return [Schedule(assignment=assignment[b], instance=batch[b],
-                     lp_accuracy=(None if sched_status[b] == ST_INFEASIBLE
+                     lp_accuracy=(None if sched_status[b] in
+                                  (ST_INFEASIBLE, ST_UNSOLVED)
                                   else float(lp_acc[b])),
                      n_fractional=int(n_frac[b]),
                      status=STATUS_NAMES[sched_status[b]], solver="amr2")

@@ -18,7 +18,30 @@ their sum, and "drives out" artificials that linger in the basis at level 0
 by prioritising their rows in the ratio test.  Phase 2 masks artificial
 columns from ever re-entering.
 
-Statuses: 0 optimal, 1 iteration limit, 2 infeasible, 3 unbounded.
+Anti-cycling: the entering rule is Dantzig's (most negative reduced cost)
+until ``bland_after`` consecutive degenerate (zero-improvement) pivots have
+run, then Bland's rule (smallest eligible index) takes over until a
+non-degenerate pivot resets the counter.  Together with the leaving
+tie-break (smallest basic-variable index among min-ratio ties) this makes
+every stall finite — Bland's theorem — in both backends.
+
+Warm starts: consecutive fleet periods solve near-identical instances, so
+`solve_lp` / `solve_lp_batch` accept the previous period's optimal basis
+(``warm_basis``).  The warm path factors the basis once (one batched
+``jnp.linalg.solve``), prices the full tableau out of it, skips phase 1
+entirely when the basis is still primal feasible, and runs phase-2 pivots
+from there — a revised-simplex start, typically 0–4 pivots instead of the
+~R phase-1 + phase-2 pivots of a cold solve.  Lanes whose basis is rejected
+(stale indices, singular/ill-conditioned factor, primal infeasible) fall
+back to the existing two-phase path.  The batched pivot itself is a rank-1
+update across the fleet dimension: ``impl="jnp"`` (default) uses the shared
+`kernels/simplex_pivot/ref.py` update, ``impl="pallas"`` routes through the
+`kernels/simplex_pivot` TPU kernel.
+
+Statuses: 0 optimal, 1 iteration limit, 2 infeasible, 3 unbounded.  Phase-1
+non-convergence propagates (a maxiter-capped phase 1 can neither certify
+feasibility nor hand phase 2 a valid basis, so the result is reported as
+ITERATION_LIMIT rather than silently "optimal").
 """
 from __future__ import annotations
 
@@ -33,6 +56,12 @@ import numpy as np
 from .types import next_pow2
 
 OPTIMAL, ITERATION_LIMIT, INFEASIBLE, UNBOUNDED = 0, 1, 2, 3
+
+# Consecutive degenerate pivots tolerated before the entering rule switches
+# from Dantzig to Bland.  Degenerate stalls shorter than this are common and
+# harmless; a genuine cycle never improves the objective, so it cannot
+# outlive the switch.
+BLAND_AFTER = 8
 
 
 def _bucket_maxiter(maxiter: int) -> int:
@@ -53,6 +82,7 @@ class LPResult:
     status: int
     niter: int
     basis: np.ndarray  # row -> basic variable index
+    warm: bool = False  # True when a warm_basis start was accepted
 
     @property
     def success(self) -> bool:
@@ -67,6 +97,7 @@ class BatchLPResult:
     status: np.ndarray   # (B,) int
     niter: np.ndarray    # (B,) int
     basis: np.ndarray    # (B, R) int
+    warm: Optional[np.ndarray] = None  # (B,) bool: warm start accepted
 
     def __len__(self) -> int:
         return self.x.shape[0]
@@ -74,7 +105,9 @@ class BatchLPResult:
     def __getitem__(self, b: int) -> LPResult:
         return LPResult(x=self.x[b], fun=float(self.fun[b]),
                         status=int(self.status[b]), niter=int(self.niter[b]),
-                        basis=self.basis[b])
+                        basis=self.basis[b],
+                        warm=bool(self.warm[b]) if self.warm is not None
+                        else False)
 
 
 # --------------------------------------------------------------------------
@@ -112,7 +145,7 @@ def _canonicalize(c, A_ub, b_ub, A_eq, b_eq):
 # JAX backend
 # --------------------------------------------------------------------------
 def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
-                   tol: float = 1e-7):
+                   tol: float = 1e-7, bland_after: int = BLAND_AFTER):
     """Run pivots until optimal / maxiter / unbounded.
 
     tableau: (R+1, C+1); last row = objective (reduced costs | -obj value),
@@ -123,22 +156,25 @@ def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
     R = tableau.shape[0] - 1
     C = tableau.shape[1] - 1
     cols = jnp.arange(C)
-    rows = jnp.arange(R)
 
     def cond(state):
-        tab, basis, it, status = state
+        tab, basis, it, status, degen = state
         rc = tab[-1, :C]
         can_enter = (rc < -tol) & (cols < art_start)
         return (status == ITERATION_LIMIT) & jnp.any(can_enter) & (it < maxiter)
 
     def body(state):
-        tab, basis, it, status = state
+        tab, basis, it, status, degen = state
         rc = tab[-1, :C]
         enter_mask = (rc < -tol) & (cols < art_start)
-        # Dantzig rule; Bland tie-break via index bias keeps cycling at bay
-        # for the scale of instances we solve.
+        # Dantzig rule while pivots improve the objective; after
+        # `bland_after` consecutive degenerate pivots switch to Bland's
+        # smallest-index rule (with the smallest-basis-index leaving
+        # tie-break below, Bland's theorem rules out cycling).
         score = jnp.where(enter_mask, rc, jnp.inf)
-        j = jnp.argmin(score)
+        j_dantzig = jnp.argmin(score)
+        j_bland = jnp.argmax(enter_mask)          # first eligible index
+        j = jnp.where(degen >= bland_after, j_bland, j_dantzig)
 
         col = tab[:R, j]
         rhsv = tab[:R, -1]
@@ -165,19 +201,21 @@ def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
         tab2 = jnp.where(unbounded, tab, tab2)
         basis2 = jnp.where(unbounded, basis, basis2)
         status2 = jnp.where(unbounded, UNBOUNDED, status)
-        return tab2, basis2, it + 1, status2
+        degen2 = jnp.where(unbounded, degen,
+                           jnp.where(rmin <= tol, degen + 1,
+                                     jnp.zeros_like(degen)))
+        return tab2, basis2, it + 1, status2, degen2
 
     init = (tableau, basis, jnp.array(0, jnp.int32),
-            jnp.array(ITERATION_LIMIT, jnp.int32))
-    tab, basis, it, status = jax.lax.while_loop(cond, body, init)
+            jnp.array(ITERATION_LIMIT, jnp.int32), jnp.array(0, jnp.int32))
+    tab, basis, it, status, _ = jax.lax.while_loop(cond, body, init)
     rc = tab[-1, :C]
     done = ~jnp.any((rc < -tol) & (cols < art_start))
     status = jnp.where((status == ITERATION_LIMIT) & done, OPTIMAL, status)
-    del rows
     return tab, basis, it, status
 
 
-def _solve_core(A_j, b_j, c_j, nv, maxiter, tol):
+def _solve_core(A_j, b_j, c_j, nv, maxiter, tol, bland_after=BLAND_AFTER):
     """Pure-jnp two-phase simplex on one canonicalised instance.
 
     Shapes are static given (R, C0), so this traces once per problem shape
@@ -196,7 +234,8 @@ def _solve_core(A_j, b_j, c_j, nv, maxiter, tol):
     basis = jnp.arange(C0, C, dtype=jnp.int32)
 
     tab, basis, it1, status1 = _simplex_phase(
-        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol)
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol,
+        bland_after=bland_after)
     phase1_obj = tab[-1, -1]  # = -(sum of artificials)
     infeasible = phase1_obj < -max(tol, 1e-5) * (1.0 + jnp.abs(b_j).sum())
 
@@ -208,46 +247,337 @@ def _solve_core(A_j, b_j, c_j, nv, maxiter, tol):
     obj = obj - cb @ tab[:R, :]
     tab = tab.at[-1, :].set(obj)
     tab, basis, it2, status2 = _simplex_phase(
-        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol)
+        tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol,
+        bland_after=bland_after)
 
     x = jnp.zeros((C,), dtype).at[basis].set(tab[:R, -1])
     fun = -tab[-1, -1]
-    status = jnp.where(infeasible, INFEASIBLE, status2)
+    # A capped phase 1 can neither certify infeasibility nor hand phase 2 a
+    # valid starting basis: propagate its status instead of trusting the
+    # phase-2 verdict built on top of it.
+    status = jnp.where(status1 != OPTIMAL, status1,
+                       jnp.where(infeasible, INFEASIBLE, status2))
     return x[:nv], fun, status, it1 + it2, basis
 
 
-def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol):
+def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol, bland_after):
     dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     return _solve_single_jit(jnp.asarray(A, dtype), jnp.asarray(b, dtype),
                              jnp.asarray(c_full, dtype), nv=nv,
-                             maxiter=maxiter, tol=tol)
+                             maxiter=maxiter, tol=tol,
+                             bland_after=bland_after)
 
 
-@partial(jax.jit, static_argnames=("nv", "maxiter", "tol"))
-def _solve_single_jit(A_j, b_j, c_j, *, nv, maxiter, tol):
-    return _solve_core(A_j, b_j, c_j, nv, maxiter, tol)
+@partial(jax.jit, static_argnames=("nv", "maxiter", "tol", "bland_after"))
+def _solve_single_jit(A_j, b_j, c_j, *, nv, maxiter, tol,
+                      bland_after=BLAND_AFTER):
+    return _solve_core(A_j, b_j, c_j, nv, maxiter, tol, bland_after)
 
 
-@partial(jax.jit, static_argnames=("nv", "maxiter", "tol"))
-def _solve_batch_jit(A_j, b_j, c_j, *, nv, maxiter, tol):
+@partial(jax.jit, static_argnames=("nv", "maxiter", "tol", "bland_after"))
+def _solve_batch_jit(A_j, b_j, c_j, *, nv, maxiter, tol,
+                     bland_after=BLAND_AFTER):
     return jax.vmap(
-        lambda A1, b1, c1: _solve_core(A1, b1, c1, nv, maxiter, tol)
+        lambda A1, b1, c1: _solve_core(A1, b1, c1, nv, maxiter, tol,
+                                       bland_after)
     )(A_j, b_j, c_j)
+
+
+# --------------------------------------------------------------------------
+# Warm-started revised simplex (batched)
+# --------------------------------------------------------------------------
+def _pivot_update_batch(tabs, r, j, mask, impl: str):
+    """One rank-1 pivot across the whole lane stack.
+
+    ``impl="jnp"`` uses the shared reference update; ``impl="pallas"``
+    routes through the `kernels/simplex_pivot` TPU kernel (interpret mode
+    off-TPU, like `cckp_dp`)."""
+    if impl == "pallas":
+        from ..kernels.simplex_pivot import ops as _pivot_ops
+        return _pivot_ops.pivot_update(tabs, r, j, mask)
+    from ..kernels.simplex_pivot.ref import pivot_update_ref
+    return pivot_update_ref(tabs, r, j, mask)
+
+
+def _phase_batched(tabs, bases, art_start: int, *, maxiter: int, tol: float,
+                   bland_after: int, impl: str):
+    """Masked batched simplex phase over stacked tableaus (B, R+1, C+1).
+
+    Per-lane semantics match `_simplex_phase` (Dantzig entering with the
+    Bland fallback, smallest-basis-index leaving tie-break, artificial
+    drive-out) but every iteration pivots ALL still-active lanes at once —
+    the rank-1 update runs across the fleet dimension in one call
+    (`_pivot_update_batch`), which is what the `simplex_pivot` Pallas
+    kernel accelerates."""
+    B, R1, C1 = tabs.shape
+    R, C = R1 - 1, C1 - 1
+    cols = jnp.arange(C)
+    intmax = jnp.iinfo(jnp.int32).max
+
+    def cond(state):
+        tabs, bases, it, status, degen = state
+        return jnp.any((status == ITERATION_LIMIT) & (it < maxiter))
+
+    def body(state):
+        tabs, bases, it, status, degen = state
+        rc = tabs[:, -1, :C]                              # (B, C)
+        enter_mask = (rc < -tol) & (cols[None, :] < art_start)
+        has_enter = enter_mask.any(axis=1)
+        running = status == ITERATION_LIMIT
+        status = jnp.where(running & ~has_enter, OPTIMAL, status)
+        active = running & has_enter & (it < maxiter)
+
+        score = jnp.where(enter_mask, rc, jnp.inf)
+        j_dantzig = jnp.argmin(score, axis=1)
+        j_bland = jnp.argmax(enter_mask, axis=1)
+        j = jnp.where(degen >= bland_after, j_bland,
+                      j_dantzig).astype(jnp.int32)
+
+        col = jnp.take_along_axis(tabs[:, :R, :], j[:, None, None],
+                                  axis=2)[..., 0]         # (B, R)
+        rhsv = tabs[:, :R, -1]
+        pos = col > tol
+        ratio = jnp.where(pos, rhsv / jnp.where(pos, col, 1.0), jnp.inf)
+        art_basic = ((bases >= art_start) & (jnp.abs(col) > tol)
+                     & (rhsv <= tol))
+        ratio = jnp.where(art_basic, 0.0, ratio)
+        unbounded = ~jnp.any(ratio < jnp.inf, axis=1)
+        rmin = jnp.min(ratio, axis=1)
+        tie = ratio <= (rmin + jnp.maximum(jnp.abs(rmin) * 1e-9,
+                                           1e-12))[:, None]
+        r = jnp.argmin(jnp.where(tie, bases, intmax),
+                       axis=1).astype(jnp.int32)
+
+        do_pivot = active & ~unbounded
+        tabs = _pivot_update_batch(tabs, r, j, do_pivot, impl)
+        is_r = jnp.arange(R)[None, :] == r[:, None]
+        bases = jnp.where(do_pivot[:, None] & is_r, j[:, None], bases)
+        status = jnp.where(active & unbounded, UNBOUNDED, status)
+        degen = jnp.where(do_pivot,
+                          jnp.where(rmin <= tol, degen + 1,
+                                    jnp.zeros_like(degen)), degen)
+        return tabs, bases, it + active.astype(it.dtype), status, degen
+
+    init = (tabs, bases, jnp.zeros(B, jnp.int32),
+            jnp.full(B, ITERATION_LIMIT, jnp.int32), jnp.zeros(B, jnp.int32))
+    tabs, bases, it, status, _ = jax.lax.while_loop(cond, body, init)
+    rc = tabs[:, -1, :C]
+    done = ~((rc < -tol) & (cols[None, :] < art_start)).any(axis=1)
+    status = jnp.where((status == ITERATION_LIMIT) & done, OPTIMAL, status)
+    return tabs, bases, it, status
+
+
+def _batched_inverse(Bmat):
+    """Gauss-Jordan inverse with partial pivoting, vectorized across the
+    lane axis: (B, R, R) -> (B, R, R).
+
+    XLA:CPU's batched `jnp.linalg.solve` costs ~4 ms for 256 14x14 lanes
+    (it serializes the per-lane LAPACK calls) — an R-step fori_loop of
+    whole-batch rank-1 eliminations is ~5x cheaper at fleet sizes and is
+    exactly the same shaped work as the simplex pivots that follow.
+    Singular lanes come out inf/nan and are caught by the caller's
+    residual check."""
+    B, R, _ = Bmat.shape
+    dtype = Bmat.dtype
+    eye = jnp.broadcast_to(jnp.eye(R, dtype=dtype), (B, R, R))
+    aug = jnp.concatenate([Bmat, eye], axis=2)             # (B, R, 2R)
+    rows = jnp.arange(R)
+
+    def body(k, aug):
+        col = jax.lax.dynamic_index_in_dim(aug, k, axis=2, keepdims=False)
+        cand = jnp.where(rows[None, :] >= k, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand, axis=1)                       # pivot row
+        row_p = jnp.take_along_axis(aug, p[:, None, None], axis=1)[:, 0]
+        row_k = jax.lax.dynamic_index_in_dim(aug, k, axis=1,
+                                             keepdims=False)
+        is_k = rows[None, :] == k
+        is_p = rows[None, :] == p[:, None]
+        aug = jnp.where(is_k[:, :, None], row_p[:, None, :], aug)
+        aug = jnp.where((is_p & ~is_k)[:, :, None], row_k[:, None, :], aug)
+        piv_row = jax.lax.dynamic_index_in_dim(aug, k, axis=1,
+                                               keepdims=False)
+        piv = jax.lax.dynamic_index_in_dim(piv_row, k, axis=1,
+                                           keepdims=True)
+        piv_row = piv_row / piv
+        colv = jax.lax.dynamic_index_in_dim(aug, k, axis=2,
+                                            keepdims=False)
+        new = aug - colv[:, :, None] * piv_row[:, None, :]
+        return jnp.where(is_k[:, :, None], piv_row[:, None, :], new)
+
+    aug = jax.lax.fori_loop(0, R, body, aug)
+    return aug[:, :, R:]
+
+
+@partial(jax.jit,
+         static_argnames=("nv", "maxiter", "tol", "bland_after", "impl"))
+def _warm_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
+                    bland_after=BLAND_AFTER, impl="jnp"):
+    """Revised-simplex warm start from a previous optimal basis.
+
+    Factors each lane's basis once (one batched solve) and prices the full
+    tableau out of it.  Rows the old basis leaves primal-infeasible on the
+    new data (negative transformed rhs) are sign-flipped and handed a
+    tableau-space artificial, so phase 1 shrinks to ~#violated-rows repair
+    pivots — and vanishes entirely (zero pivots) when the basis is still
+    feasible — instead of the cold path's from-scratch R-pivot phase 1.
+    Phase 2 then runs from the (repaired) old vertex.
+
+    Returns ``(x, fun, status, niter, basis, ok)``; lanes with ``ok``
+    False (out-of-range basis indices or a singular/ill-conditioned
+    factor) hold garbage and must be re-solved by the cold two-phase
+    path.
+
+    The repair artificials are *virtual*: they may never enter (so their
+    reduced costs are never read) and the drive-out/pricing rules only
+    need their basis LABELS (>= C0), so their columns are never
+    materialized — the warm tableau stays (R+1, C0+1) wide, ~25% less
+    pivot traffic than the cold tableau."""
+    B, R, C0 = A_j.shape
+    dtype = A_j.dtype
+    bas = jnp.clip(basis0, 0, C0 - 1).astype(jnp.int32)
+    in_range = (basis0 >= 0).all(axis=1) & (basis0 < C0).all(axis=1)
+
+    Bmat = jnp.take_along_axis(A_j, bas[:, None, :], axis=2)   # (B, R, R)
+    eye = jnp.eye(R, dtype=dtype)
+    Binv = _batched_inverse(Bmat)
+    resid = jnp.max(jnp.abs(Bmat @ Binv - eye), axis=(1, 2))
+    rhs = (Binv @ b_j[..., None])[..., 0]                      # (B, R)
+    tabA = Binv @ A_j                                          # (B, R, C0)
+
+    # f32 (global x64 off, single-instance path) carries ~1e-7 relative
+    # noise through the factor-solve: loosen the accept thresholds so a
+    # basic variable sitting numerically at 0 does not bounce the basis
+    feas_tol, resid_tol = (1e-9, 1e-6) if dtype == jnp.float64 \
+        else (1e-5, 1e-3)
+    ok = in_range & jnp.isfinite(resid) & (resid < resid_tol)
+
+    # feasibility repair: flip violated rows; each flipped row's virtual
+    # artificial goes basic (label C0 + row)
+    flip = rhs < -feas_tol                                     # (B, R)
+    sgn = jnp.where(flip, -1.0, 1.0)
+    tabA = tabA * sgn[:, :, None]
+    rhs = jnp.maximum(rhs * sgn, 0.0)      # clamp -feas_tol..0 dust to 0
+    rows = jnp.arange(R, dtype=jnp.int32)
+    bas = jnp.where(flip, C0 + rows[None, :], bas)
+
+    tabs = jnp.zeros((B, R + 1, C0 + 1), dtype)
+    tabs = tabs.at[:, :R, :C0].set(tabA)
+    tabs = tabs.at[:, :R, -1].set(rhs)
+    # phase-1 objective (sum of basic repair artificials) in reduced-cost
+    # form: minus the sum of the flipped rows — the artificials' own
+    # columns would be zeroed anyway, hence never materialized
+    p1 = -jnp.einsum("br,brc->bc",
+                     jnp.where(flip, 1.0, 0.0).astype(dtype),
+                     tabs[:, :R, :])
+    tabs = tabs.at[:, -1, :].set(p1)
+    # rejected lanes: zero tableau -> no entering column -> 0 pivots spent
+    tabs = jnp.where(ok[:, None, None], tabs, 0.0)
+
+    tabs, bases, it1, status1 = _phase_batched(
+        tabs, bas, C0, maxiter=maxiter, tol=tol, bland_after=bland_after,
+        impl=impl)
+    phase1_obj = tabs[:, -1, -1]           # = -(sum of repair artificials)
+    infeasible = phase1_obj < -max(tol, 1e-5) * (
+        1.0 + jnp.abs(b_j).sum(axis=1))
+
+    # phase 2: swap in the real objective, priced out over the basis
+    # (virtual artificial labels price at cost 0)
+    obj = jnp.zeros((B, C0 + 1), dtype)
+    obj = obj.at[:, :C0].set(c_j)
+    cb = jnp.where(bases < C0,
+                   jnp.take_along_axis(obj[:, :C0],
+                                       jnp.clip(bases, 0, C0 - 1), axis=1),
+                   0.0)                                        # (B, R)
+    obj = obj - jnp.einsum("br,brc->bc", cb, tabs[:, :R, :])
+    tabs = tabs.at[:, -1, :].set(obj)
+    tabs, bases, it2, status2 = _phase_batched(
+        tabs, bases, C0, maxiter=maxiter, tol=tol, bland_after=bland_after,
+        impl=impl)
+
+    # scatter-add: clipped virtual-artificial labels contribute 0, so they
+    # cannot clobber a real basic variable's slot
+    vals = jnp.where(bases < C0, tabs[:, :R, -1], 0.0)
+    x = jnp.zeros((B, C0), dtype)
+    x = x.at[jnp.arange(B)[:, None], jnp.clip(bases, 0, C0 - 1)].add(vals)
+    fun = -tabs[:, -1, -1]
+    status = jnp.where(status1 != OPTIMAL, status1,
+                       jnp.where(infeasible, INFEASIBLE, status2))
+    return x[:, :nv], fun, status, it1 + it2, bases, ok
+
+
+def _warm_np(A, b, c_full, nv, basis0, maxiter, tol, bland_after):
+    """NumPy warm start: same algorithm as `_warm_batch_jit` (basis
+    factorization, sign-flip + tableau-space-artificial feasibility
+    repair, warm phase 1 + phase 2), one instance.  The oracle path keeps
+    the artificial columns materialized — clarity over the batched path's
+    virtual-label trick.  Returns an LPResult-tuple or None on basis
+    rejection."""
+    R, C0 = A.shape
+    C = C0 + R
+    basis0 = np.asarray(basis0)
+    if basis0.shape != (R,) or (basis0 < 0).any() or (basis0 >= C0).any():
+        return None
+    Bmat = A[:, basis0]
+    try:
+        Binv = np.linalg.solve(Bmat, np.eye(R))
+    except np.linalg.LinAlgError:
+        return None
+    resid = np.max(np.abs(Bmat @ Binv - np.eye(R)))
+    if not np.isfinite(resid) or resid >= 1e-6:
+        return None
+    rhs = Binv @ b
+    tabA = Binv @ A
+
+    flip = rhs < -1e-9                       # feasibility-repair rows
+    sgn = np.where(flip, -1.0, 1.0)
+    tabA = tabA * sgn[:, None]
+    rhs = np.maximum(rhs * sgn, 0.0)
+    basis = basis0.astype(np.int64).copy()
+    basis[flip] = C0 + np.nonzero(flip)[0]
+
+    tab = np.zeros((R + 1, C + 1))
+    tab[:R, :C0] = tabA
+    tab[:R, C0:C] = np.eye(R)
+    tab[:R, -1] = rhs
+    tab[-1, :] = -tab[:R, :][flip].sum(axis=0)
+    tab[-1, C0:C] = 0.0
+    tab, basis, it1, st1 = _phase_np(tab, basis, C0, maxiter, tol,
+                                     bland_after)
+    infeasible = tab[-1, -1] < -max(tol, 1e-8) * (1.0 + np.abs(b).sum())
+
+    obj = np.zeros(C + 1)
+    obj[:C0] = c_full
+    obj = obj - obj[basis] @ tab[:R, :]
+    tab[-1, :] = obj
+    tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol,
+                                     bland_after)
+    x = np.zeros(C)
+    x[basis] = tab[:R, -1]
+    if st1 != OPTIMAL:
+        status = st1
+    else:
+        status = INFEASIBLE if infeasible else st2
+    return x[:nv], -tab[-1, -1], status, it1 + it2, basis
 
 
 # --------------------------------------------------------------------------
 # NumPy backend (float64 reference)
 # --------------------------------------------------------------------------
-def _phase_np(tab, basis, art_start, maxiter, tol):
+def _phase_np(tab, basis, art_start, maxiter, tol,
+              bland_after=BLAND_AFTER):
     R = tab.shape[0] - 1
     C = tab.shape[1] - 1
     it = 0
+    degen = 0
     while it < maxiter:
         rc = tab[-1, :C]
         enter = np.where((rc < -tol) & (np.arange(C) < art_start))[0]
         if enter.size == 0:
             return tab, basis, it, OPTIMAL
-        j = enter[np.argmin(rc[enter])]
+        if degen >= bland_after:
+            j = enter[0]                  # Bland: smallest eligible index
+        else:
+            j = enter[np.argmin(rc[enter])]
         col = tab[:R, j]
         rhs = tab[:R, -1]
         ratio = np.full(R, np.inf)
@@ -267,11 +597,13 @@ def _phase_np(tab, basis, art_start, maxiter, tol):
             if k != r and abs(tab[k, j]) > 0:
                 tab[k] -= tab[k, j] * tab[r]
         basis[r] = j
+        degen = degen + 1 if rmin <= tol else 0
         it += 1
     return tab, basis, it, ITERATION_LIMIT
 
 
-def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol):
+def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol,
+              bland_after=BLAND_AFTER):
     R, C0 = A.shape
     C = C0 + R
     tab = np.zeros((R + 1, C + 1))
@@ -282,19 +614,26 @@ def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol):
     tab[-1, C0:C] = 0.0
     basis = np.arange(C0, C, dtype=np.int64)
 
-    tab, basis, it1, st1 = _phase_np(tab, basis, C0, maxiter, tol)
+    tab, basis, it1, st1 = _phase_np(tab, basis, C0, maxiter, tol,
+                                     bland_after)
     infeasible = tab[-1, -1] < -max(tol, 1e-8) * (1.0 + np.abs(b).sum())
 
     obj = np.zeros(C + 1)
     obj[:C0] = c_full
     obj = obj - obj[basis] @ tab[:R, :]
     tab[-1, :] = obj
-    tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol)
+    tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol,
+                                     bland_after)
 
     x = np.zeros(C)
     x[basis] = tab[:R, -1]
     fun = -tab[-1, -1]
-    status = INFEASIBLE if infeasible else st2
+    # mirror the jax path: an unconverged phase 1 invalidates both the
+    # infeasibility certificate and the phase-2 result
+    if st1 != OPTIMAL:
+        status = st1
+    else:
+        status = INFEASIBLE if infeasible else st2
     return x[:nv], fun, status, it1 + it2, basis
 
 
@@ -303,9 +642,20 @@ def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol):
 # --------------------------------------------------------------------------
 def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
              backend: str = "numpy", maxiter: Optional[int] = None,
-             tol: float = 1e-7) -> LPResult:
-    """Minimize c@x s.t. A_ub x <= b_ub, A_eq x == b_eq, x >= 0."""
+             tol: float = 1e-7, warm_basis: Optional[np.ndarray] = None,
+             bland_after: int = BLAND_AFTER) -> LPResult:
+    """Minimize c@x s.t. A_ub x <= b_ub, A_eq x == b_eq, x >= 0.
+
+    ``warm_basis`` (a previous `LPResult.basis` for a structurally
+    identical instance) starts the solve from that basis, skipping phase 1
+    when it is still feasible; a rejected basis falls back to the cold
+    two-phase solve (``LPResult.warm`` reports which path ran)."""
     A, b, c_full, nv, n_slack = _canonicalize(c, A_ub, b_ub, A_eq, b_eq)
+    if warm_basis is not None \
+            and np.asarray(warm_basis).shape != (A.shape[0],):
+        raise ValueError(
+            f"warm_basis must be ({A.shape[0]},) — one basic column per "
+            f"constraint row; got {np.asarray(warm_basis).shape}")
     if maxiter is None:
         maxiter = 50 * (A.shape[0] + 2)
         if backend == "jax":          # static argname: bucket the trace key
@@ -313,15 +663,41 @@ def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
     if backend == "jax":
         if not jax.config.jax_enable_x64:
             tol = max(tol, 1e-5)
+        if warm_basis is not None:       # shape validated above
+            wb = np.asarray(warm_basis, np.int64)
+            dtype = jnp.float64 if jax.config.jax_enable_x64 \
+                else jnp.float32
+            xw, funw, stw, itw, basw, okw = jax.tree_util.tree_map(
+                np.asarray,
+                _warm_batch_jit(jnp.asarray(A[None], dtype),
+                                jnp.asarray(b[None], dtype),
+                                jnp.asarray(c_full[None], dtype),
+                                jnp.asarray(wb[None]),
+                                nv=nv, maxiter=maxiter, tol=tol,
+                                bland_after=bland_after))
+            if bool(okw[0]):
+                return LPResult(x=np.asarray(xw[0], np.float64),
+                                fun=float(funw[0]), status=int(stw[0]),
+                                niter=int(itw[0]),
+                                basis=np.asarray(basw[0], np.int64),
+                                warm=True)
         x, fun, status, niter, basis = jax.tree_util.tree_map(
             np.asarray,
-            _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol))
+            _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol,
+                       bland_after))
         return LPResult(x=np.asarray(x, np.float64), fun=float(fun),
                         status=int(status), niter=int(niter),
                         basis=np.asarray(basis))
     elif backend == "numpy":
+        if warm_basis is not None:
+            got = _warm_np(A, b, c_full, nv, warm_basis, maxiter, tol,
+                           bland_after)
+            if got is not None:
+                x, fun, status, niter, basis = got
+                return LPResult(x=x, fun=float(fun), status=int(status),
+                                niter=int(niter), basis=basis, warm=True)
         x, fun, status, niter, basis = _solve_np(A, b, c_full, nv, n_slack,
-                                                 maxiter, tol)
+                                                 maxiter, tol, bland_after)
         return LPResult(x=x, fun=float(fun), status=int(status),
                         niter=int(niter), basis=basis)
     raise ValueError(f"unknown backend {backend!r}")
@@ -358,7 +734,9 @@ def _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq):
 
 
 def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
-                   maxiter: Optional[int] = None, tol: float = 1e-7
+                   maxiter: Optional[int] = None, tol: float = 1e-7,
+                   warm_basis: Optional[np.ndarray] = None,
+                   impl: str = "jnp", bland_after: int = BLAND_AFTER
                    ) -> BatchLPResult:
     """Solve B structurally-identical LPs in one jitted `vmap` of the simplex.
 
@@ -366,20 +744,69 @@ def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
     in float64 (via a local `enable_x64` scope) regardless of the global jax
     precision mode so the batched path stays bit-comparable with the NumPy
     oracle; the schedulable fleet sizes here make the 2x memory irrelevant.
+
+    ``warm_basis`` (B, R) starts every lane from that basis via the
+    revised-simplex warm path; rejected lanes (stale / singular / primal
+    infeasible bases — pass -1 rows to force a cold solve) are re-solved by
+    the two-phase path in one extra jitted call over the rejected subset.
+    ``impl="pallas"`` runs the warm path's batched pivot through the
+    `kernels/simplex_pivot` TPU kernel.
     """
     A, b, c_full, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
     if maxiter is None:
         maxiter = _bucket_maxiter(50 * (A.shape[1] + 2))
     from jax.experimental import enable_x64
     with enable_x64():
+        if warm_basis is not None:
+            wb = np.asarray(warm_basis, np.int64)
+            if wb.shape != A.shape[:2]:
+                raise ValueError(
+                    f"warm_basis must be (B, R) = {A.shape[:2]}; "
+                    f"got {wb.shape}")
+            x, fun, status, niter, basis, ok = jax.tree_util.tree_map(
+                np.asarray,
+                _warm_batch_jit(jnp.asarray(A, jnp.float64),
+                                jnp.asarray(b, jnp.float64),
+                                jnp.asarray(c_full, jnp.float64),
+                                jnp.asarray(wb),
+                                nv=nv, maxiter=maxiter, tol=tol,
+                                bland_after=bland_after, impl=impl))
+            x, fun = x.copy(), fun.copy()
+            status, niter, basis = status.copy(), niter.copy(), basis.copy()
+            cold = np.nonzero(~ok)[0]
+            if len(cold):
+                # pow2-pad the rejected subset (repeat the last row) so
+                # fluctuating rejection counts reuse O(log B) traces
+                sel = np.concatenate(
+                    [cold, np.full(next_pow2(len(cold)) - len(cold),
+                                   cold[-1], dtype=np.int64)])
+                xc, func, stc, nitc, basc = jax.tree_util.tree_map(
+                    np.asarray,
+                    _solve_batch_jit(jnp.asarray(A[sel], jnp.float64),
+                                     jnp.asarray(b[sel], jnp.float64),
+                                     jnp.asarray(c_full[sel], jnp.float64),
+                                     nv=nv, maxiter=maxiter, tol=tol,
+                                     bland_after=bland_after))
+                k = len(cold)
+                x[cold], fun[cold] = xc[:k], func[:k]
+                status[cold], niter[cold] = stc[:k], nitc[:k]
+                basis[cold] = basc[:k]
+            return BatchLPResult(x=np.asarray(x, np.float64),
+                                 fun=np.asarray(fun, np.float64),
+                                 status=np.asarray(status, np.int64),
+                                 niter=np.asarray(niter, np.int64),
+                                 basis=np.asarray(basis, np.int64),
+                                 warm=np.asarray(ok, bool))
         x, fun, status, niter, basis = jax.tree_util.tree_map(
             np.asarray,
             _solve_batch_jit(jnp.asarray(A, jnp.float64),
                              jnp.asarray(b, jnp.float64),
                              jnp.asarray(c_full, jnp.float64),
-                             nv=nv, maxiter=maxiter, tol=tol))
+                             nv=nv, maxiter=maxiter, tol=tol,
+                             bland_after=bland_after))
     return BatchLPResult(x=np.asarray(x, np.float64),
                          fun=np.asarray(fun, np.float64),
                          status=np.asarray(status, np.int64),
                          niter=np.asarray(niter, np.int64),
-                         basis=np.asarray(basis))
+                         basis=np.asarray(basis),
+                         warm=np.zeros(len(x), dtype=bool))

@@ -32,10 +32,12 @@ import numpy as np
 
 from .types import InstanceBatch, OffloadInstance, Schedule, next_pow2
 
-# Extends core.amr2.STATUS_NAMES (ok/fallback/infeasible share codes with
-# the vectorized rounding path) with the LP bound-only pseudo-status.
-SOLUTION_STATUS_NAMES = ("ok", "fallback", "infeasible", "bound")
+# Shares codes with core.amr2.STATUS_NAMES (ok/fallback/infeasible from the
+# vectorized rounding path, "unsolved" for an LP that hit its iteration
+# limit or went unbounded) plus the LP bound-only pseudo-status at 3.
+SOLUTION_STATUS_NAMES = ("ok", "fallback", "infeasible", "bound", "unsolved")
 ST_BOUND = 3
+ST_UNSOLVED = 4
 
 # Uniform huge ES sentinel: makes offloading infeasible for real jobs on the
 # ES-disabled (backpressure / outage) paths, same trick as the legacy
@@ -255,6 +257,10 @@ class Solution:
     plan_seconds: float = 0.0
     lp_accuracy: Optional[np.ndarray] = None    # A*_LP bound when available
     n_fractional: Optional[np.ndarray] = None
+    # optimal simplex basis from LP-backed solvers (amr2/lp): (R,) or (B, R)
+    # int, -1 rows for devices another solver handled.  Feed it back as
+    # `solve(..., warm_start=solution.basis)` to warm-start the next period.
+    basis: Optional[np.ndarray] = None
     # exact legacy Schedule(s) when the solver produced them (object paths)
     _schedules: Optional[List[Schedule]] = dataclasses.field(
         default=None, repr=False)

@@ -1,0 +1,13 @@
+"""jit'd wrapper exposing the kernel with `core.lp`'s batched pivot-update
+signature (so the warm-started simplex drops it in as ``impl="pallas"``,
+mirroring how `cckp_dp` is wired into AMDP)."""
+from __future__ import annotations
+
+import jax
+
+from .simplex_pivot import simplex_pivot
+
+
+def pivot_update(tabs, r, j, mask):
+    interpret = jax.default_backend() != "tpu"
+    return simplex_pivot(tabs, r, j, mask, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp reference for the batched simplex pivot (rank-1 tableau update).
+
+This is both the oracle the Pallas kernel is tested against and the default
+(``impl="jnp"``) implementation the warm-started fleet LP path uses — there
+is ONE definition of the update, shared by `core.lp._phase_batched` and the
+kernel tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pivot_update_ref(tabs: jnp.ndarray, r: jnp.ndarray, j: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """One simplex pivot on every active lane of a tableau stack.
+
+    tabs: (B, R+1, C+1) tableaus (last row = reduced costs | -obj, last col
+    = rhs); r, j: (B,) pivot row/column per lane; mask: (B,) bool — lanes
+    with mask False pass through unchanged (their r/j may be garbage).
+
+    Row/column selection uses `take_along_axis`: on XLA:CPU the gather
+    lowering measures ~2x faster per pivot than the one-hot einsum
+    formulation the Pallas kernel uses (one-hot is the right shape for the
+    TPU VPU, gathers for CPU).
+    """
+    colv = jnp.take_along_axis(tabs, j[:, None, None], axis=2)[..., 0]
+    prow = jnp.take_along_axis(tabs, r[:, None, None], axis=1)[:, 0, :]
+    piv = jnp.take_along_axis(colv, r[:, None], axis=1)[:, 0]
+    piv = jnp.where(mask, piv, 1.0)         # masked lanes: avoid 0-divide
+    prow = prow / piv[:, None]
+    new = tabs - colv[:, :, None] * prow[:, None, :]
+    is_r = jnp.arange(tabs.shape[1])[None, :] == r[:, None]
+    new = jnp.where(is_r[:, :, None], prow[:, None, :], new)
+    return jnp.where(mask[:, None, None], new, tabs)

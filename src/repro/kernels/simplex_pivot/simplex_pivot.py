@@ -1,0 +1,70 @@
+"""Batched simplex pivot kernel — TPU Pallas.
+
+One simplex pivot is a rank-1 update of a dense tableau:
+
+    tab' = tab - tab[:, j] (x) (tab[r, :] / tab[r, j]),   row r := tab[r]/piv
+
+The warm-started fleet LP path (`core.lp._phase_batched`) performs this
+across B device tableaus per iteration.  This kernel runs the whole stack in
+one ``pallas_call`` — grid over lanes, each (R+1, C+1) tableau resident in
+VMEM — with the per-lane pivot coordinates (r, j) and the active mask as
+scalar-prefetch operands.  Dynamic row/column selection uses
+broadcasted-iota one-hot masks (no gathers, pure VPU work) and inactive
+lanes copy through unchanged, mirroring the jnp reference in ``ref.py``.
+
+Like `cckp_dp`, the kernel runs in interpret mode off-TPU; fleet tableaus
+are float64 on CPU (the LP parity contract), so on a real TPU the caller
+must run the float32 LP mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, j_ref, mask_ref, tab_ref, out_ref):
+    b = pl.program_id(0)
+    tab = tab_ref[0]                       # (R1, C1) lane block
+    R1, C1 = tab.shape
+    r = r_ref[b]
+    j = j_ref[b]
+    active = mask_ref[b] != 0
+    rows = jax.lax.broadcasted_iota(jnp.int32, (R1, C1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R1, C1), 1)
+    is_r = rows == r
+    is_j = cols == j
+    piv = jnp.sum(jnp.where(is_r & is_j, tab, 0.0))
+    piv = jnp.where(active, piv, jnp.ones((), tab.dtype))
+    prow = jnp.sum(jnp.where(is_r, tab, 0.0), axis=0) / piv    # (C1,)
+    colv = jnp.sum(jnp.where(is_j, tab, 0.0), axis=1)          # (R1,)
+    upd = tab - colv[:, None] * prow[None, :]
+    upd = jnp.where(is_r, prow[None, :], upd)
+    out_ref[0] = jnp.where(active, upd, tab)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simplex_pivot(tabs: jnp.ndarray, r: jnp.ndarray, j: jnp.ndarray,
+                  mask: jnp.ndarray, *, interpret: bool = True):
+    """Pivot every active lane of a (B, R+1, C+1) tableau stack.
+
+    r, j: (B,) int pivot coordinates; mask: (B,) bool/int lane-active flags
+    (inactive lanes pass through, their r/j may be garbage).
+    """
+    B, R1, C1 = tabs.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, R1, C1), lambda b, *_: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, R1, C1), lambda b, *_: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R1, C1), tabs.dtype),
+        interpret=interpret,
+    )(r.astype(jnp.int32), j.astype(jnp.int32), mask.astype(jnp.int32),
+      tabs)

@@ -109,6 +109,11 @@ class _ShapeGroup:
                             ).astype(np.float64)           # (D, m+1)
         self.base_p_ed = np.stack([st.spec.profile.p_ed for st in states]
                                   ).astype(np.float64)     # truth (D, c, m)
+        # last period's optimal simplex bases (D, R) for LP-backed policies
+        # (-1 rows: device was planned by a non-LP solver); fed back as
+        # `solve(..., warm_start=)` so consecutive periods price out of the
+        # previous vertex instead of re-running two cold simplex phases
+        self.warm_basis: Optional[np.ndarray] = None
 
     @property
     def m(self) -> int:
@@ -350,7 +355,13 @@ class FleetEngine:
         es_demand_all = np.zeros(D_all)
         for g in self._groups:
             fp, base = self._assemble(g, arrivals, outage, n_pad)
-            sol = solve(fp, policy=self.policy, backend=self.backend)
+            warm = {}
+            if self.backend == "jax" and g.warm_basis is not None:
+                warm["warm_start"] = g.warm_basis
+            sol = solve(fp, policy=self.policy, backend=self.backend,
+                        **warm)
+            if sol.basis is not None:   # LP-backed rows warm the next period
+                g.warm_basis = np.asarray(sol.basis)
             plan_seconds += sol.plan_seconds
             assign = sol.assignment
             es_demand_all[g.ids] = sol.es_makespan

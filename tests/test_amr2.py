@@ -30,7 +30,7 @@ SMALL = _small_instances()
 @pytest.mark.parametrize("seed", range(10))
 def test_lemma1_at_most_two_fractional(seed):
     inst = random_instance(20, 3, T=1.0, seed=seed)
-    xbar, _, status = solve_lp_relaxation(inst)
+    xbar, _, status, _ = solve_lp_relaxation(inst)
     if status != 0:
         pytest.skip("infeasible relaxation")
     assert len(fractional_jobs(xbar)) <= 2
@@ -42,7 +42,7 @@ def test_lemma1_at_most_two_fractional(seed):
 def test_lemma1_property(seed, n, m):
     rng = np.random.default_rng(seed)
     inst = random_instance(n, m, T=float(rng.uniform(0.1, 4.0)), seed=seed)
-    xbar, _, status = solve_lp_relaxation(inst)
+    xbar, _, status, _ = solve_lp_relaxation(inst)
     if status != 0:
         return
     assert len(fractional_jobs(xbar)) <= 2

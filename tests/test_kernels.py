@@ -217,3 +217,44 @@ def test_model_attention_pallas_path_matches_dense():
     h_p = forward(params, batch, cfg_p)
     np.testing.assert_allclose(np.asarray(h_d, np.float32),
                                np.asarray(h_p, np.float32), atol=6e-2)
+
+
+# ---------------------------------------------------------- simplex pivot --
+@pytest.mark.parametrize("B,R1,C1", [(4, 5, 9), (8, 15, 41), (1, 3, 4)])
+def test_simplex_pivot_kernel_vs_ref(B, R1, C1):
+    from repro.kernels.simplex_pivot.ref import pivot_update_ref
+    from repro.kernels.simplex_pivot.simplex_pivot import simplex_pivot
+    rng = np.random.default_rng(B * 100 + C1)
+    tabs = rng.normal(size=(B, R1, C1))
+    # keep pivots well away from zero so ref/kernel divide identically
+    r = rng.integers(0, R1 - 1, size=B)
+    j = rng.integers(0, C1 - 1, size=B)
+    tabs[np.arange(B), r, j] += np.sign(tabs[np.arange(B), r, j]) + 1.0
+    mask = rng.uniform(size=B) < 0.7
+    tabs = jnp.asarray(tabs, jnp.float32)
+    got = simplex_pivot(tabs, jnp.asarray(r), jnp.asarray(j),
+                        jnp.asarray(mask), interpret=True)
+    ref = pivot_update_ref(tabs, jnp.asarray(r), jnp.asarray(j),
+                           jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    # masked lanes must pass through untouched
+    np.testing.assert_array_equal(np.asarray(got)[~mask],
+                                  np.asarray(tabs)[~mask])
+
+
+def test_simplex_pivot_ref_is_a_simplex_pivot():
+    """The reference update must do an actual Gauss-Jordan pivot: pivot
+    column becomes a unit vector, pivot row is normalized."""
+    from repro.kernels.simplex_pivot.ref import pivot_update_ref
+    rng = np.random.default_rng(0)
+    tabs = jnp.asarray(rng.normal(size=(2, 4, 6)) + 2.0)
+    r = jnp.array([1, 2])
+    j = jnp.array([0, 3])
+    out = np.asarray(pivot_update_ref(tabs, r, j,
+                                      jnp.ones(2, dtype=bool)))
+    for b in range(2):
+        col = out[b, :, int(j[b])]
+        expect = np.zeros(4)
+        expect[int(r[b])] = 1.0
+        np.testing.assert_allclose(col, expect, atol=1e-12)

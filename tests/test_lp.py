@@ -90,3 +90,180 @@ def test_basic_solution_has_basis():
     res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend="numpy")
     # basis has one entry per row: mc + n_eq rows
     assert len(res.basis) == A_ub.shape[0] + A_eq.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# degenerate pivoting: Bland's-rule fallback (anti-cycling)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_degenerate_beale_reaches_optimum(backend):
+    """Beale's classic cycling LP: fully degenerate at the origin — the
+    Dantzig rule with naive tie-breaks cycles forever on it.  The solver
+    (index tie-break + Bland fallback after K degenerate pivots) must reach
+    the optimum -0.05 within the iteration budget."""
+    c = np.array([-0.75, 150.0, -0.02, 6.0])
+    A_ub = np.array([[0.25, -60.0, -0.04, 9.0],
+                     [0.5, -90.0, -0.02, 3.0],
+                     [0.0, 0.0, 1.0, 0.0]])
+    b_ub = np.array([0.0, 0.0, 1.0])
+    res = solve_lp(c, A_ub, b_ub, backend=backend, maxiter=100)
+    assert res.status == OPTIMAL
+    assert res.fun == pytest.approx(-0.05, abs=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("seed", range(4))
+def test_pure_bland_rule_matches_scipy(backend, seed):
+    """bland_after=0 runs the whole solve under Bland's entering rule — it
+    must find the same optimum (slower, but guaranteed cycle-free)."""
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(seed)
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                   bland_after=0)
+    ref = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=(0, None))
+    assert res.status == OPTIMAL and ref.status == 0
+    assert res.fun == pytest.approx(ref.fun, abs=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_degenerate_origin_lp(backend):
+    """Every pivot from the all-slack basis is degenerate (b = 0 rows):
+    the degeneracy counter must engage Bland and still terminate at the
+    (unique, origin) optimum."""
+    rng = np.random.default_rng(7)
+    n, mc = 5, 4
+    c = np.abs(rng.normal(size=n))          # minimize over x >= 0: opt = 0
+    A_ub = rng.normal(size=(mc, n))
+    b_ub = np.zeros(mc)
+    res = solve_lp(c, A_ub, b_ub, backend=backend, maxiter=200)
+    assert res.status == OPTIMAL
+    assert res.fun == pytest.approx(0.0, abs=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# status propagation: iteration limit / unbounded must never be silent
+# ---------------------------------------------------------------------------
+from repro.core import UNBOUNDED                      # noqa: E402
+from repro.core.lp import ITERATION_LIMIT             # noqa: E402
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_tiny_maxiter_reports_iteration_limit(backend):
+    """A maxiter-capped solve must say so — including when phase 1 is the
+    phase that got capped (its status used to be discarded and the capped
+    tableau could be reported as 'optimal' or 'infeasible')."""
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(3)
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend, maxiter=1)
+    assert res.status == ITERATION_LIMIT
+    assert not res.success
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_unbounded_reported(backend):
+    # min -x s.t. -x <= 0 (x >= 0): unbounded below
+    res = solve_lp(np.array([-1.0]), A_ub=np.array([[-1.0]]),
+                   b_ub=np.array([0.0]), backend=backend)
+    assert res.status == UNBOUNDED
+
+
+# ---------------------------------------------------------------------------
+# warm starts: revised-simplex start from a previous basis
+# ---------------------------------------------------------------------------
+def _batch_lp(seed=0, nb=5, n=8, mc=3):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(nb, n))
+    A_ub = rng.uniform(0, 1, size=(nb, mc, n))
+    b_ub = rng.uniform(1, 3, size=(nb, mc))
+    A_eq = np.ones((nb, 1, n))
+    b_eq = np.ones((nb, 1))
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_warm_start_identical_resolve_is_zero_pivots(backend):
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(1)
+    cold = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    warm = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                    warm_basis=cold.basis)
+    assert warm.warm and warm.status == OPTIMAL and warm.niter == 0
+    assert warm.fun == pytest.approx(cold.fun, abs=1e-6)
+    np.testing.assert_array_equal(np.sort(warm.basis), np.sort(cold.basis))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_warm_start_perturbed_instance(backend):
+    """The fleet scenario: next period's instance differs slightly; the old
+    basis remains (near-)optimal and the warm solve matches a cold one."""
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(2)
+    cold0 = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    rng = np.random.default_rng(5)
+    A2 = A_ub * (1.0 + 0.05 * rng.normal(size=A_ub.shape))
+    warm = solve_lp(c, A2, b_ub, A_eq, b_eq, backend=backend,
+                    warm_basis=cold0.basis)
+    cold = solve_lp(c, A2, b_ub, A_eq, b_eq, backend=backend)
+    assert warm.status == OPTIMAL
+    assert warm.fun == pytest.approx(cold.fun, abs=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_warm_start_rejected_basis_falls_back_cold(backend):
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(4)
+    cold = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    bad = np.full_like(cold.basis, -1)
+    warm = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                    warm_basis=bad)
+    assert not warm.warm                   # rejected -> cold path ran
+    assert warm.status == OPTIMAL
+    assert warm.fun == pytest.approx(cold.fun, abs=1e-9)
+
+
+def test_solve_lp_batch_warm_matches_cold():
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(0)
+    cold = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    assert not cold.warm.any()
+    warm = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq,
+                          warm_basis=cold.basis)
+    assert warm.warm.all() and (warm.niter == 0).all()
+    np.testing.assert_allclose(warm.fun, cold.fun, atol=1e-9)
+    np.testing.assert_allclose(warm.x, cold.x, atol=1e-9)
+
+
+def test_solve_lp_batch_warm_mixed_rejections():
+    """Lanes with stale (-1) bases are re-solved cold and still correct;
+    accepted lanes keep the warm fast path."""
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(1)
+    cold = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    wb = cold.basis.copy()
+    wb[::2] = -1                           # every other lane: no basis
+    warm = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, warm_basis=wb)
+    assert (~warm.warm[::2]).all() and warm.warm[1::2].all()
+    np.testing.assert_allclose(warm.fun, cold.fun, atol=1e-9)
+    assert (warm.status == OPTIMAL).all()
+
+
+def test_solve_lp_batch_warm_shape_guard():
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(2)
+    with pytest.raises(ValueError, match="warm_basis"):
+        solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq,
+                       warm_basis=np.zeros((2, 2), dtype=np.int64))
+
+
+def test_solve_lp_batch_warm_pallas_impl_matches_jnp():
+    """impl='pallas' routes the batched pivot through the simplex_pivot
+    kernel (interpret mode on CPU) — bit-identical trajectory to jnp."""
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(3)
+    cold = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    rng = np.random.default_rng(9)
+    A2 = A_ub * (1.0 + 0.1 * rng.normal(size=A_ub.shape))
+    ref = solve_lp_batch(c, A2, b_ub, A_eq, b_eq, warm_basis=cold.basis,
+                         impl="jnp")
+    got = solve_lp_batch(c, A2, b_ub, A_eq, b_eq, warm_basis=cold.basis,
+                         impl="pallas")
+    np.testing.assert_array_equal(got.status, ref.status)
+    np.testing.assert_array_equal(got.niter, ref.niter)
+    np.testing.assert_array_equal(got.basis, ref.basis)
+    np.testing.assert_allclose(got.x, ref.x, atol=1e-12)

@@ -1,0 +1,177 @@
+"""Warm-started LP through the api front door + solver-status surfacing:
+`Solution.basis` round-trips, `solve(..., warm_start=)` matches the cold
+solve, `strict=` raises-or-warns on unsolved statuses, and the fleet
+engine carries per-device bases across periods."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import InstanceBatch, identical_instance, random_instance
+from repro.core.problem import ST_UNSOLVED
+
+B, N, M = 6, 8, 2
+T = 1.2
+
+
+def _fleet(seed=0):
+    insts = [random_instance(N, M, T=T, seed=seed + s) for s in range(B)]
+    return api.FleetProblem.from_batch(InstanceBatch.stack(insts))
+
+
+# ---------------------------------------------------------------------------
+# Solution.basis + warm_start round-trips
+# ---------------------------------------------------------------------------
+def test_fleet_solution_carries_basis():
+    sol = api.solve(_fleet(), policy="amr2")
+    assert sol.basis is not None
+    assert sol.basis.shape == (B, N + 2)        # 2 budget rows + n eq rows
+    assert (sol.basis >= 0).all()
+
+
+@pytest.mark.parametrize("policy", ["amr2", "lp"])
+def test_warm_start_fleet_matches_cold(policy):
+    fp = _fleet(seed=10)
+    cold = api.solve(fp, policy=policy)
+    warm = api.solve(fp, policy=policy, warm_start=cold.basis)
+    np.testing.assert_allclose(np.atleast_1d(warm.accuracy),
+                               np.atleast_1d(cold.accuracy), atol=1e-9)
+    np.testing.assert_array_equal(warm.status, cold.status)
+    assert warm.basis is not None
+
+
+def test_warm_start_single_problem_matches_cold():
+    p = api.Problem.from_instance(random_instance(N, M, T=T, seed=3))
+    cold = api.solve(p, policy="amr2")
+    assert cold.basis is not None
+    warm = api.solve(p, policy="amr2", warm_start=cold.basis)
+    assert warm.accuracy == pytest.approx(cold.accuracy, abs=1e-9)
+    np.testing.assert_array_equal(warm.assignment, cold.assignment)
+
+
+def test_warm_start_auto_split_slices_rows():
+    """auto dispatch: identical-job devices go to the DP (no basis), the
+    rest warm-start AMR² from their sliced basis rows."""
+    insts = [identical_instance(N, M, T=1.0, seed=0),
+             random_instance(N, M, T=T, seed=1),
+             random_instance(N, M, T=T, seed=2)]
+    fp = api.FleetProblem.from_batch(InstanceBatch.stack(insts))
+    cold = api.solve(fp, policy="auto")
+    assert cold.basis is not None
+    assert (cold.basis[0] == -1).all()          # amdp row: no LP basis
+    assert (cold.basis[1:] >= 0).all()
+    warm = api.solve(fp, policy="auto", warm_start=cold.basis)
+    np.testing.assert_allclose(warm.accuracy, cold.accuracy, atol=1e-9)
+    np.testing.assert_array_equal(warm.assignment, cold.assignment)
+
+
+def test_warm_start_rejected_for_non_lp_policy():
+    fp = _fleet()
+    basis = api.solve(fp, policy="amr2").basis
+    with pytest.raises(TypeError, match="warm_start"):
+        api.solve(fp, policy="dual", warm_start=basis)
+
+
+def test_solve_many_warm_start_alignment():
+    probs = [api.Problem.from_instance(random_instance(N, M, T=T, seed=s))
+             for s in range(4)]
+    cold = api.solve_many(probs, policy="amr2")
+    bases = [s.basis for s in cold]
+    assert all(b is not None for b in bases)
+    warm = api.solve_many(probs, policy="amr2", warm_start=bases)
+    for w, c in zip(warm, cold):
+        assert w.accuracy == pytest.approx(c.accuracy, abs=1e-9)
+    # mixed None entries are fine (those members solve cold)
+    warm2 = api.solve_many(probs, policy="amr2",
+                           warm_start=[bases[0], None, bases[2], None])
+    for w, c in zip(warm2, cold):
+        assert w.accuracy == pytest.approx(c.accuracy, abs=1e-9)
+    with pytest.raises(ValueError, match="align"):
+        api.solve_many(probs, policy="amr2", warm_start=bases[:2])
+
+
+def test_warm_start_numpy_backend_fleet():
+    """The sequential oracle path warm-starts per device (and skips -1
+    rows) — parity with the cold sequential solve."""
+    fp = _fleet(seed=20)
+    cold = api.solve(fp, policy="amr2", backend="numpy")
+    wb = cold.basis.copy()
+    wb[0] = -1                                  # device 0: cold re-solve
+    warm = api.solve(fp, policy="amr2", backend="numpy", warm_start=wb)
+    np.testing.assert_allclose(warm.accuracy, cold.accuracy, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# solver-status surfacing: strict= raise-or-warn on unsolved
+# ---------------------------------------------------------------------------
+def test_tiny_maxiter_strict_raises_fleet():
+    with pytest.raises(RuntimeError, match="unsolved"):
+        api.solve(_fleet(), policy="amr2", maxiter=1)
+
+
+def test_tiny_maxiter_strict_raises_single():
+    p = api.Problem.from_instance(random_instance(N, M, T=T, seed=5))
+    with pytest.raises(RuntimeError, match="unsolved"):
+        api.solve(p, policy="amr2", maxiter=1)
+
+
+def test_tiny_maxiter_nonstrict_warns_and_marks():
+    fp = _fleet()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sol = api.solve(fp, policy="amr2", maxiter=1, strict=False)
+    assert any("unsolved" in str(w.message) for w in caught)
+    assert (np.asarray(sol.status) == ST_UNSOLVED).all()
+    assert set(np.atleast_1d(sol.status_name)) == {"unsolved"}
+    assert np.isnan(sol.lp_accuracy).all()      # no valid bound
+
+
+def test_sane_maxiter_never_marks():
+    sol = api.solve(_fleet(), policy="amr2")    # default budget
+    assert not (np.asarray(sol.status) == ST_UNSOLVED).any()
+
+
+def test_core_amr2_raises_by_default_on_cap():
+    """Direct core calls (no front door) keep the fail-loud default."""
+    from repro.core import amr2
+    inst = random_instance(N, M, T=T, seed=6)
+    with pytest.raises(RuntimeError, match="did not converge"):
+        amr2(inst, maxiter=1)
+
+
+# ---------------------------------------------------------------------------
+# fleet engine: per-device bases across periods
+# ---------------------------------------------------------------------------
+def _engines(policy="amr2", n=6, seed=3):
+    from repro.serving import FleetEngine, RequestQueue
+    from repro.serving.fleet import make_fleet
+
+    def build():
+        specs = make_fleet(n, seed=seed, horizon=8)
+        q = RequestQueue(n, (128, 512, 1024), rate=8.0, batch_max=8,
+                         seed=seed)
+        return FleetEngine(specs, q, n_servers=1, T=T, backend="jax",
+                           policy=policy)
+    return build(), build()
+
+
+def test_engine_stores_and_reuses_warm_bases():
+    warm_eng, cold_eng = _engines()
+    for _ in range(3):
+        sw = warm_eng.run_period()
+        for g in cold_eng._groups:          # twin with warm state wiped
+            g.warm_basis = None
+        sc = cold_eng.run_period()
+        assert sw.total_accuracy == pytest.approx(sc.total_accuracy,
+                                                  abs=1e-9)
+        assert sw.n_backpressured == sc.n_backpressured
+        assert sw.n_offloading == sc.n_offloading
+    assert all(g.warm_basis is not None for g in warm_eng._groups)
+    assert all((g.warm_basis >= 0).all() for g in warm_eng._groups)
+
+
+def test_engine_dual_policy_keeps_no_basis():
+    warm_eng, _ = _engines(policy="dual")
+    warm_eng.run(2)
+    assert all(g.warm_basis is None for g in warm_eng._groups)
