@@ -479,7 +479,204 @@ def speedup():
     ]
 
 
-ALL = [parity, warm_cold, scaling, speedup]
+def rollout():
+    """Engine-v2 rollout (ONE lax.scan over the jitted period step) vs the
+    per-period `run()` loop at the 256-device point
+    (``FLEET_BENCH_ROLLOUT_DEVICES`` / ``FLEET_BENCH_ROLLOUT_PERIODS``),
+    for both traceable policies.
+
+    Three timed paths per policy over the same replayed arrival trace:
+
+      * *host_loop* — `run()` with engine-v2 delegation disabled: the
+        pre-v2 per-period pipeline (batched api solves + host
+        admission/replan/audit), the baseline the >= 2x acceptance gate
+        is against;
+      * *delegated* — `run()` as shipped: per-period calls into the same
+        jitted core the scan uses (host queue + stats bookkeeping per
+        period);
+      * *scan* — `engine.rollout`: the whole epoch in one traced call,
+        zero per-period host sync.
+
+    The scan and the delegated loop are first pinned BIT-IDENTICAL on
+    every trajectory (the engine-v2 parity contract), then timed (min
+    over ``reps``).  The >= 2x gate binds on the dual policy, where the
+    planner is cheap and the loop's per-period host work dominates; for
+    amr2 the step is LP-compute-bound on CPU, so removing the host loop
+    buys ~1.3-1.7x steady-state — both numbers are recorded."""
+    import jax
+    import numpy as np
+
+    from repro.api import engine as E
+    from repro.serving import FleetConfig, FleetEngine
+
+    n = int(os.environ.get("FLEET_BENCH_ROLLOUT_DEVICES", _BIG))
+    periods = int(os.environ.get("FLEET_BENCH_ROLLOUT_PERIODS", 32))
+    reps = 3
+    entries = {}
+    out = []
+
+    for policy in ("amr2", "dual"):
+        def mkcfg():
+            return FleetConfig(
+                n_devices=n, T=1.2, n_servers=max(1, n // 16),
+                policy=policy, rate=10.0, batch_max=PARITY_JOBS,
+                horizon=periods + 2, seed=7)
+
+        params = E.EngineParams.from_config(mkcfg(), horizon=periods + 2)
+        state = E.init_state(params)
+
+        # --- parity pin: scan == per-period delegated loop, bit for bit -
+        _, metrics = E.rollout(state, params, periods)    # also compiles
+        eng = FleetEngine.from_config(mkcfg())
+        stats = eng.run(periods)
+        for f in ("n_jobs", "n_violations", "n_offloading",
+                  "n_backpressured", "n_outage", "n_straggler_updates",
+                  "backlog"):
+            got = np.asarray(getattr(metrics, f))
+            want = np.array([getattr(s, f) for s in stats])
+            assert np.array_equal(got, want), \
+                f"rollout/run() {policy} trajectory mismatch on {f}"
+        acc_gap = float(np.abs(
+            np.asarray(metrics.total_accuracy)
+            - np.array([s.total_accuracy for s in stats])).max())
+        assert acc_gap == 0.0, \
+            f"rollout/run() {policy} accuracy gap {acc_gap}"
+
+        def _time_scan():
+            t0 = time.perf_counter()
+            _, M = E.rollout(state, params, periods)
+            jax.block_until_ready(np.asarray(M.total_accuracy))
+            return time.perf_counter() - t0
+
+        def _time_run(disable_delegation):
+            best = np.inf
+            for _ in range(reps):
+                import dataclasses
+                e = FleetEngine.from_config(dataclasses.replace(
+                    mkcfg(), delegate=not disable_delegation))
+                e.run_period()              # compile / warm caches
+                e.history.clear()
+                t0 = time.perf_counter()
+                e.run(periods)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        scan_s = min(_time_scan() for _ in range(reps))
+        delegated_s = _time_run(False)
+        host_loop_s = _time_run(True)
+
+        dps = lambda s: n * periods / s
+        entry = {
+            "devices": n, "periods": periods, "policy": policy,
+            "parity": "bit_identical_vs_delegated_run",
+            "scan_devices_per_s_wall": dps(scan_s),
+            "delegated_loop_devices_per_s_wall": dps(delegated_s),
+            "host_loop_devices_per_s_wall": dps(host_loop_s),
+            "scan_speedup_vs_host_loop": host_loop_s / scan_s,
+            "scan_speedup_vs_delegated_loop": delegated_s / scan_s,
+        }
+        if policy == "dual":
+            assert entry["scan_speedup_vs_host_loop"] >= 2.0, \
+                f"dual rollout scan only " \
+                f"{entry['scan_speedup_vs_host_loop']:.2f}x over the " \
+                f"per-period host run() loop (acceptance floor: 2x)"
+        entries[policy] = entry
+        out.extend([
+            (f"fleet/rollout/{n}/{policy}/scan",
+             scan_s / (n * periods) * 1e6,
+             f"devices={n};periods={periods};"
+             f"devices_per_s={dps(scan_s):.0f};"
+             f"single_lax_scan=1;parity=bit_identical"),
+            (f"fleet/rollout/{n}/{policy}/delegated_loop",
+             delegated_s / (n * periods) * 1e6,
+             f"devices={n};devices_per_s={dps(delegated_s):.0f};"
+             f"scan_speedup="
+             f"{entry['scan_speedup_vs_delegated_loop']:.2f}x"),
+            (f"fleet/rollout/{n}/{policy}/host_loop",
+             host_loop_s / (n * periods) * 1e6,
+             f"devices={n};devices_per_s={dps(host_loop_s):.0f};"
+             f"scan_speedup={entry['scan_speedup_vs_host_loop']:.2f}x"),
+        ])
+    _record("rollout", {str(n): entries})
+    return out
+
+
+def sharded():
+    """`rollout_sharded` (shard_map over the fleet axis) vs the unsharded
+    scan, keyed by shard x device count.  Needs > 1 jax device — spawn
+    host-platform devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+    sharded smoke job does); on a single-device host the section reports
+    a skip and records nothing (merge-on-write keeps any previously
+    recorded keys)."""
+    import jax
+    import numpy as np
+
+    from repro.api import engine as E
+    from repro.serving import FleetConfig
+
+    n_shards = len(jax.devices())
+    if n_shards < 2:
+        return [("fleet/sharded/skipped", 0.0,
+                 "reason=single_jax_device;hint=XLA_FLAGS="
+                 "--xla_force_host_platform_device_count=8")]
+    n = int(os.environ.get("FLEET_BENCH_SHARD_DEVICES", 64))
+    periods = int(os.environ.get("FLEET_BENCH_ROLLOUT_PERIODS", 32))
+    reps = 3
+
+    cfg = FleetConfig(
+        n_devices=n, T=1.2, n_servers=max(1, n // 16), policy="amr2",
+        rate=10.0, batch_max=PARITY_JOBS, horizon=periods + 2, seed=7)
+    params = E.EngineParams.from_config(cfg, horizon=periods + 2)
+    state = E.init_state(params)
+    mesh = E.fleet_mesh(n_shards)
+    sstate, sparams = E.shard(state, params, mesh)
+
+    _, MU = E.rollout(state, params, periods)             # compile
+    _, MS = E.rollout_sharded(sstate, sparams, periods, mesh)
+    for f in ("n_jobs", "n_violations", "n_offloading", "n_backpressured",
+              "backlog"):
+        assert np.array_equal(np.asarray(getattr(MS, f)),
+                              np.asarray(getattr(MU, f))), \
+            f"sharded/unsharded mismatch on {f}"
+    acc_gap = float(np.abs(np.asarray(MS.total_accuracy)
+                           - np.asarray(MU.total_accuracy)).max())
+    assert acc_gap <= 1e-9 * max(
+        1.0, float(np.abs(np.asarray(MU.total_accuracy)).max())), \
+        f"sharded accuracy gap {acc_gap:.2e}"
+
+    def _timed_roll(fn):
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _, M = fn()
+            jax.block_until_ready(np.asarray(M.total_accuracy))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    unsharded_s = _timed_roll(lambda: E.rollout(state, params, periods))
+    sharded_s = _timed_roll(
+        lambda: E.rollout_sharded(sstate, sparams, periods, mesh))
+    dps = lambda s: n * periods / s
+    entry = {
+        "devices": n, "periods": periods, "n_shards": n_shards,
+        "parity": "matches_unsharded",
+        "max_accuracy_gap": acc_gap,
+        "unsharded_devices_per_s_wall": dps(unsharded_s),
+        "sharded_devices_per_s_wall": dps(sharded_s),
+        "shard_speedup": unsharded_s / sharded_s,
+    }
+    _record("sharded", {f"{n_shards}x{n}": entry})
+    return [
+        (f"fleet/sharded/{n_shards}x{n}", sharded_s / (n * periods) * 1e6,
+         f"devices={n};shards={n_shards};"
+         f"devices_per_s={dps(sharded_s):.0f};"
+         f"speedup_vs_unsharded={unsharded_s / sharded_s:.2f}x;"
+         f"max_acc_gap={acc_gap:.1e}"),
+    ]
+
+
+ALL = [parity, warm_cold, scaling, speedup, rollout, sharded]
 
 
 def main():

@@ -1,7 +1,8 @@
 """Fleet serving demo: N edge devices, a small ES pool, Poisson traffic.
 
     PYTHONPATH=src python examples/fleet_sim.py --devices 64 --periods 20 \
-        [--servers 2] [--rate 10] [--batch-max 12] [--t 1.2] [--seed 0]
+        [--servers 2] [--rate 10] [--batch-max 12] [--t 1.2] [--seed 0] \
+        [--rollout]
 
 The whole run is described by ONE declarative `FleetConfig`
 (`FleetEngine.from_config`): every period the fleet is planned by a
@@ -10,10 +11,55 @@ handful of batched registry solves (`repro.api.solve` on per-shape-group
 onto their local model ladder in one batched ES-disabled solve, drifting
 devices trigger the EMA straggler audit, and per-device ES-link outages
 are planned around.
+
+``--rollout`` runs the same epoch through the pure-functional engine
+instead (`repro.serving.engine_v2`): the whole multi-period simulation is
+ONE `lax.scan` over the jitted period step, zero per-period host
+round-trips.  With ``--policy amr2`` or ``--policy dual`` the
+trajectories are bit-identical to the loop above on the replayed arrival
+trace; the default ``auto`` resolves to amr2 in the rollout engine (the
+loop's auto additionally gives identical-job devices the exact DP, so
+those per-period numbers may differ slightly).
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _main_rollout(args) -> None:
+    import numpy as np
+
+    from repro.serving import FleetConfig, engine_v2
+
+    config = FleetConfig(
+        n_devices=args.devices, T=args.t, n_servers=args.servers,
+        policy=args.policy, rate=args.rate, batch_max=args.batch_max,
+        horizon=max(args.periods, 2), seed=args.seed)
+    params = engine_v2.EngineParams.from_config(config,
+                                                horizon=args.periods)
+    state, m = engine_v2.rollout(engine_v2.init_state(params), params,
+                                 args.periods)
+    print(f"[fleet] engine-v2 rollout: {args.periods} periods as one "
+          f"lax.scan over {args.devices} devices (policy "
+          f"{params.policy})")
+    for i in range(args.periods):
+        jobs = int(np.asarray(m.n_jobs)[i])
+        print(f"[fleet] t={i:>3} jobs={jobs:>4} "
+              f"acc/job={float(np.asarray(m.mean_job_accuracy)[i]):.3f} "
+              f"offload={int(np.asarray(m.n_offloading)[i]):>3} "
+              f"bumped={int(np.asarray(m.n_backpressured)[i]):>3} "
+              f"outage={int(np.asarray(m.n_outage)[i]):>2} "
+              f"straggler_upd={int(np.asarray(m.n_straggler_updates)[i])} "
+              f"es_util={float(np.asarray(m.es_utilization)[i]):4.0%} "
+              f"viol={int(np.asarray(m.n_violations)[i]):>2} "
+              f"backlog={int(np.asarray(m.backlog)[i])}")
+    jobs = int(np.asarray(m.n_jobs).sum())
+    acc = float(np.asarray(m.total_accuracy).sum())
+    print(f"[fleet] done: {jobs} jobs, "
+          f"acc/job={acc / max(jobs, 1):.3f}, "
+          f"violation_rate="
+          f"{np.asarray(m.n_violations).sum() / (args.periods * args.devices):.1%}, "
+          f"final_backlog={int(np.asarray(m.backlog)[-1])}")
 
 
 def main(argv=None):
@@ -26,7 +72,12 @@ def main(argv=None):
     ap.add_argument("--t", type=float, default=1.2, help="period budget T")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="auto")
+    ap.add_argument("--rollout", action="store_true",
+                    help="run the epoch as one engine-v2 lax.scan rollout")
     args = ap.parse_args(argv)
+
+    if args.rollout:
+        return _main_rollout(args)
 
     from repro.serving import FleetConfig, FleetEngine
 

@@ -29,6 +29,8 @@ def main() -> int:
                         "--servers", "1"])
         fleet_sim.main(["--devices", "8", "--periods", "2",
                         "--policy", "dual"])
+        fleet_sim.main(["--devices", "8", "--periods", "3",
+                        "--rollout"])
 
     # Only the repo's own code trees count as internal — an in-repo venv or
     # vendored site-packages must not fail the gate on third-party warnings.

@@ -22,6 +22,7 @@ from .front import batched_policies, solve, solve_many
 from .registry import (Solver, SolverInfo, get_solver, register_solver,
                        solver_names, solver_table, solvers)
 from . import solvers as _builtin_solvers  # noqa: F401  (register entries)
+from . import engine  # pure-functional EngineState/step/rollout/shard
 
 __all__ = [
     "Problem", "FleetProblem", "Solution",
@@ -29,4 +30,5 @@ __all__ = [
     "solve", "solve_many", "batched_policies",
     "Solver", "SolverInfo", "register_solver", "get_solver",
     "solver_names", "solvers", "solver_table",
+    "engine",
 ]

@@ -1,0 +1,738 @@
+"""Pure-functional fleet engine: `EngineState` pytree + `step`/`rollout`/
+`shard`.
+
+`FleetEngine` (PR 1-4) plans each period in a handful of jitted calls, but
+the period LOOP — queue arrivals, ES-pool admission, drift/outage,
+straggler audit, warm-basis carry — is host Python over NumPy state, so a
+multi-period rollout pays one host round-trip per period and cannot be
+`lax.scan`-ed or `shard_map`-ed.  This module redesigns the serving API
+around a pure state machine:
+
+  * ``EngineParams`` — everything static over a rollout, as one registered
+    pytree: per-device latency/accuracy tables (re-indexed to the queue's
+    class table), precomputed drift/outage schedules, the arrival model
+    (a replayed count/class-stream trace with bit-parity to the host
+    `RequestQueue`, or array-native Poisson sampling with `jax.random`),
+    and the solver configuration as static aux data.
+  * ``EngineState`` — everything that evolves, as one pytree of arrays:
+    the belief latency tables (EMA straggler audit state), per-device
+    backlog counts and stream cursors, the PRNG key, and the previous
+    period's warm simplex bases (PR 4).
+  * ``step(state, params) -> (state, PeriodMetrics)`` — ONE pure traced
+    period: release arrivals, assemble the padded `FleetProblem`
+    (`FleetProblem.from_arrays_unchecked` — the same stacked pytree the
+    host engine solves), plan it with the traceable warm-or-cold batched
+    simplex + AMR^2 rounding (`lp.simplex_batch_core`,
+    `amr2.round_relaxation_jnp`) or the vmapped dual solver, run the
+    vectorized ES-pool admission scan, replan bumped devices ES-disabled
+    (a lane-masked second solve: non-bumped lanes cost zero pivots),
+    price/audit, and emit scalar metrics.
+  * ``rollout(state, params, periods)`` — a whole fleet epoch as ONE
+    `jax.lax.scan` over jitted `step`: no per-period host sync.
+  * ``shard(state, params, mesh)`` + ``step_sharded``/``rollout_sharded``
+    — `device_put` the stacked fleet axis across a mesh and run the same
+    step under `shard_map`; the only cross-device traffic is one
+    `all_gather` of the (D,) ES-demand vector for the global admission
+    scan plus scalar `psum`s for the metrics.  CPU-validated with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Everything runs in float64 (`jax.experimental.enable_x64` around every
+public entry point, like `solve_lp_batch`), so `step` is bit-comparable
+with the host `FleetEngine.run_period` — which now *delegates* to the same
+jitted period core on the jax backend (see `serving.fleet`).
+
+Typical use::
+
+    from repro.api import engine
+    params = engine.EngineParams.from_config(cfg, horizon=64)
+    state = engine.init_state(params)
+    state, metrics = engine.rollout(state, params, periods=64)
+    # metrics.total_accuracy is a (64,) array, one entry per period
+
+The dtype discipline inside the scan: every integer state leaf is int32
+and every new value is explicitly cast back, so the `lax.scan` carry
+structure is stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.amr2 import build_lp_arrays_jnp, round_relaxation_jnp
+from ..core.dual import _dual_one
+from ..core.lp import _bucket_maxiter, simplex_batch_core
+from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED as
+                            _ST_UNSOLVED, FleetProblem)
+
+# Policies with a fully-traceable batched path (the scan/shard requirement;
+# "auto"/"amdp" need host-side identical-job dispatch and stay on the host
+# engine).
+TRACEABLE_POLICIES = ("amr2", "dual")
+FLEET_AXIS = "fleet"
+
+
+def _register(cls, leaf_fields: Tuple[str, ...],
+              aux_fields: Tuple[str, ...] = ()) -> None:
+    """Register a frozen dataclass pytree: ``leaf_fields`` are children,
+    ``aux_fields`` ride along as (hashable) static aux data.  Unflatten
+    bypasses ``__init__`` so tracers survive the round-trip."""
+    def flatten(obj):
+        return (tuple(getattr(obj, f) for f in leaf_fields),
+                tuple(getattr(obj, f) for f in aux_fields))
+
+    def unflatten(aux, children):
+        obj = object.__new__(cls)
+        for f, v in zip(leaf_fields, children):
+            object.__setattr__(obj, f, v)
+        for f, v in zip(aux_fields, aux):
+            object.__setattr__(obj, f, v)
+        return obj
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParams:
+    """Rollout-invariant fleet description (pytree; solver config is aux).
+
+    All per-class tables are indexed by the QUEUE class table (the arrival
+    streams sample class indices, not values), re-indexed from each
+    device's profile at construction.  ``drift``/``outage`` are
+    precomputed per-period schedules; periods beyond their horizon cycle.
+
+    Arrival models (``arrivals`` aux):
+      * ``"replay"`` — ``counts`` (H, D) and ``stream`` (D, S) hold a
+        presampled arrival trace (`RequestQueue.presample`), giving
+        BIT-IDENTICAL arrivals to the host queue for the same seed: the
+        parity mode.
+      * ``"poisson"`` — arrival counts are drawn inside the traced step
+        with `jax.random.poisson` (per-device folded keys, so sharded and
+        unsharded sampling agree) and job classes with `jax.random.choice`
+        at release time; backlogged jobs re-sample their class at release,
+        which is distributionally identical for i.i.d. classes.  The
+        no-host-data mode for 10k+-device fleets.
+    """
+
+    # ---- pytree leaves --------------------------------------------------
+    classes: np.ndarray     # (c,) queue class labels (reference only)
+    base_p_ed: np.ndarray   # (D, c, m) ground-truth ED latencies
+    p_es: np.ndarray        # (D, c) ES latencies (comm incl.)
+    acc: np.ndarray         # (D, m+1) accuracies
+    T: np.ndarray           # ()  period budget
+    rate: np.ndarray        # (D,) Poisson arrival rates
+    class_probs: np.ndarray  # (c,) class sampling distribution
+    drift: np.ndarray       # (D, H) true per-period ED slowdown factors
+    outage: np.ndarray      # (D, H) bool, ES link down
+    counts: np.ndarray      # (Hc, D) replayed arrival counts (replay mode)
+    stream: np.ndarray      # (D, S) replayed class indices (replay mode)
+    # ---- static aux -----------------------------------------------------
+    policy: str = "amr2"
+    arrivals: str = "replay"
+    n_servers: int = 1
+    batch_max: int = 12
+    straggler_threshold: float = 1.5
+    ema: float = 0.5
+    frac_tol: float = 1e-4
+    iters: int = 40            # dual bisection iterations
+    maxiter: Optional[int] = None
+    tol: float = 1e-7
+
+    @property
+    def n_devices(self) -> int:
+        return self.base_p_ed.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.base_p_ed.shape[2]
+
+    @property
+    def n_basis_rows(self) -> int:
+        """Simplex rows R = batch_max + 2 (warm-basis width)."""
+        return self.batch_max + 2
+
+    # ---- constructors ----------------------------------------------------
+    @classmethod
+    def from_fleet(cls, devices, queue, *, T: float, n_servers: int = 1,
+                   policy: str = "amr2", horizon: int = 64,
+                   arrivals: str = "replay",
+                   straggler_threshold: float = 1.5, ema: float = 0.5,
+                   frac_tol: float = 1e-4, iters: int = 40,
+                   maxiter: Optional[int] = None,
+                   tol: float = 1e-7) -> "EngineParams":
+        """Build params from `DeviceSpec`s + a `RequestQueue` (the host
+        engine's vocabulary).  Requires one shape group — every profile
+        sharing a class table and model count — which is what
+        `make_fleet`/`FleetConfig` fleets always are."""
+        if policy == "auto":
+            policy = "amr2"     # the traceable LP path; the DP dispatch
+            #                     of "auto" is a host-engine feature
+        if policy not in TRACEABLE_POLICIES:
+            raise ValueError(
+                f"policy={policy!r} has no traceable batched path; the "
+                f"pure-functional engine supports {TRACEABLE_POLICIES}")
+        if arrivals not in ("replay", "poisson"):
+            raise ValueError(f"unknown arrivals mode {arrivals!r}")
+        if horizon <= 0:
+            raise ValueError("horizon must be positive")
+        if queue.n_devices != len(devices):
+            raise ValueError("queue.n_devices must match the fleet size")
+        qcls = np.asarray(queue.classes)
+        key0 = None
+        for d, spec in enumerate(devices):
+            pcls = np.asarray(spec.profile.classes)
+            if pcls.size > 1 and np.any(np.diff(pcls) <= 0):
+                # the searchsorted re-indexing below silently mis-prices
+                # (or IndexErrors) on an unsorted table — same guard as
+                # FleetEngine.__init__, needed here too because
+                # FleetConfig(devices=...) can reach this path directly
+                raise ValueError(
+                    f"device {d} ({spec.profile.name}) profile classes "
+                    f"{pcls.tolist()} must be strictly ascending")
+            key = (tuple(pcls.tolist()), spec.profile.p_ed.shape[1])
+            if key0 is None:
+                key0 = key
+            elif key != key0:
+                raise ValueError(
+                    "EngineParams.from_fleet needs a single shape group "
+                    "(one class table and model count across the fleet); "
+                    f"device {d} has {key}, device 0 has {key0}")
+            missing = set(qcls.tolist()) - set(pcls.tolist())
+            if missing:
+                raise ValueError(
+                    f"device {d} has no profile entry for queue classes "
+                    f"{sorted(missing)}")
+        # re-index every per-class table to the queue's class axis
+        pcls = np.asarray(devices[0].profile.classes)
+        lut = np.searchsorted(pcls, qcls)
+        base_p_ed = np.stack([d.profile.p_ed[lut] for d in devices]
+                             ).astype(np.float64)
+        p_es = np.stack([d.profile.p_es[lut] for d in devices]
+                        ).astype(np.float64)
+        acc = np.stack([d.profile.acc for d in devices]).astype(np.float64)
+        drift = np.stack([[d.drift_at(t) for t in range(horizon)]
+                          for d in devices]).astype(np.float64)
+        outage = np.stack([[d.outage_at(t) for t in range(horizon)]
+                           for d in devices]).astype(bool)
+        if arrivals == "replay":
+            counts, stream = queue.presample(horizon)
+        else:
+            counts = np.zeros((1, len(devices)), dtype=np.int64)
+            stream = np.zeros((len(devices), 1), dtype=np.int32)
+        probs = (np.full(len(qcls), 1.0 / len(qcls))
+                 if queue.class_probs is None
+                 else np.asarray(queue.class_probs, np.float64))
+        return cls(
+            classes=qcls.astype(np.int64),
+            base_p_ed=base_p_ed, p_es=p_es, acc=acc,
+            T=np.float64(T),
+            rate=np.asarray(queue.rate, np.float64),
+            class_probs=probs, drift=drift, outage=outage,
+            counts=counts.astype(np.int32), stream=stream,
+            policy=policy, arrivals=arrivals, n_servers=n_servers,
+            batch_max=queue.batch_max,
+            straggler_threshold=straggler_threshold, ema=ema,
+            frac_tol=frac_tol, iters=iters, maxiter=maxiter, tol=tol)
+
+    @classmethod
+    def from_config(cls, config, *, horizon: Optional[int] = None,
+                    arrivals: str = "replay",
+                    policy: Optional[str] = None) -> "EngineParams":
+        """Build params from a declarative `serving.FleetConfig` — the
+        engine-v2 twin of `FleetEngine.from_config`.  The replayed arrival
+        trace covers ``horizon`` periods (default: the config's
+        straggler/outage ``horizon``)."""
+        horizon = horizon if horizon is not None else config.horizon
+        return cls.from_fleet(
+            config.build_devices(), config.build_queue(), T=config.T,
+            n_servers=config.n_servers,
+            policy=policy if policy is not None else config.policy,
+            horizon=horizon, arrivals=arrivals,
+            straggler_threshold=config.straggler_threshold, ema=config.ema)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Everything a period mutates, as one pytree of arrays."""
+
+    period: jnp.ndarray       # ()   int32
+    key: jnp.ndarray          # (2,) uint32 PRNG key (poisson arrivals)
+    p_ed: jnp.ndarray         # (D, c, m) belief latencies (audit state)
+    pending: jnp.ndarray      # (D,) int32 backlog counts
+    head: jnp.ndarray         # (D,) int32 replay-stream cursors
+    warm_basis: jnp.ndarray   # (D, R) int32 previous optimal bases (-1 cold)
+    n_updates: jnp.ndarray    # (D,) int32 straggler-audit update counts
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodMetrics:
+    """One period's fleet-level numbers (each a scalar; `rollout` stacks
+    them into (periods,) arrays).  Field names match `FleetPeriodStats`."""
+
+    period: jnp.ndarray
+    n_jobs: jnp.ndarray
+    total_accuracy: jnp.ndarray
+    mean_job_accuracy: jnp.ndarray
+    n_violations: jnp.ndarray
+    worst_violation: jnp.ndarray
+    n_offloading: jnp.ndarray
+    n_backpressured: jnp.ndarray
+    n_outage: jnp.ndarray
+    n_straggler_updates: jnp.ndarray
+    # solves that hit the simplex iteration cap / went unbounded: their
+    # assignments are best-effort argmax roundings, not certified optima
+    # (the host solve() raised under strict=True; a traced step cannot
+    # raise, so the count is surfaced here — and the delegating
+    # FleetEngine.run_period re-raises when it is nonzero)
+    n_unsolved: jnp.ndarray
+    es_utilization: jnp.ndarray
+    backlog: jnp.ndarray
+
+
+_STATE_FIELDS = ("period", "key", "p_ed", "pending", "head", "warm_basis",
+                 "n_updates")
+_METRIC_FIELDS = tuple(f.name for f in dataclasses.fields(PeriodMetrics))
+_PARAM_LEAVES = ("classes", "base_p_ed", "p_es", "acc", "T", "rate",
+                 "class_probs", "drift", "outage", "counts", "stream")
+_PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
+              "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
+              "tol")
+
+_register(EngineParams, _PARAM_LEAVES, _PARAM_AUX)
+_register(EngineState, _STATE_FIELDS)
+_register(PeriodMetrics, _METRIC_FIELDS)
+
+
+def init_state(params: EngineParams, *, seed: int = 0) -> EngineState:
+    """A fresh fleet: beliefs = profiles, empty backlog, cold bases."""
+    D = params.n_devices
+    return EngineState(
+        period=np.zeros((), np.int32),
+        key=np.asarray(jax.random.PRNGKey(seed)),
+        p_ed=np.array(params.base_p_ed, np.float64),
+        pending=np.zeros(D, np.int32),
+        head=np.zeros(D, np.int32),
+        warm_basis=np.full((D, params.n_basis_rows), -1, np.int32),
+        n_updates=np.zeros(D, np.int32))
+
+
+# --------------------------------------------------------------------------
+# traced building blocks
+# --------------------------------------------------------------------------
+def admit_mask_jnp(demands, T, n_servers: int):
+    """Traced `EdgeServerPool.admit`: ascending-demand (device id on
+    ties), least-loaded-server-first first-fit as a `lax.scan` over the
+    sorted device order.  ``demands`` (D,) with <= 0 marking
+    non-offloaders.  Returns ``(admitted (D,) bool, loads (n_servers,))``
+    — identical decisions to the host `admit`/`admit_mask`."""
+    D = demands.shape[0]
+    eff = jnp.where(demands > 0, demands, jnp.inf)
+    order = jnp.argsort(eff, stable=True)
+
+    def body(carry, d):
+        loads, mask = carry
+        need = demands[d]
+        slot = jnp.argmin(loads)
+        ok = (need > 0) & (loads[slot] + need <= T + 1e-12)
+        loads = loads.at[slot].add(jnp.where(ok, need, 0.0))
+        mask = mask.at[d].set(ok)
+        return (loads, mask), None
+
+    (loads, mask), _ = jax.lax.scan(
+        body, (jnp.zeros(n_servers, demands.dtype),
+               jnp.zeros(D, dtype=bool)), order)
+    return mask, loads
+
+
+def _plan(params: EngineParams, fp: FleetProblem, warm_basis,
+          lane_mask=None):
+    """One traced batched solve of a (padded) `FleetProblem`.
+
+    amr2: warm-or-cold batched simplex + vectorized rounding — per-lane
+    bit-comparable with the host `solve(..., policy="amr2")` dispatch.
+    dual: the vmapped bisection (`core.dual._dual_one`).  Returns
+    ``(assignment (D, n) int32, status (D,) int32, basis (D, R) int32)``.
+    """
+    D, n = fp.p_es.shape
+    m = fp.p_ed.shape[2]
+    if params.policy == "amr2":
+        A, b, c_full = build_lp_arrays_jnp(fp.p_ed, fp.p_es, fp.acc, fp.T)
+        maxiter = params.maxiter if params.maxiter is not None else \
+            _bucket_maxiter(50 * (A.shape[1] + 2))
+        x, _fun, st, _ni, basis, _ok = simplex_batch_core(
+            A, b, c_full, warm_basis, nv=n * (m + 1), maxiter=maxiter,
+            tol=params.tol, lane_mask=lane_mask)
+        xbar = x.reshape(D, n, m + 1)
+        assign, sched_status, _nf = round_relaxation_jnp(
+            fp.p_ed, fp.p_es, fp.acc, fp.T, xbar, st,
+            frac_tol=params.frac_tol)
+        return (assign.astype(jnp.int32), sched_status.astype(jnp.int32),
+                basis.astype(jnp.int32))
+    # dual: no basis to carry; status 0 = ok / 1 = fallback (the shared
+    # SOLUTION_STATUS_NAMES codes)
+    assign, st = jax.vmap(partial(_dual_one, iters=params.iters))(
+        fp.p_ed, fp.p_es, fp.acc, fp.T)
+    basis = (jnp.asarray(warm_basis, jnp.int32) if warm_basis is not None
+             else jnp.full((D, params.n_basis_rows), -1, jnp.int32))
+    return assign.astype(jnp.int32), st.astype(jnp.int32), basis
+
+
+def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
+                 params: EngineParams, axis_name: Optional[str] = None):
+    """The pure period core shared by `step`, the sharded step, and the
+    host `FleetEngine.run_period` delegation: everything AFTER arrivals
+    (the released job-class indices ``ci`` (D, n) + counts ``take`` (D,))
+    and BEFORE state/stats bookkeeping.
+
+    Under ``axis_name`` (inside `shard_map`) the ES-pool admission runs on
+    the `all_gather`-ed global demand vector and every metric scalar is
+    `psum`/`pmax`-reduced, so sharded and unsharded outputs agree.
+
+    Returns ``(new_belief_p_ed, new_warm_basis, upd (D,) bool,
+    audit_factor (D,), metrics)`` with ``metrics`` a dict of scalars (no
+    period/backlog — the callers own those).  ``audit_factor`` is the EMA
+    rescale each updated device's belief was multiplied by — the host
+    `FleetEngine` delegation applies it to its profile-space tables (which
+    may cover more classes than the queue's).
+    """
+    D, _c, m = belief_p_ed.shape
+    n = params.batch_max
+    mask = jnp.arange(n)[None, :] < take[:, None]
+    rows = jnp.arange(D)[:, None]
+    ci = jnp.clip(ci, 0, params.p_es.shape[1] - 1)
+    p_ed_jobs = jnp.where(mask[..., None], belief_p_ed[rows, ci], 0.0)
+    base_jobs = jnp.where(mask[..., None], params.base_p_ed[rows, ci], 0.0)
+    p_es_jobs = jnp.where(mask, params.p_es[rows, ci], 0.0)
+    p_es_jobs = jnp.where(outage_t[:, None] & mask, ES_DISABLED_SENTINEL,
+                          p_es_jobs)
+    Tvec = jnp.broadcast_to(params.T, (D,))
+    fp = FleetProblem.from_arrays_unchecked(p_ed_jobs, p_es_jobs,
+                                            params.acc, Tvec, mask)
+
+    # ---- plan the whole (local) fleet in one traced solve ---------------
+    assign, status, basis = _plan(params, fp, warm_basis)
+    n_unsolved = (status == _ST_UNSOLVED).astype(jnp.int32)
+
+    # ---- ES-pool admission on the GLOBAL demand vector ------------------
+    demand = jnp.where(mask & (assign == m), p_es_jobs, 0.0).sum(axis=1)
+    if axis_name is None:
+        admitted, loads = admit_mask_jnp(demand, params.T,
+                                         params.n_servers)
+    else:
+        demand_g = jax.lax.all_gather(demand, axis_name, tiled=True)
+        admitted_g, loads = admit_mask_jnp(demand_g, params.T,
+                                           params.n_servers)
+        idx = jax.lax.axis_index(axis_name)
+        admitted = jax.lax.dynamic_slice_in_dim(admitted_g, idx * D, D)
+    offl = demand > 0
+    bumped = offl & ~admitted
+
+    # ---- backpressure: lane-masked ES-disabled replan -------------------
+    # Skipped entirely (lax.cond) on no-bump periods; otherwise known-cold
+    # (warm_basis=None skips the basis factorization) and non-bumped lanes
+    # get a zeroed tableau (amr2) — zero pivots — so the second solve only
+    # pays for the devices that actually lost the race.  The predicate is
+    # a per-shard scalar, so sharded and unsharded runs agree: a shard
+    # with no bumped devices skips a solve whose result its jnp.where
+    # would have discarded anyway.
+    def _replan(assign):
+        p_es_crippled = jnp.where(mask, ES_DISABLED_SENTINEL, 0.0)
+        fp_bp = FleetProblem.from_arrays_unchecked(
+            p_ed_jobs, p_es_crippled, params.acc, Tvec, mask)
+        assign_bp, st_bp, _ = _plan(
+            params, fp_bp, None,
+            lane_mask=bumped if params.policy == "amr2" else None)
+        unsolved_bp = (bumped & (st_bp == _ST_UNSOLVED)).astype(jnp.int32)
+        return jnp.where(bumped[:, None], assign_bp, assign), unsolved_bp
+
+    assign, unsolved_bp = jax.lax.cond(
+        bumped.any(), _replan,
+        lambda a: (a, jnp.zeros_like(n_unsolved)), assign)
+    n_unsolved = n_unsolved + unsolved_bp
+
+    # ---- pricing, violations, straggler audit ---------------------------
+    def _sum(x):
+        s = jnp.sum(x)
+        return jax.lax.psum(s, axis_name) if axis_name else s
+
+    def _max(x):
+        v = jnp.max(x, initial=0.0)
+        return jax.lax.pmax(v, axis_name) if axis_name else v
+
+    acc_jobs = params.acc[rows, assign]
+    total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
+    n_jobs = _sum(mask.astype(jnp.int32))
+
+    on_ed = mask & (assign < m)
+    picked = jnp.clip(assign, 0, m - 1)[..., None]
+    ed_pred = jnp.where(
+        on_ed, jnp.take_along_axis(p_ed_jobs, picked, axis=2)[..., 0],
+        0.0).sum(axis=1)
+    ed_wall = jnp.where(
+        on_ed, jnp.take_along_axis(base_jobs, picked, axis=2)[..., 0],
+        0.0).sum(axis=1) * drift_t
+    es_wall = jnp.where(admitted, demand, 0.0)
+    wall = jnp.maximum(ed_wall, es_wall)
+    viol = jnp.maximum(0.0, wall / params.T - 1.0)
+
+    ratio = ed_wall / jnp.maximum(ed_pred, 1e-9)
+    upd = (ed_pred > 0) & (ratio > params.straggler_threshold)
+    factor = (1.0 - params.ema) + params.ema * ratio
+    new_belief = jnp.where(upd[:, None, None],
+                           belief_p_ed * factor[:, None, None],
+                           belief_p_ed)
+    new_warm = basis if params.policy == "amr2" else warm_basis
+
+    metrics = {
+        "n_jobs": n_jobs,
+        "total_accuracy": total_acc,
+        "n_violations": _sum((viol > 0).astype(jnp.int32)),
+        "worst_violation": _max(viol),
+        "n_offloading": _sum(offl.astype(jnp.int32)),
+        "n_backpressured": _sum(bumped.astype(jnp.int32)),
+        "n_outage": _sum(outage_t.astype(jnp.int32)),
+        "n_straggler_updates": _sum(upd.astype(jnp.int32)),
+        "n_unsolved": _sum(n_unsolved),
+        "es_utilization": jnp.sum(loads) / (params.n_servers * params.T),
+    }
+    return new_belief, new_warm.astype(jnp.int32), upd, factor, metrics
+
+
+def _arrivals(state: EngineState, params: EngineParams,
+              axis_name: Optional[str] = None):
+    """Release this period's jobs: ``(ci (D, n) int32 class indices,
+    take (D,) int32, pending' , head', key')``."""
+    D = state.pending.shape[0]
+    n = params.batch_max
+    t = state.period
+    if params.arrivals == "replay":
+        counts_t = jnp.take(params.counts, t % params.counts.shape[0],
+                            axis=0).astype(jnp.int32)
+        key = state.key
+    else:
+        k_counts, k_classes, key = jax.random.split(state.key, 3)
+        offset = (jax.lax.axis_index(axis_name) * D
+                  if axis_name else jnp.int32(0))
+        gid = offset + jnp.arange(D, dtype=jnp.int32)
+        # per-device folded keys: sharded and unsharded sampling agree
+        kd = jax.vmap(lambda g: jax.random.fold_in(k_counts, g))(gid)
+        counts_t = jax.vmap(
+            lambda k, lam: jax.random.poisson(k, lam))(
+                kd, params.rate).astype(jnp.int32)
+        kc = jax.vmap(lambda g: jax.random.fold_in(k_classes, g))(gid)
+    avail = state.pending + counts_t
+    take = jnp.minimum(avail, n).astype(jnp.int32)
+    if params.arrivals == "replay":
+        S = params.stream.shape[1]
+        idx = state.head[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+        ci = jnp.take_along_axis(params.stream,
+                                 jnp.clip(idx, 0, S - 1), axis=1)
+        head = (state.head + take).astype(jnp.int32)
+    else:
+        c = params.class_probs.shape[0]
+        ci = jax.vmap(lambda k: jax.random.choice(
+            k, c, shape=(n,), p=params.class_probs))(kc)
+        head = state.head
+    return (ci.astype(jnp.int32), take,
+            (avail - take).astype(jnp.int32), head, key)
+
+
+def _step_impl(state: EngineState, params: EngineParams,
+               axis_name: Optional[str] = None
+               ) -> Tuple[EngineState, PeriodMetrics]:
+    """One pure period: arrivals + `_period_impl` + state/metric assembly."""
+    t = state.period
+    H = params.drift.shape[1]
+    drift_t = jnp.take(params.drift, t % H, axis=1)
+    outage_t = jnp.take(params.outage, t % H, axis=1)
+    ci, take, pending, head, key = _arrivals(state, params, axis_name)
+    new_belief, new_warm, upd, _factor, m = _period_impl(
+        state.p_ed, state.warm_basis, ci, take, drift_t, outage_t, params,
+        axis_name=axis_name)
+    backlog = jnp.sum(pending)
+    if axis_name:
+        backlog = jax.lax.psum(backlog, axis_name)
+    n_jobs = m["n_jobs"]
+    metrics = PeriodMetrics(
+        period=t,
+        mean_job_accuracy=jnp.where(
+            n_jobs > 0, m["total_accuracy"] / jnp.maximum(n_jobs, 1), 0.0),
+        backlog=backlog.astype(jnp.int32), **m)
+    new_state = EngineState(
+        period=(t + 1).astype(jnp.int32), key=key, p_ed=new_belief,
+        pending=pending, head=head, warm_basis=new_warm,
+        n_updates=(state.n_updates + upd.astype(jnp.int32)))
+    return new_state, metrics
+
+
+@jax.jit
+def _step_jit(state, params):
+    return _step_impl(state, params)
+
+
+@jax.jit
+def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params):
+    """The host `FleetEngine.run_period` delegation target: the same
+    period core `step` scans over, minus the arrival/state bookkeeping
+    (the host engine owns its queue and stats)."""
+    return _period_impl(belief, warm_basis, ci, take, drift_t, outage_t,
+                        params)
+
+
+@partial(jax.jit, static_argnames=("periods",))
+def _rollout_jit(state, params, periods: int):
+    def body(s, _):
+        return _step_impl(s, params)
+    return jax.lax.scan(body, state, None, length=periods)
+
+
+def _check_horizon(state: EngineState, params: EngineParams,
+                   periods: int) -> None:
+    if params.arrivals != "replay":
+        return
+    end = int(np.asarray(state.period)) + periods
+    if end > params.counts.shape[0]:
+        raise ValueError(
+            f"replayed arrival trace covers {params.counts.shape[0]} "
+            f"periods but the rollout needs {end}; presample a longer "
+            f"horizon (EngineParams.from_config(..., horizon=)) or use "
+            f"arrivals='poisson'")
+
+
+def step(state: EngineState, params: EngineParams
+         ) -> Tuple[EngineState, PeriodMetrics]:
+    """One jitted period transition (float64, like the host LP path)."""
+    from jax.experimental import enable_x64
+    _check_horizon(state, params, 1)
+    with enable_x64():
+        return _step_jit(state, params)
+
+
+def rollout(state: EngineState, params: EngineParams, periods: int
+            ) -> Tuple[EngineState, PeriodMetrics]:
+    """A whole fleet epoch as ONE `lax.scan` over the jitted step — zero
+    per-period host round-trips.  Returns ``(final_state, metrics)`` with
+    every `PeriodMetrics` field stacked to a (periods,) array."""
+    from jax.experimental import enable_x64
+    _check_horizon(state, params, periods)
+    with enable_x64():
+        return _rollout_jit(state, params, int(periods))
+
+
+# --------------------------------------------------------------------------
+# sharding: device_put the fleet axis, run step/rollout under shard_map
+# --------------------------------------------------------------------------
+def fleet_mesh(n_shards: Optional[int] = None):
+    """A 1-D mesh over the first ``n_shards`` local jax devices (all by
+    default) with the ``"fleet"`` axis.  On CPU, spawn host platform
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    BEFORE importing jax."""
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = n_shards if n_shards is not None else len(devices)
+    if n > len(devices):
+        raise ValueError(f"asked for {n} shards but only "
+                         f"{len(devices)} jax devices exist")
+    return Mesh(np.asarray(devices[:n]), (FLEET_AXIS,))
+
+
+def _state_specs():
+    from jax.sharding import PartitionSpec as P
+    dev = P(FLEET_AXIS)
+    return EngineState(period=P(), key=P(), p_ed=dev, pending=dev,
+                       head=dev, warm_basis=dev, n_updates=dev)
+
+
+def _param_specs(params: EngineParams):
+    """Spec pytree matching ``params``' structure (the static aux rides
+    along so tree_map/shard_map can pair specs with leaves)."""
+    from jax.sharding import PartitionSpec as P
+    dev = P(FLEET_AXIS)
+    return dataclasses.replace(
+        params, classes=P(), base_p_ed=dev, p_es=dev, acc=dev, T=P(),
+        rate=dev, class_probs=P(), drift=dev, outage=dev,
+        counts=P(None, FLEET_AXIS), stream=dev)
+
+
+def _metric_specs():
+    from jax.sharding import PartitionSpec as P
+    return PeriodMetrics(**{f: P() for f in _METRIC_FIELDS})
+
+
+def shard(state: EngineState, params: EngineParams, mesh
+          ) -> Tuple[EngineState, EngineParams]:
+    """`device_put` the stacked fleet axis across ``mesh``: every
+    per-device leaf of the state and params — the same arrays a period's
+    `FleetProblem` is gathered from — lands block-partitioned along
+    ``"fleet"``; scalars and class tables are replicated.  The fleet size
+    must divide the mesh."""
+    from jax.experimental import enable_x64
+    from jax.sharding import NamedSharding
+    D = params.n_devices
+    n_shards = int(np.prod(mesh.devices.shape))
+    if D % n_shards:
+        raise ValueError(
+            f"fleet size {D} does not divide the {n_shards}-device mesh")
+    put = lambda tree, specs: jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+    with enable_x64():      # keep float64 leaves f64 across the device_put
+        return put(state, _state_specs()), put(params, _param_specs(params))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(mesh, periods: Optional[int], params_aux: tuple):
+    """Build (and cache) the shard_mapped step / rollout for a mesh.
+
+    ``params_aux`` (the `EngineParams` static fields) is part of the cache
+    key because the in_specs pytree must carry the same aux as the actual
+    params being passed."""
+    from jax.experimental.shard_map import shard_map
+
+    spec_params = _param_specs(
+        EngineParams(**{f: None for f in _PARAM_LEAVES},
+                     **dict(zip(_PARAM_AUX, params_aux))))
+    if periods is None:
+        fn = partial(_step_impl, axis_name=FLEET_AXIS)
+    else:
+        def fn(state, params):
+            return jax.lax.scan(
+                lambda s, _: _step_impl(s, params, axis_name=FLEET_AXIS),
+                state, None, length=periods)
+    mapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=(_state_specs(), spec_params),
+        out_specs=(_state_specs(), _metric_specs()),
+        check_rep=False)
+    return jax.jit(mapped)
+
+
+def _aux_of(params: EngineParams) -> tuple:
+    return tuple(getattr(params, f) for f in _PARAM_AUX)
+
+
+def step_sharded(state: EngineState, params: EngineParams, mesh
+                 ) -> Tuple[EngineState, PeriodMetrics]:
+    """`step` under `shard_map`: the fleet axis stays partitioned across
+    the mesh; admission gathers the (D,) demand vector and metrics are
+    psum-reduced, so the output matches the unsharded `step`."""
+    from jax.experimental import enable_x64
+    _check_horizon(state, params, 1)
+    with enable_x64():
+        return _sharded_fn(mesh, None, _aux_of(params))(state, params)
+
+
+def rollout_sharded(state: EngineState, params: EngineParams,
+                    periods: int, mesh
+                    ) -> Tuple[EngineState, PeriodMetrics]:
+    """`rollout` under `shard_map`: one scan, fleet axis sharded
+    throughout — the ROADMAP's 10k+-device shape."""
+    from jax.experimental import enable_x64
+    _check_horizon(state, params, periods)
+    with enable_x64():
+        return _sharded_fn(mesh, int(periods), _aux_of(params))(
+            state, params)

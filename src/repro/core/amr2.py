@@ -382,6 +382,131 @@ def amr2_batch_arrays(batch: InstanceBatch, *, frac_tol: float = _FRAC_TOL,
     return assignment, sched_status, n_frac, -res.fun, res.basis
 
 
+def build_lp_arrays_jnp(p_ed, p_es, acc, T):
+    """Traceable `build_lp_arrays_batch` + `_canonicalize_batch` in one:
+    canonicalised ``(A (B, R, C0), b (B, R), c_full (B, C0))`` with
+    R = n + 2 rows (ED budget, ES budget, n assignment rows) and
+    C0 = n(m+1) + 2 columns (variables + 2 slack).  ``b`` is already
+    nonnegative (T > 0, assignment rhs = 1), so no row flips are needed —
+    the output feeds `lp.simplex_batch_core` directly inside jit/scan."""
+    import jax.numpy as jnp
+    B, n, m = p_ed.shape
+    mp1 = m + 1
+    nv = n * mp1
+    dtype = p_ed.dtype
+    ed = jnp.zeros((B, n, mp1), dtype).at[:, :, :m].set(p_ed)
+    es = jnp.zeros((B, n, mp1), dtype).at[:, :, m].set(p_es)
+    eq = jnp.broadcast_to(
+        jnp.asarray(np.kron(np.eye(n), np.ones(mp1)), dtype), (B, n, nv))
+    slack = jnp.broadcast_to(
+        jnp.asarray(np.concatenate([np.eye(2), np.zeros((n, 2))]), dtype),
+        (B, n + 2, 2))
+    A = jnp.concatenate([
+        jnp.stack([ed.reshape(B, nv), es.reshape(B, nv)], axis=1),
+        eq], axis=1)
+    A = jnp.concatenate([A, slack], axis=2)
+    Tb = jnp.broadcast_to(jnp.asarray(T, dtype).reshape(-1, 1), (B, 1))
+    b = jnp.concatenate([Tb, Tb, jnp.ones((B, n), dtype)], axis=1)
+    c_full = jnp.concatenate(
+        [-jnp.tile(acc, (1, n)), jnp.zeros((B, 2), dtype)], axis=1)
+    return A, b, c_full
+
+
+def round_relaxation_jnp(p_ed, p_es, acc, T, xbar, status, *,
+                         frac_tol: float = _FRAC_TOL):
+    """Traceable `round_relaxation_batch`: Algorithm 1's rounding as pure
+    jnp, usable inside `jax.jit` / `lax.scan` (the `repro.api.engine`
+    period step).  Semantics match the NumPy batched path case for case —
+    first-max argmaxes, the one-fractional best-fit, the two-job sub-ILP
+    enumeration, and the infeasible / non-converged markings — except the
+    rare >2-fractional numeric fallback, where the two most fractional
+    rows are picked by a STABLE descending sort (NumPy's introsort leaves
+    equal-fractionality ties unspecified; on real float data ties are
+    measure-zero).
+
+    Returns ``(assignment (B, n) int64-compatible ints, sched_status (B,),
+    n_fractional (B,))``.
+    """
+    import jax.numpy as jnp
+    B, n, mp1 = xbar.shape
+    m = mp1 - 1
+    status = jnp.asarray(status)
+    bad = (status != OPTIMAL) & (status != INFEASIBLE)
+    infeas = status == INFEASIBLE
+    ok = ~infeas & ~bad
+
+    assignment = jnp.argmax(xbar, axis=2).astype(jnp.int32)
+    assignment = jnp.where(infeas[:, None],
+                           jnp.argmin(p_ed, axis=2).astype(jnp.int32),
+                           assignment)
+    sched_status = jnp.where(bad, ST_UNSOLVED,
+                             jnp.where(infeas, ST_INFEASIBLE, ST_OK)
+                             ).astype(jnp.int32)
+
+    frac_rows = (((xbar > frac_tol) & (xbar < 1.0 - frac_tol)).any(axis=2)
+                 & ok[:, None])
+    fc = frac_rows.sum(axis=1)
+    n_frac = jnp.where(ok, jnp.minimum(fc, 2), 0).astype(jnp.int32)
+
+    # candidate job pair: first two fractional rows (fc <= 2) or the two
+    # most fractional rows (fc > 2, the scalar fallback's selection)
+    j1_first = jnp.argmax(frac_rows, axis=1)
+    masked = frac_rows.at[jnp.arange(B), j1_first].set(False)
+    j2_first = jnp.argmax(masked, axis=1)
+    fractionality = jnp.where(frac_rows, 1.0 - xbar.max(axis=2), -jnp.inf)
+    top = jnp.argsort(-fractionality, axis=1)[:, :2]
+    j1_many = jnp.min(top, axis=1)
+    j2_many = jnp.max(top, axis=1)
+    many = ok & (fc > 2)
+    j1 = jnp.where(many, j1_many, j1_first)
+    j2 = jnp.where(many, j2_many, j2_first)
+    sched_status = jnp.where(many, ST_FALLBACK, sched_status)
+
+    rows = jnp.arange(B)
+    Tb = jnp.broadcast_to(jnp.asarray(T, xbar.dtype).reshape(-1), (B,))
+
+    # ---- one fractional job: best-fit (Algorithm 1 line 4) -------------
+    one = ok & (fc == 1)
+    feas1 = jnp.concatenate(
+        [p_ed[rows, j1] <= Tb[:, None],
+         (p_es[rows, j1] <= Tb)[:, None]], axis=1)          # (B, m+1)
+    val1 = jnp.where(feas1, acc, -jnp.inf)
+    pick1 = jnp.argmax(val1, axis=1)
+    none1 = ~feas1.any(axis=1)
+    pick1 = jnp.where(none1, jnp.argmin(p_ed[rows, j1], axis=1), pick1)
+    sched_status = jnp.where(one & none1, ST_FALLBACK, sched_status)
+    assignment = jnp.where(
+        (one[:, None]) & (jnp.arange(n)[None, :] == j1[:, None]),
+        pick1[:, None].astype(jnp.int32), assignment)
+
+    # ---- two (or >2, truncated) fractional jobs: sub-ILP ---------------
+    two = ok & (fc >= 2)
+    zed = jnp.zeros((B, 1), xbar.dtype)
+    zes = jnp.zeros((B, m), xbar.dtype)
+    ed1 = jnp.concatenate([p_ed[rows, j1], zed], axis=1)    # (B, m+1)
+    ed2 = jnp.concatenate([p_ed[rows, j2], zed], axis=1)
+    es1 = jnp.concatenate([zes, p_es[rows, j1][:, None]], axis=1)
+    es2 = jnp.concatenate([zes, p_es[rows, j2][:, None]], axis=1)
+    ed_load = ed1[:, :, None] + ed2[:, None, :]
+    es_load = es1[:, :, None] + es2[:, None, :]
+    feas2 = ((ed_load <= Tb[:, None, None] + 1e-12)
+             & (es_load <= Tb[:, None, None] + 1e-12))
+    val2 = acc[:, :, None] + acc[:, None, :]
+    val2 = jnp.where(feas2, val2, -jnp.inf)
+    flat = jnp.argmax(val2.reshape(B, -1), axis=1)
+    i1, i2 = flat // mp1, flat % mp1
+    none2 = ~feas2.reshape(B, -1).any(axis=1)
+    i1 = jnp.where(none2, jnp.argmin(p_ed[rows, j1], axis=1), i1)
+    i2 = jnp.where(none2, jnp.argmin(p_ed[rows, j2], axis=1), i2)
+    sched_status = jnp.where(two & none2, ST_FALLBACK, sched_status)
+    cols = jnp.arange(n)[None, :]
+    assignment = jnp.where(two[:, None] & (cols == j1[:, None]),
+                           i1[:, None].astype(jnp.int32), assignment)
+    assignment = jnp.where(two[:, None] & (cols == j2[:, None]),
+                           i2[:, None].astype(jnp.int32), assignment)
+    return assignment, sched_status, n_frac
+
+
 def amr2_batch(batch: InstanceBatch, *,
                frac_tol: float = _FRAC_TOL) -> "list[Schedule]":
     """AMR^2 over a fleet of B same-shape instances.

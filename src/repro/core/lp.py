@@ -408,41 +408,33 @@ def _batched_inverse(Bmat):
     return aug[:, :, R:]
 
 
-@partial(jax.jit,
-         static_argnames=("nv", "maxiter", "tol", "bland_after", "impl"))
-def _warm_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
-                    bland_after=BLAND_AFTER, impl="jnp"):
-    """Revised-simplex warm start from a previous optimal basis.
+def _warm_init(A, b, basis0):
+    """Factor each lane's previous basis and repair primal infeasibility.
 
-    Factors each lane's basis once (one batched solve) and prices the full
-    tableau out of it.  Rows the old basis leaves primal-infeasible on the
-    new data (negative transformed rhs) are sign-flipped and handed a
-    tableau-space artificial, so phase 1 shrinks to ~#violated-rows repair
-    pivots — and vanishes entirely (zero pivots) when the basis is still
-    feasible — instead of the cold path's from-scratch R-pivot phase 1.
-    Phase 2 then runs from the (repaired) old vertex.
+    One batched factor (`_batched_inverse`) prices the full tableau out of
+    the old basis; rows the basis leaves infeasible on the new data
+    (negative transformed rhs) are sign-flipped and handed a VIRTUAL
+    tableau-space artificial (basis label C0 + row, column never
+    materialized), so phase 1 shrinks to ~#violated-rows repair pivots —
+    zero when the basis is still feasible.
 
-    Returns ``(x, fun, status, niter, basis, ok)``; lanes with ``ok``
-    False (out-of-range basis indices or a singular/ill-conditioned
-    factor) hold garbage and must be re-solved by the cold two-phase
-    path.
-
-    The repair artificials are *virtual*: they may never enter (so their
-    reduced costs are never read) and the drive-out/pricing rules only
-    need their basis LABELS (>= C0), so their columns are never
-    materialized — the warm tableau stays (R+1, C0+1) wide, ~25% less
-    pivot traffic than the cold tableau."""
-    B, R, C0 = A_j.shape
-    dtype = A_j.dtype
+    Returns ``(tabA (B, R, C0), rhs (B, R), bas (B, R) int32, ok (B,))``;
+    lanes with ``ok`` False (out-of-range basis indices or a
+    singular/ill-conditioned factor) hold garbage and must run cold.
+    Shared by `_warm_batch_jit` (host dispatch) and `simplex_batch_core`
+    (the traced engine path) so their accept thresholds and repair
+    semantics cannot drift apart."""
+    B, R, C0 = A.shape
+    dtype = A.dtype
     bas = jnp.clip(basis0, 0, C0 - 1).astype(jnp.int32)
     in_range = (basis0 >= 0).all(axis=1) & (basis0 < C0).all(axis=1)
 
-    Bmat = jnp.take_along_axis(A_j, bas[:, None, :], axis=2)   # (B, R, R)
-    eye = jnp.eye(R, dtype=dtype)
+    Bmat = jnp.take_along_axis(A, bas[:, None, :], axis=2)     # (B, R, R)
     Binv = _batched_inverse(Bmat)
-    resid = jnp.max(jnp.abs(Bmat @ Binv - eye), axis=(1, 2))
-    rhs = (Binv @ b_j[..., None])[..., 0]                      # (B, R)
-    tabA = Binv @ A_j                                          # (B, R, C0)
+    resid = jnp.max(jnp.abs(Bmat @ Binv - jnp.eye(R, dtype=dtype)),
+                    axis=(1, 2))
+    rhs = (Binv @ b[..., None])[..., 0]                        # (B, R)
+    tabA = Binv @ A                                            # (B, R, C0)
 
     # f32 (global x64 off, single-instance path) carries ~1e-7 relative
     # noise through the factor-solve: loosen the accept thresholds so a
@@ -459,50 +451,151 @@ def _warm_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
     rhs = jnp.maximum(rhs * sgn, 0.0)      # clamp -feas_tol..0 dust to 0
     rows = jnp.arange(R, dtype=jnp.int32)
     bas = jnp.where(flip, C0 + rows[None, :], bas)
+    return tabA, rhs, bas.astype(jnp.int32), ok
 
+
+def _two_phase_virtual(tabA, rhs, bas, b, c_full, *, nv, maxiter, tol,
+                       bland_after, impl, lane_mask=None):
+    """Both simplex phases over virtual-artificial tableaus.
+
+    Builds the (B, R+1, C0+1) tableau stack from per-lane rows/rhs and a
+    basis whose artificial members are LABELS >= C0 (columns never
+    materialized — they may never enter, and drive-out/pricing only read
+    labels), runs phase 1 (minimize the sum of artificial-basis rows, in
+    reduced-cost form), swaps in the real objective priced out over the
+    resulting basis, runs phase 2, and extracts the solution by
+    scatter-add (clipped virtual labels contribute 0, so they cannot
+    clobber a real basic variable's slot).  ``lane_mask`` False zeroes a
+    lane's tableau — no entering column, 0 pivots, garbage x.
+
+    The ONE definition of the warm/cold two-phase pipeline, shared by
+    `_warm_batch_jit` and `simplex_batch_core`: the phase-1 infeasibility
+    certificate and status propagation live here only.
+
+    Returns ``(x (B, nv), fun, status, niter, bases)``."""
+    B, R, C0 = tabA.shape
+    dtype = tabA.dtype
     tabs = jnp.zeros((B, R + 1, C0 + 1), dtype)
     tabs = tabs.at[:, :R, :C0].set(tabA)
     tabs = tabs.at[:, :R, -1].set(rhs)
-    # phase-1 objective (sum of basic repair artificials) in reduced-cost
-    # form: minus the sum of the flipped rows — the artificials' own
-    # columns would be zeroed anyway, hence never materialized
-    p1 = -jnp.einsum("br,brc->bc",
-                     jnp.where(flip, 1.0, 0.0).astype(dtype),
-                     tabs[:, :R, :])
+    # phase-1 objective: -(sum of artificial-basis rows) — for a cold lane
+    # (every row's basis virtual) this is `_solve_core`'s -sum(rows)
+    art_row = (bas >= C0).astype(dtype)
+    p1 = -jnp.einsum("br,brc->bc", art_row, tabs[:, :R, :])
     tabs = tabs.at[:, -1, :].set(p1)
-    # rejected lanes: zero tableau -> no entering column -> 0 pivots spent
-    tabs = jnp.where(ok[:, None, None], tabs, 0.0)
+    if lane_mask is not None:
+        tabs = jnp.where(lane_mask[:, None, None], tabs, 0.0)
 
     tabs, bases, it1, status1 = _phase_batched(
         tabs, bas, C0, maxiter=maxiter, tol=tol, bland_after=bland_after,
         impl=impl)
-    phase1_obj = tabs[:, -1, -1]           # = -(sum of repair artificials)
+    phase1_obj = tabs[:, -1, -1]           # = -(sum of basic artificials)
     infeasible = phase1_obj < -max(tol, 1e-5) * (
-        1.0 + jnp.abs(b_j).sum(axis=1))
+        1.0 + jnp.abs(b).sum(axis=1))
 
     # phase 2: swap in the real objective, priced out over the basis
     # (virtual artificial labels price at cost 0)
     obj = jnp.zeros((B, C0 + 1), dtype)
-    obj = obj.at[:, :C0].set(c_j)
+    obj = obj.at[:, :C0].set(c_full)
     cb = jnp.where(bases < C0,
                    jnp.take_along_axis(obj[:, :C0],
                                        jnp.clip(bases, 0, C0 - 1), axis=1),
                    0.0)                                        # (B, R)
     obj = obj - jnp.einsum("br,brc->bc", cb, tabs[:, :R, :])
+    if lane_mask is not None:
+        # keep masked lanes inert in phase 2 too: a real objective row on
+        # a zeroed tableau would otherwise spend one "unbounded" pivot
+        obj = jnp.where(lane_mask[:, None], obj, 0.0)
     tabs = tabs.at[:, -1, :].set(obj)
     tabs, bases, it2, status2 = _phase_batched(
         tabs, bases, C0, maxiter=maxiter, tol=tol, bland_after=bland_after,
         impl=impl)
 
-    # scatter-add: clipped virtual-artificial labels contribute 0, so they
-    # cannot clobber a real basic variable's slot
     vals = jnp.where(bases < C0, tabs[:, :R, -1], 0.0)
     x = jnp.zeros((B, C0), dtype)
     x = x.at[jnp.arange(B)[:, None], jnp.clip(bases, 0, C0 - 1)].add(vals)
     fun = -tabs[:, -1, -1]
     status = jnp.where(status1 != OPTIMAL, status1,
                        jnp.where(infeasible, INFEASIBLE, status2))
-    return x[:, :nv], fun, status, it1 + it2, bases, ok
+    return x[:, :nv], fun, status, it1 + it2, bases
+
+
+@partial(jax.jit,
+         static_argnames=("nv", "maxiter", "tol", "bland_after", "impl"))
+def _warm_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
+                    bland_after=BLAND_AFTER, impl="jnp"):
+    """Revised-simplex warm start from a previous optimal basis
+    (`_warm_init` + `_two_phase_virtual`).
+
+    Returns ``(x, fun, status, niter, basis, ok)``; lanes with ``ok``
+    False (out-of-range basis indices or a singular/ill-conditioned
+    factor) hold garbage and must be re-solved by the cold two-phase
+    path — `solve_lp_batch` dispatches them to `_solve_batch_jit` on a
+    pow2-padded subset (`simplex_batch_core` is the traced alternative
+    that runs them cold in the same call)."""
+    tabA, rhs, bas, ok = _warm_init(A_j, b_j, basis0)
+    # rejected lanes: zero tableau -> no entering column -> 0 pivots spent
+    x, fun, status, niter, bases = _two_phase_virtual(
+        tabA, rhs, bas, b_j, c_j, nv=nv, maxiter=maxiter, tol=tol,
+        bland_after=bland_after, impl=impl, lane_mask=ok)
+    return x, fun, status, niter, bases, ok
+
+
+def simplex_batch_core(A, b, c_full, basis0, *, nv: int, maxiter: int,
+                       tol: float = 1e-7, bland_after: int = BLAND_AFTER,
+                       impl: str = "jnp", lane_mask=None):
+    """Traceable warm-OR-cold batched two-phase simplex (the scan path).
+
+    Unlike `solve_lp_batch` — which accepts warm lanes via `_warm_batch_jit`
+    and re-solves rejected lanes with a second host-dispatched cold call —
+    this is ONE pure-jnp function usable inside `jax.jit` / `lax.scan` /
+    `shard_map` (the `repro.api.engine` period step): every lane starts
+    either from its previous basis (accepted: factor once, sign-flip and
+    virtually repair infeasible rows) or from the cold all-artificial
+    tableau (rejected / ``basis0`` rows of -1 / ``basis0=None``), and a
+    single `_phase_batched` pass runs phase 1 + phase 2 for the whole
+    stack.  A warm-feasible lane spends 0 phase-1 pivots; a cold lane runs
+    the same pivots `_solve_core` would, so per-lane results are
+    bit-comparable with the host `solve_lp_batch` dispatch.
+
+    ALL artificials are virtual (basis LABELS >= C0, columns never
+    materialized — the `_warm_batch_jit` trick extended to the cold path:
+    a cold lane's initial basis is simply every row's virtual label and
+    phase 1 minimizes -sum(rows), exactly `_solve_core`'s start): the
+    tableau stays (R+1, C0+1) wide, ~40% less pivot traffic than
+    materialized artificial columns, with identical pivot sequences —
+    artificials may never enter, and the drive-out/pricing rules only read
+    their labels.
+
+    ``basis0=None`` skips the warm factorization entirely (every lane
+    cold) — the engine's backpressure replan path.  ``lane_mask`` (B,)
+    bool: lanes marked False get a zeroed tableau — no entering column, 0
+    pivots, garbage x — for masked sub-batch solves without a host-side
+    subset.
+
+    Expects canonicalised inputs (``b >= 0``; see `_canonicalize_batch`).
+    Returns ``(x (B, nv), fun, status, niter, basis, warm_ok)``.
+    """
+    B, R, C0 = A.shape
+    rows = jnp.arange(R, dtype=jnp.int32)
+    # cold init: every row basic on its virtual artificial (`_solve_core`)
+    bas_c = jnp.broadcast_to(C0 + rows[None, :], (B, R)).astype(jnp.int32)
+
+    if basis0 is None:
+        warm_ok = jnp.zeros(B, dtype=bool)
+        tabA, rhs, bas = A, b, bas_c
+    else:
+        tabA_w, rhs_w, bas_w, warm_ok = _warm_init(A, b, basis0)
+        # rejected lanes start cold IN the same call (the host dispatch
+        # instead zeroes them and re-solves a pow2 subset; _warm_batch_jit)
+        tabA = jnp.where(warm_ok[:, None, None], tabA_w, A)
+        rhs = jnp.where(warm_ok[:, None], rhs_w, b)
+        bas = jnp.where(warm_ok[:, None], bas_w, bas_c)
+
+    x, fun, status, niter, bases = _two_phase_virtual(
+        tabA, rhs, bas, b, c_full, nv=nv, maxiter=maxiter, tol=tol,
+        bland_after=bland_after, impl=impl, lane_mask=lane_mask)
+    return x, fun, status, niter, bases, warm_ok
 
 
 def _warm_np(A, b, c_full, nv, basis0, maxiter, tol, bland_after):

@@ -180,6 +180,21 @@ class FleetProblem:
 
     # ---- constructors ----------------------------------------------------
     @classmethod
+    def from_arrays_unchecked(cls, p_ed, p_es, acc, T,
+                              real_mask) -> "FleetProblem":
+        """Construct WITHOUT `__post_init__` coercion/validation — for
+        traced (jit/scan/shard_map) code where the fields are jax tracers,
+        not NumPy arrays.  The pure-functional engine builds its period
+        `FleetProblem` this way; everything downstream only relies on the
+        pytree structure, so flatten/`device_put`/`shard_map` all work on
+        the result exactly as on a validated instance."""
+        obj = object.__new__(cls)
+        for f, v in (("p_ed", p_ed), ("p_es", p_es), ("acc", acc),
+                     ("T", T), ("real_mask", real_mask)):
+            object.__setattr__(obj, f, v)
+        return obj
+
+    @classmethod
     def from_batch(cls, batch: InstanceBatch,
                    real_mask: Optional[np.ndarray] = None) -> "FleetProblem":
         if real_mask is None:

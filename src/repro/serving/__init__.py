@@ -14,6 +14,7 @@ from .queue import RequestQueue
 from .fleet import (DeviceSpec, EdgeServerPool, FleetConfig, FleetEngine,
                     FleetPeriodStats, make_fleet, paper_style_profile,
                     roofline_style_profile)
+from . import engine_v2  # pure-functional EngineState/step/rollout/shard
 
 __all__ = [
     # profiles
@@ -30,4 +31,6 @@ __all__ = [
     "DeviceSpec", "EdgeServerPool", "FleetConfig", "FleetEngine",
     "FleetPeriodStats", "make_fleet", "paper_style_profile",
     "roofline_style_profile",
+    # pure-functional engine (EngineState pytree + step/rollout/shard)
+    "engine_v2",
 ]

@@ -1,0 +1,28 @@
+"""`repro.serving.engine_v2` — the serving-layer name for the
+pure-functional fleet engine.
+
+The implementation lives in `repro.api.engine` (it is solver-registry
+territory: the traced period core is built from `lp.simplex_batch_core` /
+`amr2.round_relaxation_jnp` / `dual._dual_one`); this module re-exports it
+under the serving namespace so engine code reads naturally next to
+`FleetEngine`:
+
+    from repro.serving import engine_v2
+    params = engine_v2.EngineParams.from_config(cfg, horizon=64)
+    state, metrics = engine_v2.rollout(engine_v2.init_state(params),
+                                       params, periods=64)
+
+`FleetEngine.run_period` delegates to the same jitted period core on the
+jax backend, so the two surfaces stay trajectory-identical by
+construction.
+"""
+from ..api.engine import (EngineParams, EngineState, PeriodMetrics,
+                          TRACEABLE_POLICIES, admit_mask_jnp, fleet_mesh,
+                          init_state, rollout, rollout_sharded, shard,
+                          step, step_sharded)
+
+__all__ = [
+    "EngineParams", "EngineState", "PeriodMetrics", "TRACEABLE_POLICIES",
+    "admit_mask_jnp", "fleet_mesh", "init_state",
+    "step", "rollout", "shard", "step_sharded", "rollout_sharded",
+]

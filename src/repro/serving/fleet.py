@@ -166,7 +166,13 @@ class EdgeServerPool:
 
     def admit(self, demands: Dict[int, float], T: float):
         """demands: device id -> ES seconds requested.  Returns
-        (admitted ids, per-server loads)."""
+        (admitted ids, per-server loads).
+
+        Iteration order is (demand, device-id)-sorted — never dict
+        insertion order — so admission is deterministic for any way the
+        caller assembled the dict, and identical to the vectorized
+        `admit_mask` / traced `repro.api.engine` admission scan
+        (regression-pinned in tests/test_engine_v2.py)."""
         loads = np.zeros(self.n_servers)
         admitted: List[int] = []
         for dev in sorted(demands, key=lambda d: (demands[d], d)):
@@ -176,6 +182,28 @@ class EdgeServerPool:
                 loads[slot] += need
                 admitted.append(dev)
         return admitted, loads
+
+    def admit_mask(self, demands: np.ndarray, T: float):
+        """Dense-array admission: ``demands`` is (D,) ES seconds per device
+        (<= 0 marks "not offloading").  Returns ``(admitted (D,) bool,
+        per-server loads)`` with exactly the `admit` ordering semantics —
+        ascending demand, device id on ties, least-loaded server first.
+        This is the NumPy twin of the traced admission scan the
+        pure-functional engine runs (`repro.api.engine.admit_mask_jnp`)."""
+        demands = np.asarray(demands, dtype=np.float64)
+        eff = np.where(demands > 0, demands, np.inf)
+        order = np.argsort(eff, kind="stable")       # ties -> id order
+        loads = np.zeros(self.n_servers)
+        mask = np.zeros(len(demands), dtype=bool)
+        for d in order:
+            need = float(demands[d])
+            if need <= 0:        # the +inf tail: non-offloaders
+                break
+            slot = int(np.argmin(loads))
+            if loads[slot] + need <= T + 1e-12:
+                loads[slot] += need
+                mask[d] = True
+        return mask, loads
 
 
 def _padded_instance(profile: TierProfile, job_classes: np.ndarray, T: float,
@@ -223,6 +251,9 @@ class FleetConfig:
     backend: str = "jax"
     straggler_threshold: float = 1.5
     ema: float = 0.5
+    # False forces the legacy host period pipeline even where the
+    # engine-v2 delegation would apply (benchmark baselines, debugging)
+    delegate: bool = True
     # traffic (RequestQueue)
     classes: Sequence[int] = (128, 512, 1024)
     rate: float = 10.0
@@ -269,12 +300,12 @@ class FleetEngine:
                    n_servers=config.n_servers, T=config.T,
                    policy=config.policy, backend=config.backend,
                    straggler_threshold=config.straggler_threshold,
-                   ema=config.ema)
+                   ema=config.ema, delegate=config.delegate)
 
     def __init__(self, devices: Sequence[DeviceSpec], queue: RequestQueue, *,
                  n_servers: int = 1, T: float, policy: str = "auto",
                  backend: str = "jax", straggler_threshold: float = 1.5,
-                 ema: float = 0.5):
+                 ema: float = 0.5, delegate: bool = True):
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
         if policy != "auto":
@@ -331,6 +362,34 @@ class FleetEngine:
         for g in self._groups:
             for row, d in enumerate(g.ids):
                 self._dev_slot[int(d)] = (g, row)
+        # ---- engine-v2 delegation (PR 5): on the jax backend with a
+        # traceable policy and a single shape group, `run_period` runs the
+        # SAME jitted period core the pure-functional engine scans over
+        # (`repro.api.engine._period_jit`) — one fused traced call per
+        # period instead of the solve/admit/replan/audit host pipeline.
+        # `self._v2_params` is None when any precondition fails (numpy
+        # backend, auto/amdp policy, mixed profile shapes) or the caller
+        # passed ``delegate=False``, and the host loop below runs
+        # unchanged.
+        self._v2_params = None
+        from ..api import engine as _engine_v2
+        if delegate and backend == "jax" \
+                and policy in _engine_v2.TRACEABLE_POLICIES \
+                and len(self._groups) == 1:
+            self._v2_params = _engine_v2.EngineParams.from_fleet(
+                devices, queue, T=T, n_servers=n_servers, policy=policy,
+                horizon=1, arrivals="poisson",   # arrivals come from the
+                #             host queue; the mode only gates presampling
+                straggler_threshold=straggler_threshold, ema=ema)
+            g = self._groups[0]
+            self._v2_lut = np.searchsorted(np.asarray(g.classes),
+                                           np.asarray(queue.classes))
+            # arrival-value -> queue-class-index mapping that stays
+            # correct when queue.classes is NOT sorted (searchsorted on
+            # the raw table would silently mis-price every job there)
+            qcls = np.asarray(queue.classes)
+            self._v2_qorder = np.argsort(qcls, kind="stable")
+            self._v2_qsorted = qcls[self._v2_qorder]
 
     # ------------------------------------------------------------------
     def run(self, periods: int) -> List[FleetPeriodStats]:
@@ -340,6 +399,93 @@ class FleetEngine:
     # vectorized period loop (the hot path)
     # ------------------------------------------------------------------
     def run_period(self) -> FleetPeriodStats:
+        if self._v2_params is not None:
+            return self._run_period_v2()
+        return self._run_period_host()
+
+    def _run_period_v2(self) -> FleetPeriodStats:
+        """Delegate the period to the pure-functional engine's jitted core
+        (`repro.api.engine._period_jit`): the host side only polls the
+        queue, hands over padded class-index arrays, and books the stats —
+        plan/admit/replan/price/audit are one traced call.  `run()` then
+        produces bit-identical trajectories to `engine.rollout` on a
+        replayed arrival trace (the same core scanned)."""
+        import time as _time
+
+        from jax.experimental import enable_x64
+
+        from ..api.engine import _period_jit
+
+        t = self._period
+        self._period += 1
+        arrivals = self.queue.poll(t)
+        D = len(self.devices)
+        g = self._groups[0]
+        params = self._v2_params
+        n_pad = self.queue.batch_max
+        take = np.fromiter((len(a) for a in arrivals), dtype=np.int32,
+                           count=D)
+        ci = np.zeros((D, n_pad), dtype=np.int32)
+        for d, a in enumerate(arrivals):
+            if len(a):
+                ci[d, :len(a)] = self._v2_qorder[
+                    np.searchsorted(self._v2_qsorted, a)]
+        outage = np.fromiter((st.spec.outage_at(t) for st in self.devices),
+                             dtype=bool, count=D)
+        drift = np.fromiter((st.spec.drift_at(t) for st in self.devices),
+                            dtype=np.float64, count=D)
+        belief = np.ascontiguousarray(g.p_ed[:, self._v2_lut, :])
+        warm = (np.asarray(g.warm_basis, np.int32)
+                if g.warm_basis is not None
+                else np.full((D, params.n_basis_rows), -1, np.int32))
+
+        t0 = _time.perf_counter()
+        with enable_x64():
+            _belief2, new_warm, upd, factor, m = _period_jit(
+                belief, warm, ci, take, drift, outage, params)
+        m = {k: np.asarray(v) for k, v in m.items()}
+        plan_seconds = _time.perf_counter() - t0
+        if int(m["n_unsolved"]):
+            # mirror api.solve's strict=True default: never silently
+            # serve best-effort roundings of a non-converged LP
+            raise RuntimeError(
+                f"{int(m['n_unsolved'])} device plan(s) were not solved "
+                f"to optimality this period (simplex iteration limit or "
+                f"unbounded LP); raise maxiter")
+
+        if self.policy == "amr2":   # LP-backed: carry the warm bases
+            g.warm_basis = np.asarray(new_warm, np.int64)
+        upd = np.asarray(upd)
+        if upd.any():
+            factor = np.asarray(factor)
+            g.p_ed[upd] *= factor[upd, None, None]
+            for r in np.nonzero(upd)[0]:
+                st = self.devices[int(g.ids[r])]
+                st.profile = dataclasses.replace(
+                    st.profile, p_ed=g.p_ed[r].copy())
+                st.n_updates += 1
+
+        n_jobs = int(m["n_jobs"])
+        total_acc = float(m["total_accuracy"])
+        stats = FleetPeriodStats(
+            period=t, n_devices=D, n_jobs=n_jobs,
+            plan_seconds=plan_seconds, total_accuracy=total_acc,
+            mean_job_accuracy=total_acc / n_jobs if n_jobs else 0.0,
+            n_violations=int(m["n_violations"]),
+            worst_violation=float(m["worst_violation"]),
+            n_offloading=int(m["n_offloading"]),
+            n_backpressured=int(m["n_backpressured"]),
+            n_outage=int(m["n_outage"]),
+            n_straggler_updates=int(m["n_straggler_updates"]),
+            es_utilization=float(m["es_utilization"]),
+            backlog=self.queue.backlog)
+        self.history.append(stats)
+        return stats
+
+    def _run_period_host(self) -> FleetPeriodStats:
+        """The pre-v2 host period pipeline (numpy backend, auto/amdp
+        dispatch, mixed shape groups): batched api solves + host
+        admission/audit bookkeeping."""
         t = self._period
         self._period += 1
         arrivals = self.queue.poll(t)
@@ -368,12 +514,10 @@ class FleetEngine:
             staged.append((g, fp, base, assign))
 
         # --- ES capacity: admit offload demand server by server ----------
-        offl = np.nonzero(es_demand_all > 0)[0]     # O(offloaders) Python
-        demands = dict(zip(offl.tolist(), es_demand_all[offl].tolist()))
-        admitted, loads = self.pool.admit(demands, self.T)
-        bumped = sorted(set(demands) - set(admitted))
-        admitted_mask = np.zeros(D_all, dtype=bool)
-        admitted_mask[list(admitted)] = True
+        offl_mask = es_demand_all > 0
+        admitted_mask, loads = self.pool.admit_mask(es_demand_all, self.T)
+        bumped = np.nonzero(offl_mask & ~admitted_mask)[0].tolist()
+        n_offloading = int(offl_mask.sum())
 
         # --- backpressure: ONE batched ES-disabled replan per group ------
         for g, fp, base, assign in staged:
@@ -447,7 +591,7 @@ class FleetEngine:
             plan_seconds=plan_seconds, total_accuracy=total_acc,
             mean_job_accuracy=total_acc / n_jobs if n_jobs else 0.0,
             n_violations=n_viol, worst_violation=worst_viol,
-            n_offloading=len(demands), n_backpressured=len(bumped),
+            n_offloading=n_offloading, n_backpressured=len(bumped),
             n_outage=int(outage.sum()), n_straggler_updates=n_updates,
             es_utilization=float(loads.sum()) / (self.pool.n_servers * self.T),
             backlog=self.queue.backlog)

@@ -49,6 +49,7 @@ class RequestQueue:
         if self.trace is not None and self.trace.shape[1] != n_devices:
             raise ValueError("trace must be (periods, n_devices)")
         self.class_probs = class_probs
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._backlog: List[deque] = [deque() for _ in range(n_devices)]
         self.total_arrived = 0
@@ -56,8 +57,54 @@ class RequestQueue:
 
     def _arrival_counts(self, period: int) -> np.ndarray:
         if self.trace is not None:
+            if self.trace.shape[0] == 0:
+                # an empty trace means "no arrivals ever", not a crash:
+                # every period yields zero-arrival (empty real_mask) rows
+                return np.zeros(self.n_devices, dtype=np.int64)
             return self.trace[period % self.trace.shape[0]]
         return self._rng.poisson(self.rate)
+
+    def presample(self, periods: int):
+        """Replay the arrival process for ``periods`` periods from the
+        queue's initial seed WITHOUT touching live state: the exact counts
+        and per-device class streams a fresh queue with this configuration
+        would produce from ``poll(0) .. poll(periods - 1)``.
+
+        This is how the pure-functional engine (`repro.api.engine`) gets
+        bit-identical arrivals to the host loop: the (periods, n_devices)
+        counts and the per-device arrival-ordered class streams become
+        `EngineParams` arrays, and the scanned `step` releases
+        ``min(backlog, batch_max)`` jobs off each stream — the same FIFO
+        the deque implements.
+
+        Returns ``(counts (periods, n_devices) int64, stream (n_devices,
+        S) int32)`` where ``stream[d, k]`` is the CLASS-TABLE INDEX (into
+        ``self.classes``) of device d's k-th arrival and S is the max
+        total arrivals of any device (shorter streams are 0-padded; the
+        padding is never dereferenced because releases never outrun
+        arrivals).
+        """
+        rng = np.random.default_rng(self.seed)
+        counts = np.zeros((periods, self.n_devices), dtype=np.int64)
+        streams: List[List[int]] = [[] for _ in range(self.n_devices)]
+        lut = {int(c): i for i, c in enumerate(self.classes)}
+        for t in range(periods):
+            if self.trace is not None:
+                if self.trace.shape[0]:
+                    counts[t] = self.trace[t % self.trace.shape[0]]
+            else:
+                counts[t] = rng.poisson(self.rate)
+            for d in range(self.n_devices):
+                k = int(counts[t, d])
+                if k:            # poll() skips the rng call when k == 0
+                    fresh = rng.choice(self.classes, size=k,
+                                       p=self.class_probs)
+                    streams[d].extend(lut[int(c)] for c in fresh)
+        S = max((len(s) for s in streams), default=0)
+        stream = np.zeros((self.n_devices, max(S, 1)), dtype=np.int32)
+        for d, s in enumerate(streams):
+            stream[d, :len(s)] = s
+        return counts, stream
 
     def poll(self, period: int) -> List[np.ndarray]:
         """Admit this period's arrivals, then release up to `batch_max` jobs

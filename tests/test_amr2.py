@@ -148,3 +148,86 @@ def test_infeasible_instance_flagged():
                            acc=np.array([0.3, 0.5, 0.9]), T=1.0)
     sched = amr2(inst)
     assert sched.status in ("infeasible", "fallback")
+
+
+# ---------------------------------------------------------------------------
+# round_relaxation_jnp: the traced rounding vs the NumPy batched rounding
+# ---------------------------------------------------------------------------
+def test_round_relaxation_jnp_matches_numpy_batched():
+    """The traced rounding must reproduce `round_relaxation_batch` case
+    for case — zero/one/two fractional rows, infeasible and unsolved
+    status codes — on real LP outputs across many instances."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.amr2 import (round_relaxation_batch,
+                                 round_relaxation_jnp)
+    from repro.core.lp import INFEASIBLE as LP_INFEASIBLE
+    from repro.core.lp import ITERATION_LIMIT
+    from repro.core.types import InstanceBatch
+    from repro.core import solve_lp_relaxation
+
+    insts = [random_instance(6, 2, T=float(0.3 + 0.2 * s), seed=100 + s)
+             for s in range(10)]
+    batch = InstanceBatch.stack(insts)
+    xbar = np.zeros((len(insts), 6, 3))
+    status = np.zeros(len(insts), dtype=np.int64)
+    for i, inst in enumerate(insts):
+        xb, _, st, _ = solve_lp_relaxation(inst, backend="numpy")
+        xbar[i], status[i] = xb, st
+    # exercise the non-OPTIMAL paths too
+    status[3] = LP_INFEASIBLE
+    status[7] = ITERATION_LIMIT
+    ref_assign, ref_status, ref_nf = round_relaxation_batch(
+        batch, xbar, status, on_error="mark")
+    with enable_x64():
+        got = jax.jit(round_relaxation_jnp)(
+            jnp.asarray(batch.p_ed), jnp.asarray(batch.p_es),
+            jnp.asarray(batch.acc), jnp.asarray(batch.T),
+            jnp.asarray(xbar), jnp.asarray(status))
+    assign, sched_status, nf = [np.asarray(o) for o in got]
+    np.testing.assert_array_equal(assign, ref_assign)
+    np.testing.assert_array_equal(sched_status, ref_status)
+    np.testing.assert_array_equal(nf, ref_nf)
+    # the suite exercised at least one fractional lane
+    assert (ref_nf > 0).any()
+
+
+def test_round_relaxation_jnp_forced_fractional_rows():
+    """Hand-built xbar rows force the one- and two-fractional branches
+    (including the infeasible-pair fallback)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.amr2 import (round_relaxation_batch,
+                                 round_relaxation_jnp)
+    from repro.core.types import InstanceBatch
+
+    insts = [random_instance(4, 2, T=0.8, seed=s) for s in range(4)]
+    # lane 3: nothing fits -> rounding falls back to argmin p_ed
+    tiny = insts[3]
+    insts[3] = OffloadInstance(p_ed=tiny.p_ed + 10.0, p_es=tiny.p_es + 10.0,
+                               acc=tiny.acc, T=tiny.T)
+    batch = InstanceBatch.stack(insts)
+    xbar = np.zeros((4, 4, 3))
+    xbar[:, :, 0] = 1.0                     # integral base
+    xbar[1, 2] = [0.5, 0.5, 0.0]           # one fractional row
+    xbar[2, 0] = [0.4, 0.6, 0.0]           # two fractional rows
+    xbar[2, 3] = [0.0, 0.3, 0.7]
+    xbar[3, 1] = [0.5, 0.5, 0.0]           # fractional AND infeasible fit
+    xbar[3, 2] = [0.9, 0.0, 0.1]
+    status = np.zeros(4, dtype=np.int64)
+    ref_assign, ref_status, ref_nf = round_relaxation_batch(
+        batch, xbar, status)
+    with enable_x64():
+        got = jax.jit(round_relaxation_jnp)(
+            jnp.asarray(batch.p_ed), jnp.asarray(batch.p_es),
+            jnp.asarray(batch.acc), jnp.asarray(batch.T),
+            jnp.asarray(xbar), jnp.asarray(status))
+    assign, sched_status, nf = [np.asarray(o) for o in got]
+    np.testing.assert_array_equal(assign, ref_assign)
+    np.testing.assert_array_equal(sched_status, ref_status)
+    np.testing.assert_array_equal(nf, ref_nf)
+    assert ref_nf.tolist() == [0, 1, 2, 2]

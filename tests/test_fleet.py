@@ -426,6 +426,39 @@ def test_vectorized_engine_matches_reference_loop():
                                    rtol=1e-12)
 
 
+def test_run_period_delegation_matches_host_pipeline():
+    """`run_period` on the jax backend now delegates to the engine-v2
+    jitted period core; the legacy host pipeline (api solves + host
+    admission/audit) must produce the same trajectories — ints exact,
+    floats to summation-order tolerance."""
+    def build(delegate):
+        specs = make_fleet(6, seed=4, horizon=8, straggler_frac=0.0)
+        q = RequestQueue(6, (128, 512, 1024), rate=8.0, batch_max=8,
+                         seed=4)
+        return FleetEngine(specs, q, n_servers=1, T=1.2, backend="jax",
+                           policy="amr2", delegate=delegate)
+
+    v2, host = build(True), build(False)    # delegate vs legacy pipeline
+    assert v2._v2_params is not None
+    assert host._v2_params is None
+    for period in range(3):
+        sv = v2.run_period()
+        sh = host.run_period()
+        for f in ("n_jobs", "n_violations", "n_offloading",
+                  "n_backpressured", "n_outage", "n_straggler_updates",
+                  "backlog"):
+            assert getattr(sv, f) == getattr(sh, f), (period, f)
+        assert sv.total_accuracy == pytest.approx(sh.total_accuracy,
+                                                  abs=1e-9)
+        assert sv.worst_violation == pytest.approx(sh.worst_violation,
+                                                   abs=1e-12)
+    for dv, dh in zip(v2.devices, host.devices):
+        np.testing.assert_allclose(dv.profile.p_ed, dh.profile.p_ed,
+                                   rtol=1e-12)
+    np.testing.assert_array_equal(v2._groups[0].warm_basis,
+                                  host._groups[0].warm_basis)
+
+
 def test_engine_jax_dual_policy_runs():
     specs = [DeviceSpec(profile=_profile()) for _ in range(4)]
     q = RequestQueue(4, (64,), rate=6.0, batch_max=N, seed=1)

@@ -267,3 +267,93 @@ def test_solve_lp_batch_warm_pallas_impl_matches_jnp():
     np.testing.assert_array_equal(got.niter, ref.niter)
     np.testing.assert_array_equal(got.basis, ref.basis)
     np.testing.assert_allclose(got.x, ref.x, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# simplex_batch_core: the traced warm-or-cold engine path vs the host
+# solve_lp_batch dispatch (accepted-warm + cold-fallback), lane for lane
+# ---------------------------------------------------------------------------
+def _run_core(c, A_ub, b_ub, A_eq, b_eq, basis0, lane_mask=None):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.lp import (_bucket_maxiter, _canonicalize_batch,
+                               simplex_batch_core)
+    A, b, cf, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
+    maxiter = _bucket_maxiter(50 * (A.shape[1] + 2))
+    with enable_x64():
+        out = jax.jit(
+            lambda A_, b_, c_: simplex_batch_core(
+                A_, b_, c_,
+                None if basis0 is None else jnp.asarray(basis0),
+                nv=nv, maxiter=maxiter,
+                lane_mask=None if lane_mask is None
+                else jnp.asarray(lane_mask)))(
+            jnp.asarray(A), jnp.asarray(b), jnp.asarray(cf))
+    return [np.asarray(o) for o in out]      # x, fun, status, niter, basis, ok
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_simplex_batch_core_cold_bitwise_matches_solve_lp_batch(seed):
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(seed, nb=6)
+    ref = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    for basis0 in (None, np.full_like(ref.basis, -1)):
+        x, fun, status, niter, basis, ok = _run_core(
+            c, A_ub, b_ub, A_eq, b_eq, basis0)
+        assert not ok.any()
+        np.testing.assert_array_equal(status, ref.status)
+        np.testing.assert_array_equal(niter, ref.niter)
+        np.testing.assert_array_equal(basis, ref.basis)
+        np.testing.assert_array_equal(x, ref.x)          # bitwise
+        np.testing.assert_array_equal(fun, ref.fun)
+
+
+def test_simplex_batch_core_warm_and_rejected_match_host_dispatch():
+    """Accepted lanes follow `_warm_batch_jit` (shared `_warm_init` /
+    `_two_phase_virtual`); rejected/-1 lanes run cold IN the same call and
+    must still match the host's subset re-solve bitwise."""
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(7, nb=6)
+    cold = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    rng = np.random.default_rng(3)
+    c2 = c + 0.05 * rng.normal(size=c.shape)   # perturbed next period
+    wb = cold.basis.copy()
+    wb[::2] = -1                               # stale every other lane
+    ref = solve_lp_batch(c2, A_ub, b_ub, A_eq, b_eq, warm_basis=wb)
+    x, fun, status, niter, basis, ok = _run_core(
+        c2, A_ub, b_ub, A_eq, b_eq, wb)
+    np.testing.assert_array_equal(ok, np.asarray(ref.warm))
+    np.testing.assert_array_equal(status, ref.status)
+    np.testing.assert_array_equal(niter, ref.niter)
+    np.testing.assert_array_equal(basis, ref.basis)
+    np.testing.assert_array_equal(x, ref.x)
+    np.testing.assert_array_equal(fun, ref.fun)
+
+
+def test_simplex_batch_core_infeasible_lane_status():
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(5, nb=4)
+    b_eq = b_eq.copy()
+    b_eq[1] = 100.0                            # sum x = 100 with x <= ~3 cap
+    ref = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    assert ref.status[1] == INFEASIBLE
+    x, fun, status, niter, basis, ok = _run_core(
+        c, A_ub, b_ub, A_eq, b_eq, None)
+    np.testing.assert_array_equal(status, ref.status)
+    np.testing.assert_array_equal(x, ref.x)
+
+
+def test_simplex_batch_core_lane_mask_zeroes_masked_lanes():
+    """Masked-out lanes spend zero pivots and active lanes are untouched
+    by their presence (the engine's backpressure masking)."""
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(2, nb=6)
+    ref = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    lane_mask = np.array([True, False, True, False, True, False])
+    x, fun, status, niter, basis, ok = _run_core(
+        c, A_ub, b_ub, A_eq, b_eq, None, lane_mask=lane_mask)
+    np.testing.assert_array_equal(x[lane_mask], ref.x[lane_mask])
+    np.testing.assert_array_equal(niter[lane_mask], ref.niter[lane_mask])
+    assert (niter[~lane_mask] == 0).all()
