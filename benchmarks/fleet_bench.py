@@ -20,22 +20,28 @@ Sections:
     asserting bit-tight warm/cold LP-objective parity plus a bounded
     rounded-accuracy gap vs the per-device NumPy oracle, and reporting
     warm-vs-cold throughput plus warm-basis acceptance rates.
-  * ``fleet/scale/B``  — runs the full serving engine (Poisson queue, ES
-    pool, stragglers, outages) at increasing fleet sizes (through the
-    256/1024-device points) and reports devices-planned/sec plus aggregate
-    accuracy / violation numbers.
-  * ``fleet/speedup``  — the vectorized `run_period` (amr2 and dual
-    policies) against the PR-1 per-device `run_period_reference` loop at
-    the 256-device point.
+  * ``fleet/scale/B``  — engine-v2 `rollout()` (ONE lax.scan per point,
+    state buffers donated, amr2 on the reduced-tableau
+    ``method="revised"`` simplex) at increasing fleet sizes through the
+    CI-feasible 16k point, with the 100k point opt-in via
+    ``FLEET_BENCH_SCALE_SIZES=102400``; reports devices/sec plus
+    aggregate accuracy / violation numbers and gates >= 16k points on
+    not scaling worse than the smallest amr2 point (plus the absolute
+    ``FLEET_BENCH_MIN_DEVICES_PER_S`` floor when set).
+  * ``fleet/speedup``  — the scanned `engine.rollout` hot path (amr2 and
+    dual policies) against the PR-1 per-device `run_period_reference`
+    loop at the 256-device point.
 
 Every section also folds its numbers into ``BENCH_fleet.json`` (repo root;
 override with ``BENCH_FLEET_JSON``).  Sections merge dict-into-dict (one
 level per nesting), so a partial run — e.g. the CI smoke job, which only
 runs the small device counts — updates its keys and leaves every
 previously-recorded key intact (`scripts/check_bench_keys.py` enforces
-this in CI).  ``FLEET_BENCH_SIZES`` / ``FLEET_BENCH_PERIODS`` /
+this in CI).  ``FLEET_BENCH_SCALE_SIZES`` (or the legacy
+``FLEET_BENCH_SIZES``) / ``FLEET_BENCH_PERIODS`` /
 ``FLEET_BENCH_SPEEDUP_DEVICES`` / ``FLEET_BENCH_PARITY_SIZES`` /
-``FLEET_BENCH_WARM_SIZES`` shrink the run for CI smoke jobs.
+``FLEET_BENCH_WARM_SIZES`` shrink (or, for the 100k scale point, grow)
+the run for CI smoke jobs.
 
 Standalone:  PYTHONPATH=src python benchmarks/fleet_bench.py
 CSV via the harness:  python benchmarks/run.py fleet
@@ -78,8 +84,15 @@ def _record(section: str, payload) -> None:
     Merges into the existing document — recursively for dict payloads, so
     e.g. a 64-device-only smoke run updates ``parity["64"]`` and leaves
     ``parity["256"]`` intact — and rewrites after every section so an
-    interrupted run still leaves a valid file."""
-    _RESULTS[section] = payload
+    interrupted run still leaves a valid file.  The in-process accumulator
+    merges too (not assigns): a section recorded in several calls — e.g.
+    ``scaling()`` re-run for extra sizes in one process — keeps its
+    earlier keys even when the on-disk document is unreadable at rewrite
+    time (the case where merge-on-write alone cannot recover them)."""
+    if isinstance(payload, dict):
+        _RESULTS[section] = _merge(_RESULTS.get(section, {}), payload)
+    else:
+        _RESULTS[section] = payload
     doc = {}
     try:
         with open(_JSON_PATH) as fh:
@@ -95,10 +108,14 @@ def _record(section: str, payload) -> None:
 
 
 def _scale_sizes():
-    env = os.environ.get("FLEET_BENCH_SIZES")
-    if env:
-        return tuple(int(x) for x in env.split(","))
-    return (8, 16, 32, 64, 256, 1024)
+    """Scale-section fleet sizes.  ``FLEET_BENCH_SCALE_SIZES`` wins (the
+    opt-in 100k+ knob), then the legacy ``FLEET_BENCH_SIZES`` (the CI
+    smoke job's), then the default through the 16k point."""
+    for var in ("FLEET_BENCH_SCALE_SIZES", "FLEET_BENCH_SIZES"):
+        env = os.environ.get(var)
+        if env:
+            return tuple(int(x) for x in env.split(","))
+    return (256, 1024, 4096, 16384)
 
 
 def _periods(n_devices: int) -> int:
@@ -353,42 +370,115 @@ def _engine(n_devices: int, *, policy: str = "auto", seed: int = 7):
         horizon=SCALE_PERIODS, seed=seed))
 
 
+def _scale_params(n_devices: int, policy: str, periods: int):
+    """Engine-v2 params for one scale point: Poisson arrivals (no D x S
+    replay trace to materialize at 100k devices) and the reduced-tableau
+    LP path for amr2 (the memory shape that admits 100k lanes)."""
+    from repro.api import engine as E
+    from repro.serving import RequestQueue
+    from repro.serving.fleet import make_fleet
+
+    specs = make_fleet(n_devices, seed=7, horizon=max(4, periods))
+    queue = RequestQueue(n_devices, (128, 512, 1024), rate=10.0,
+                         batch_max=PARITY_JOBS, seed=7)
+    params = E.EngineParams.from_fleet(
+        specs, queue, T=1.2, n_servers=max(1, n_devices // 16),
+        policy=policy, horizon=max(4, periods), arrivals="poisson",
+        lp_method="revised" if policy == "amr2" else "tableau")
+    return params
+
+
 def scaling():
-    """End-to-end engine throughput + accuracy/violation vs fleet size."""
+    """Engine-v2 `rollout()` throughput + accuracy/violation vs fleet
+    size: each point is ONE `lax.scan` over the jitted period step with
+    the input state's buffers DONATED (`rollout(..., donate=True)`), amr2
+    on the reduced-tableau (``method="revised"``) simplex — the
+    100k-lane shape.  Default sizes run through the 16k point (CI-feasible
+    on a shared runner); the 100k point is opt-in via
+    ``FLEET_BENCH_SCALE_SIZES=102400``.
+
+    Gates: every amr2 point must clear the absolute
+    ``FLEET_BENCH_MIN_DEVICES_PER_S`` floor when set (the CI 16k smoke
+    pins one), and the 16384-device amr2 point must additionally clear
+    ``FLEET_BENCH_SCALE_ANCHOR`` devices/s — default 9900, the
+    256-device amr2 rollout anchor the dense-tableau engine measured on
+    the 1-core dev host: per-device LP work is constant across fleet
+    sizes, so a 64x-larger fleet that can't sustain the small-fleet
+    throughput means the planner stopped scaling.  Set it to 0 on
+    slower hosts (shared CI runners use the absolute floor instead).
+    The opt-in 100k point is recorded but NOT anchored: its admission
+    scan is O(n_devices * n_servers) sequential first-fit work (the
+    server pool grows with the fleet), which dominates past ~50k
+    devices and is outside what the anchor measures.  Each point is
+    recorded into BENCH_fleet.json as soon as it is measured, so a
+    tripped gate never discards earlier points."""
+    import jax
+
+    from repro.api import engine as E
+
     out = []
-    entries: dict = {}
+    entries: dict = {}  # per-size slices, mirrors what _record has seen
+    floor = float(os.environ.get("FLEET_BENCH_MIN_DEVICES_PER_S", 0))
+    anchor = float(os.environ.get("FLEET_BENCH_SCALE_ANCHOR", 9900)) or None
     for n_devices in _scale_sizes():
         periods = _periods(n_devices)
-        policies = ("auto", "dual") if n_devices >= _BIG else ("auto",)
-        for policy in policies:
-            engine = _engine(n_devices, policy=policy)
-            engine.run_period()                         # compile once
-            engine.history.clear()  # keep jit warmup out of the averages
+        for policy in ("amr2", "dual"):
+            params = _scale_params(n_devices, policy, periods)
+            # compile the DONATED jit variant (its own cache entry)
+            _, M = E.rollout(E.init_state(params), params, periods,
+                             donate=True)
+            jax.block_until_ready(np.asarray(M.total_accuracy))
             t0 = time.perf_counter()
-            engine.run(periods)
+            # donate a fresh state's buffers: the steady-state rollout
+            # shape (the old and new fleet state never coexist)
+            _, M = E.rollout(E.init_state(params), params, periods,
+                             donate=True)
+            acc = np.asarray(M.total_accuracy)
+            jax.block_until_ready(acc)
             wall = time.perf_counter() - t0
-            s = engine.summary()
+            n_jobs = int(np.asarray(M.n_jobs).sum())
+            dps = n_devices * periods / wall
             entry = {
                 "devices": n_devices, "policy": policy, "periods": periods,
-                "jobs": s["jobs"],
-                "devices_per_s_plan": s["devices_per_second"],
-                "devices_per_s_wall": n_devices * periods / wall,
-                "mean_job_accuracy": s["mean_job_accuracy"],
-                "violation_rate": s["violation_rate"],
-                "backpressure_rate": s["backpressure_rate"],
+                "path": "rollout_scan_donated",
+                "lp_method": params.lp_method,
+                "jobs": n_jobs,
+                "devices_per_s_plan": dps,
+                "devices_per_s_wall": dps,
+                "mean_job_accuracy": float(acc.sum()) / max(n_jobs, 1),
+                "violation_rate": float(np.asarray(M.n_violations).sum())
+                / (n_devices * periods),
+                "backpressure_rate":
+                float(np.asarray(M.n_backpressured).sum())
+                / (n_devices * periods),
             }
+            # record BEFORE the gates so a tripped assert still leaves
+            # the measured point in BENCH_fleet.json
             entries.setdefault(str(n_devices), {})[policy] = entry
+            _record("scale", {str(n_devices): {policy: entry}})
+            if policy == "amr2":
+                assert int(np.asarray(M.n_unsolved).sum()) == 0, \
+                    f"{n_devices}-device rollout left LPs unsolved"
+                if floor:
+                    assert dps >= floor, \
+                        f"{n_devices}-device rollout at {dps:.0f} " \
+                        f"devices/s is under the {floor:.0f} floor"
+                if anchor is not None and n_devices == 16384:
+                    assert dps >= anchor, \
+                        f"{n_devices}-device rollout at {dps:.0f} " \
+                        f"devices/s is under the 256-device scale " \
+                        f"anchor ({anchor:.0f}; FLEET_BENCH_SCALE_ANCHOR)"
             tag = f"fleet/scale/{n_devices}" + (
-                "" if policy == "auto" else f"/{policy}")
+                "" if policy == "amr2" else f"/{policy}")
             out.append((
-                tag, s["plan_seconds_per_period"] / n_devices * 1e6,
-                f"periods={periods};jobs={s['jobs']};"
-                f"devices_per_s={s['devices_per_second']:.0f};"
-                f"acc_per_job={s['mean_job_accuracy']:.4f};"
-                f"violation_rate={s['violation_rate']:.4f};"
-                f"backpressure_rate={s['backpressure_rate']:.4f};"
+                tag, wall / (n_devices * periods) * 1e6,
+                f"periods={periods};jobs={n_jobs};"
+                f"devices_per_s={dps:.0f};"
+                f"lp_method={params.lp_method};donate=1;"
+                f"acc_per_job={entry['mean_job_accuracy']:.4f};"
+                f"violation_rate={entry['violation_rate']:.4f};"
+                f"backpressure_rate={entry['backpressure_rate']:.4f};"
                 f"sim_wall_s={wall:.2f}"))
-    _record("scale", entries)
     return out
 
 
@@ -399,16 +489,24 @@ def speedup():
     Two kinds of comparison, kept separate so the loop gain is not
     conflated with a solver/policy change:
 
-      * *loop speedup* — `run_period` vs `run_period_reference` under the
-        SAME policy (amr2/amr2 and dual/dual), isolating the array-resident
-        assembly/replan/audit against the per-device Python loop;
-      * *path speedup* — the new hot path (vectorized engine, amr2 or
-        dual) against the PR-1 serving configuration
-        (`run_period_reference`, policy "auto"), the number the ROADMAP
-        tracks.  The reference loop's `solve_many` itself already benefits
-        from the batched solvers, so this UNDERSTATES the gain over the
-        literal PR-1 code.
+      * *loop speedup* — the scanned `engine.rollout` vs
+        `run_period_reference` under the SAME policy (amr2/amr2 and
+        dual/dual), isolating the array-resident single-scan path against
+        the per-device Python loop;
+      * *path speedup* — the new hot path (`engine.rollout`, ONE lax.scan
+        with donated state buffers; amr2 on the reduced-tableau simplex)
+        against the PR-1 serving configuration (`run_period_reference`,
+        policy "auto"), the number the ROADMAP tracks.  The reference
+        loop's `solve_many` itself already benefits from the batched
+        solvers, so this UNDERSTATES the gain over the literal PR-1 code.
+
+    The scan path has no separate per-period planning phase, so its
+    ``devices_per_s_plan`` equals its wall number.
     """
+    import jax
+
+    from repro.api import engine as E
+
     n = int(os.environ.get("FLEET_BENCH_SPEEDUP_DEVICES", _BIG))
     periods = _periods(n)
 
@@ -430,11 +528,32 @@ def speedup():
             "violation_rate": s["violation_rate"],
         }
 
+    def _run_scan(policy: str):
+        params = _scale_params(n, policy, periods)
+        _, M = E.rollout(E.init_state(params), params, periods,
+                         donate=True)              # compile (donated jit)
+        jax.block_until_ready(np.asarray(M.total_accuracy))
+        t0 = time.perf_counter()
+        _, M = E.rollout(E.init_state(params), params, periods,
+                         donate=True)
+        acc = np.asarray(M.total_accuracy)
+        jax.block_until_ready(acc)
+        wall = time.perf_counter() - t0
+        n_jobs = int(np.asarray(M.n_jobs).sum())
+        dps = n * periods / wall
+        return {
+            "devices_per_s_plan": dps,      # scan: plan == wall (one call)
+            "devices_per_s_wall": dps,
+            "mean_job_accuracy": float(acc.sum()) / max(n_jobs, 1),
+            "violation_rate": float(np.asarray(M.n_violations).sum())
+            / (n * periods),
+        }
+
     pr1 = _run("auto", reference=True)        # the PR-1 serving config
     ref_amr2 = _run("amr2", reference=True)
     ref_dual = _run("dual", reference=True)
-    new_amr2 = _run("amr2", reference=False)
-    new_dual = _run("dual", reference=False)
+    new_amr2 = _run_scan("amr2")
+    new_dual = _run_scan("dual")
 
     def _ratio(a, b, key):
         return a[key] / max(b[key], 1e-12)

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from functools import partial
 from typing import Optional, Tuple
 
@@ -142,6 +143,10 @@ class EngineParams:
     iters: int = 40            # dual bisection iterations
     maxiter: Optional[int] = None
     tol: float = 1e-7
+    # simplex pivot representation: "tableau" (dense, bit-compatible with
+    # the PR-5 pins) or "revised" (reduced-tableau eta-factor path — the
+    # 100k-lane memory/throughput shape; see core.lp.simplex_batch_core)
+    lp_method: str = "tableau"
 
     @property
     def n_devices(self) -> int:
@@ -164,7 +169,8 @@ class EngineParams:
                    straggler_threshold: float = 1.5, ema: float = 0.5,
                    frac_tol: float = 1e-4, iters: int = 40,
                    maxiter: Optional[int] = None,
-                   tol: float = 1e-7) -> "EngineParams":
+                   tol: float = 1e-7,
+                   lp_method: str = "tableau") -> "EngineParams":
         """Build params from `DeviceSpec`s + a `RequestQueue` (the host
         engine's vocabulary).  Requires one shape group — every profile
         sharing a class table and model count — which is what
@@ -178,6 +184,9 @@ class EngineParams:
                 f"pure-functional engine supports {TRACEABLE_POLICIES}")
         if arrivals not in ("replay", "poisson"):
             raise ValueError(f"unknown arrivals mode {arrivals!r}")
+        if lp_method not in ("tableau", "revised"):
+            raise ValueError(f"unknown lp_method {lp_method!r}; expected "
+                             f"'tableau' or 'revised'")
         if horizon <= 0:
             raise ValueError("horizon must be positive")
         if queue.n_devices != len(devices):
@@ -237,12 +246,14 @@ class EngineParams:
             policy=policy, arrivals=arrivals, n_servers=n_servers,
             batch_max=queue.batch_max,
             straggler_threshold=straggler_threshold, ema=ema,
-            frac_tol=frac_tol, iters=iters, maxiter=maxiter, tol=tol)
+            frac_tol=frac_tol, iters=iters, maxiter=maxiter, tol=tol,
+            lp_method=lp_method)
 
     @classmethod
     def from_config(cls, config, *, horizon: Optional[int] = None,
                     arrivals: str = "replay",
-                    policy: Optional[str] = None) -> "EngineParams":
+                    policy: Optional[str] = None,
+                    lp_method: str = "tableau") -> "EngineParams":
         """Build params from a declarative `serving.FleetConfig` — the
         engine-v2 twin of `FleetEngine.from_config`.  The replayed arrival
         trace covers ``horizon`` periods (default: the config's
@@ -253,7 +264,8 @@ class EngineParams:
             n_servers=config.n_servers,
             policy=policy if policy is not None else config.policy,
             horizon=horizon, arrivals=arrivals,
-            straggler_threshold=config.straggler_threshold, ema=config.ema)
+            straggler_threshold=config.straggler_threshold, ema=config.ema,
+            lp_method=lp_method)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,7 +313,7 @@ _PARAM_LEAVES = ("classes", "base_p_ed", "p_es", "acc", "T", "rate",
                  "class_probs", "drift", "outage", "counts", "stream")
 _PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
               "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
-              "tol")
+              "tol", "lp_method")
 
 _register(EngineParams, _PARAM_LEAVES, _PARAM_AUX)
 _register(EngineState, _STATE_FIELDS)
@@ -349,8 +361,39 @@ def admit_mask_jnp(demands, T, n_servers: int):
     return mask, loads
 
 
+# Lane-chunk width for the per-period plan: fleets larger than this are
+# planned as `lax.map` over chunks of lanes so the whole build -> factor ->
+# pivot -> round pipeline stays cache-resident per chunk.  Every lane's
+# arithmetic is independent, so chunking is BIT-IDENTICAL to the flat plan
+# (pinned by the rollout parity gates) — it only changes memory traffic: a
+# flat 16k+-lane pivot loop streams the full (D, R, C0) working set from
+# DRAM every iteration and runs ~2.5x slower per lane than the 256-lane
+# point.  0 disables; fleets not divisible by the chunk run flat.
+_PLAN_LANE_CHUNK = int(os.environ.get("REPRO_PLAN_LANE_CHUNK", "1024"))
+
+
 def _plan(params: EngineParams, fp: FleetProblem, warm_basis,
           lane_mask=None):
+    """Chunked wrapper over `_plan_flat` (see `_PLAN_LANE_CHUNK`)."""
+    D = fp.p_es.shape[0]
+    chunk = _PLAN_LANE_CHUNK
+    if not chunk or D <= chunk or D % chunk:
+        return _plan_flat(params, fp, warm_basis, lane_mask)
+    nc = D // chunk
+
+    def resh(x):
+        return x.reshape((nc, chunk) + x.shape[1:])
+
+    xs = (jax.tree.map(resh, fp),
+          None if warm_basis is None else resh(warm_basis),
+          None if lane_mask is None else resh(lane_mask))
+    out = jax.lax.map(
+        lambda a: _plan_flat(params, a[0], a[1], a[2]), xs)
+    return jax.tree.map(lambda x: x.reshape((D,) + x.shape[2:]), out)
+
+
+def _plan_flat(params: EngineParams, fp: FleetProblem, warm_basis,
+               lane_mask=None):
     """One traced batched solve of a (padded) `FleetProblem`.
 
     amr2: warm-or-cold batched simplex + vectorized rounding — per-lane
@@ -366,7 +409,8 @@ def _plan(params: EngineParams, fp: FleetProblem, warm_basis,
             _bucket_maxiter(50 * (A.shape[1] + 2))
         x, _fun, st, _ni, basis, _ok = simplex_batch_core(
             A, b, c_full, warm_basis, nv=n * (m + 1), maxiter=maxiter,
-            tol=params.tol, lane_mask=lane_mask)
+            tol=params.tol, lane_mask=lane_mask,
+            method=params.lp_method)
         xbar = x.reshape(D, n, m + 1)
         assign, sched_status, _nf = round_relaxation_jnp(
             fp.p_ed, fp.p_es, fp.acc, fp.T, xbar, st,
@@ -550,9 +594,17 @@ def _step_impl(state: EngineState, params: EngineParams,
     H = params.drift.shape[1]
     drift_t = jnp.take(params.drift, t % H, axis=1)
     outage_t = jnp.take(params.outage, t % H, axis=1)
+    # A basis optimal for last period's LP is meaningless when the ES
+    # column set changed underneath it (outage flipping on/off swaps the
+    # offload columns for the disabled sentinel): mask those lanes back to
+    # -1 so `_warm_init` cold-starts them instead of factoring a basis of
+    # the wrong problem.
+    outage_prev = jnp.take(params.outage, (t - 1) % H, axis=1)
+    stale = (t > 0) & (outage_prev != outage_t)
+    warm0 = jnp.where(stale[:, None], jnp.int32(-1), state.warm_basis)
     ci, take, pending, head, key = _arrivals(state, params, axis_name)
     new_belief, new_warm, upd, _factor, m = _period_impl(
-        state.p_ed, state.warm_basis, ci, take, drift_t, outage_t, params,
+        state.p_ed, warm0, ci, take, drift_t, outage_t, params,
         axis_name=axis_name)
     backlog = jnp.sum(pending)
     if axis_name:
@@ -584,11 +636,41 @@ def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params):
                         params)
 
 
-@partial(jax.jit, static_argnames=("periods",))
-def _rollout_jit(state, params, periods: int):
+def _rollout_impl(state, params, periods: int):
     def body(s, _):
         return _step_impl(s, params)
     return jax.lax.scan(body, state, None, length=periods)
+
+
+_rollout_jit = partial(jax.jit, static_argnames=("periods",))(_rollout_impl)
+# the donated variant consumes the input EngineState's buffers in place —
+# at 100k devices the (D, R, R)-adjacent state leaves are the allocation
+# high-water mark, and a rollout that donates them runs at half the peak
+# memory of one that keeps the input alive
+_rollout_donate = partial(jax.jit, static_argnames=("periods",),
+                          donate_argnums=(0,))(_rollout_impl)
+
+
+def _require_f64(tag: str, tree) -> None:
+    """Reject float32 leaves loudly instead of computing with them.
+
+    The engine is float64 end-to-end (the LP parity contract): every entry
+    point wraps its jit in `enable_x64`, but that scope cannot UPCAST
+    arrays that were already materialized as float32 — e.g. a state
+    `device_put` outside any x64 scope while jax's global x64 mode is off.
+    Silently running the rollout at single precision breaks the host
+    bit-parity guarantees, so fail with the leaf's path instead."""
+    for f in dataclasses.fields(tree):
+        leaf = getattr(tree, f.name)
+        dt = getattr(leaf, "dtype", None)
+        if (dt is not None and jnp.issubdtype(dt, jnp.floating)
+                and dt != jnp.float64):
+            raise TypeError(
+                f"{tag}.{f.name} is {dt} but the "
+                f"engine is float64-only; build arrays as float64 and do "
+                f"device transfers inside jax.experimental.enable_x64() "
+                f"(with jax's global x64 mode off, an unscoped "
+                f"device_put downcasts to float32)")
 
 
 def _check_horizon(state: EngineState, params: EngineParams,
@@ -608,20 +690,31 @@ def step(state: EngineState, params: EngineParams
          ) -> Tuple[EngineState, PeriodMetrics]:
     """One jitted period transition (float64, like the host LP path)."""
     from jax.experimental import enable_x64
+    _require_f64("state", state)
+    _require_f64("params", params)
     _check_horizon(state, params, 1)
     with enable_x64():
         return _step_jit(state, params)
 
 
-def rollout(state: EngineState, params: EngineParams, periods: int
+def rollout(state: EngineState, params: EngineParams, periods: int,
+            *, donate: bool = False
             ) -> Tuple[EngineState, PeriodMetrics]:
     """A whole fleet epoch as ONE `lax.scan` over the jitted step — zero
     per-period host round-trips.  Returns ``(final_state, metrics)`` with
-    every `PeriodMetrics` field stacked to a (periods,) array."""
+    every `PeriodMetrics` field stacked to a (periods,) array.
+
+    ``donate=True`` donates the input state's buffers to the scan (the
+    caller must not reuse ``state`` afterwards) — at the 100k-device
+    scale this halves peak memory, since the old and new fleet state
+    never need to coexist."""
     from jax.experimental import enable_x64
+    _require_f64("state", state)
+    _require_f64("params", params)
     _check_horizon(state, params, periods)
+    fn = _rollout_donate if donate else _rollout_jit
     with enable_x64():
-        return _rollout_jit(state, params, int(periods))
+        return fn(state, params, int(periods))
 
 
 # --------------------------------------------------------------------------
@@ -673,6 +766,8 @@ def shard(state: EngineState, params: EngineParams, mesh
     must divide the mesh."""
     from jax.experimental import enable_x64
     from jax.sharding import NamedSharding
+    _require_f64("state", state)
+    _require_f64("params", params)
     D = params.n_devices
     n_shards = int(np.prod(mesh.devices.shape))
     if D % n_shards:
@@ -685,12 +780,14 @@ def shard(state: EngineState, params: EngineParams, mesh
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fn(mesh, periods: Optional[int], params_aux: tuple):
+def _sharded_fn(mesh, periods: Optional[int], params_aux: tuple,
+                donate: bool = False):
     """Build (and cache) the shard_mapped step / rollout for a mesh.
 
     ``params_aux`` (the `EngineParams` static fields) is part of the cache
     key because the in_specs pytree must carry the same aux as the actual
-    params being passed."""
+    params being passed; ``donate`` keys the variant that consumes the
+    input state's buffers."""
     from jax.experimental.shard_map import shard_map
 
     spec_params = _param_specs(
@@ -708,7 +805,7 @@ def _sharded_fn(mesh, periods: Optional[int], params_aux: tuple):
         in_specs=(_state_specs(), spec_params),
         out_specs=(_state_specs(), _metric_specs()),
         check_rep=False)
-    return jax.jit(mapped)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
 
 
 def _aux_of(params: EngineParams) -> tuple:
@@ -721,18 +818,23 @@ def step_sharded(state: EngineState, params: EngineParams, mesh
     the mesh; admission gathers the (D,) demand vector and metrics are
     psum-reduced, so the output matches the unsharded `step`."""
     from jax.experimental import enable_x64
+    _require_f64("state", state)
+    _require_f64("params", params)
     _check_horizon(state, params, 1)
     with enable_x64():
         return _sharded_fn(mesh, None, _aux_of(params))(state, params)
 
 
 def rollout_sharded(state: EngineState, params: EngineParams,
-                    periods: int, mesh
+                    periods: int, mesh, *, donate: bool = False
                     ) -> Tuple[EngineState, PeriodMetrics]:
     """`rollout` under `shard_map`: one scan, fleet axis sharded
-    throughout — the ROADMAP's 10k+-device shape."""
+    throughout — the ROADMAP's 10k+-device shape.  ``donate=True``
+    consumes the input state's shards (see `rollout`)."""
     from jax.experimental import enable_x64
+    _require_f64("state", state)
+    _require_f64("params", params)
     _check_horizon(state, params, periods)
     with enable_x64():
-        return _sharded_fn(mesh, int(periods), _aux_of(params))(
-            state, params)
+        return _sharded_fn(mesh, int(periods), _aux_of(params),
+                           donate)(state, params)

@@ -173,14 +173,15 @@ class LPBoundSolver:
     def solve_fleet(self, fleet: FleetProblem, *,
                     maxiter: Optional[int] = None,
                     warm_start: Optional[np.ndarray] = None,
-                    impl: str = "jnp", on_error: str = "raise") -> Solution:
+                    impl: str = "jnp", method: str = "tableau",
+                    on_error: str = "raise") -> Solution:
         B = len(fleet)
         rows = _pow2_rows(B)
         sub = fleet.take(rows).to_batch()
         c, A_ub, b_ub, A_eq, b_eq = build_lp_arrays_batch(sub)
         wb = None if warm_start is None else np.asarray(warm_start)[rows]
         res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, maxiter=maxiter,
-                             warm_basis=wb, impl=impl)
+                             warm_basis=wb, impl=impl, method=method)
         xbar = res.x.reshape(len(sub), fleet.n, fleet.m + 1)[:B]
         st = np.asarray(res.status)[:B]
         bad = (st != OPTIMAL) & (st != INFEASIBLE)

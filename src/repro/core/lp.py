@@ -38,6 +38,25 @@ update across the fleet dimension: ``impl="jnp"`` (default) uses the shared
 `kernels/simplex_pivot/ref.py` update, ``impl="pallas"`` routes through the
 `kernels/simplex_pivot` TPU kernel.
 
+Reduced-tableau revised simplex (``method="revised"`` on
+`simplex_batch_core` / `solve_lp_batch`): for the few-constraint /
+many-column fleet LP (R = n+2 rows vs C0 = n(m+1)+2 columns) the dense
+(R+1, C0+1) tableau is mostly dead weight — each lane only ever needs the
+(R, R) basis inverse.  The revised path (`_revised_core`) carries exactly
+that factor plus the basic solution, prices entering columns on demand
+from the ORIGINAL column data (one BTRAN + a (R, C0) product per
+iteration), and maintains the factor across pivots with product-form (eta)
+rank-1 updates — `_batched_inverse` runs once per warm start, never per
+pivot, and the C0-wide tableau is never materialized.  Selection rules,
+warm/cold/rejection semantics, statuses and pivot counts match the tableau
+path (the parity tests pin status/basis/niter exactly and x/fun to solver
+tolerance); summation orders differ, so results are not bit-identical.
+
+Iteration budget: ``maxiter`` caps the TWO-PHASE TOTAL — phase 2 resumes
+phase 1's counter — so an explicit user cap is respected exactly (shape-
+derived defaults are pow2-bucketed for trace reuse; user values never
+are).
+
 Statuses: 0 optimal, 1 iteration limit, 2 infeasible, 3 unbounded.  Phase-1
 non-convergence propagates (a maxiter-capped phase 1 can neither certify
 feasibility nor hand phase 2 a valid basis, so the result is reported as
@@ -145,13 +164,18 @@ def _canonicalize(c, A_ub, b_ub, A_eq, b_eq):
 # JAX backend
 # --------------------------------------------------------------------------
 def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
-                   tol: float = 1e-7, bland_after: int = BLAND_AFTER):
+                   tol: float = 1e-7, bland_after: int = BLAND_AFTER,
+                   it0=None):
     """Run pivots until optimal / maxiter / unbounded.
 
     tableau: (R+1, C+1); last row = objective (reduced costs | -obj value),
     last col = rhs.  basis: (R,) int32.  art_start: first artificial column
     (artificials may never enter; in phase 2 their rows get ratio priority
     so any basic artificial is driven out before it could turn positive).
+    ``it0`` (scalar int32) seeds the iteration counter: phase 2 resumes
+    phase 1's count so ``maxiter`` caps the two-phase TOTAL — an explicit
+    user cap is respected exactly, never doubled.  The returned count is
+    cumulative.
     """
     R = tableau.shape[0] - 1
     C = tableau.shape[1] - 1
@@ -206,7 +230,8 @@ def _simplex_phase(tableau, basis, art_start, *, maxiter: int,
                                      jnp.zeros_like(degen)))
         return tab2, basis2, it + 1, status2, degen2
 
-    init = (tableau, basis, jnp.array(0, jnp.int32),
+    init = (tableau, basis,
+            jnp.array(0, jnp.int32) if it0 is None else it0,
             jnp.array(ITERATION_LIMIT, jnp.int32), jnp.array(0, jnp.int32))
     tab, basis, it, status, _ = jax.lax.while_loop(cond, body, init)
     rc = tab[-1, :C]
@@ -246,9 +271,10 @@ def _solve_core(A_j, b_j, c_j, nv, maxiter, tol, bland_after=BLAND_AFTER):
     cb = obj[basis]                       # cost of basic vars
     obj = obj - cb @ tab[:R, :]
     tab = tab.at[-1, :].set(obj)
+    # phase 2 resumes phase 1's iteration count: one shared maxiter budget
     tab, basis, it2, status2 = _simplex_phase(
         tab, basis, jnp.array(C0, jnp.int32), maxiter=maxiter, tol=tol,
-        bland_after=bland_after)
+        bland_after=bland_after, it0=it1)
 
     x = jnp.zeros((C,), dtype).at[basis].set(tab[:R, -1])
     fun = -tab[-1, -1]
@@ -257,7 +283,7 @@ def _solve_core(A_j, b_j, c_j, nv, maxiter, tol, bland_after=BLAND_AFTER):
     # phase-2 verdict built on top of it.
     status = jnp.where(status1 != OPTIMAL, status1,
                        jnp.where(infeasible, INFEASIBLE, status2))
-    return x[:nv], fun, status, it1 + it2, basis
+    return x[:nv], fun, status, it2, basis
 
 
 def _solve_jax(A, b, c_full, nv, n_slack, maxiter, tol, bland_after):
@@ -300,7 +326,7 @@ def _pivot_update_batch(tabs, r, j, mask, impl: str):
 
 
 def _phase_batched(tabs, bases, art_start: int, *, maxiter: int, tol: float,
-                   bland_after: int, impl: str):
+                   bland_after: int, impl: str, it0=None):
     """Masked batched simplex phase over stacked tableaus (B, R+1, C+1).
 
     Per-lane semantics match `_simplex_phase` (Dantzig entering with the
@@ -308,7 +334,8 @@ def _phase_batched(tabs, bases, art_start: int, *, maxiter: int, tol: float,
     drive-out) but every iteration pivots ALL still-active lanes at once —
     the rank-1 update runs across the fleet dimension in one call
     (`_pivot_update_batch`), which is what the `simplex_pivot` Pallas
-    kernel accelerates."""
+    kernel accelerates.  ``it0`` (B,) int32 seeds the per-lane iteration
+    counters (shared two-phase maxiter budget; see `_simplex_phase`)."""
     B, R1, C1 = tabs.shape
     R, C = R1 - 1, C1 - 1
     cols = jnp.arange(C)
@@ -358,7 +385,8 @@ def _phase_batched(tabs, bases, art_start: int, *, maxiter: int, tol: float,
                                     jnp.zeros_like(degen)), degen)
         return tabs, bases, it + active.astype(it.dtype), status, degen
 
-    init = (tabs, bases, jnp.zeros(B, jnp.int32),
+    init = (tabs, bases,
+            jnp.zeros(B, jnp.int32) if it0 is None else it0,
             jnp.full(B, ITERATION_LIMIT, jnp.int32), jnp.zeros(B, jnp.int32))
     tabs, bases, it, status, _ = jax.lax.while_loop(cond, body, init)
     rc = tabs[:, -1, :C]
@@ -408,22 +436,24 @@ def _batched_inverse(Bmat):
     return aug[:, :, R:]
 
 
-def _warm_init(A, b, basis0):
-    """Factor each lane's previous basis and repair primal infeasibility.
+def _warm_init_reduced(A, b, basis0):
+    """Factor each lane's previous basis and repair primal infeasibility,
+    in REDUCED (basis-inverse) form.
 
-    One batched factor (`_batched_inverse`) prices the full tableau out of
-    the old basis; rows the basis leaves infeasible on the new data
-    (negative transformed rhs) are sign-flipped and handed a VIRTUAL
-    tableau-space artificial (basis label C0 + row, column never
+    One batched factor (`_batched_inverse`) per lane; rows the basis
+    leaves infeasible on the new data (negative transformed rhs) are
+    sign-flipped — the flip is applied to the Binv ROW, which distributes
+    exactly over the later ``Binv @ A`` / pricing products — and handed a
+    VIRTUAL tableau-space artificial (basis label C0 + row, column never
     materialized), so phase 1 shrinks to ~#violated-rows repair pivots —
     zero when the basis is still feasible.
 
-    Returns ``(tabA (B, R, C0), rhs (B, R), bas (B, R) int32, ok (B,))``;
-    lanes with ``ok`` False (out-of-range basis indices or a
-    singular/ill-conditioned factor) hold garbage and must run cold.
-    Shared by `_warm_batch_jit` (host dispatch) and `simplex_batch_core`
-    (the traced engine path) so their accept thresholds and repair
-    semantics cannot drift apart."""
+    Returns ``(Binv (B, R, R), rhs (B, R), bas (B, R) int32, ok (B,))``;
+    lanes with ``ok`` False (out-of-range / -1 basis rows — a device that
+    switched solver or sat out an outage — or a singular/ill-conditioned
+    factor) hold garbage and must run cold.  Shared by `_warm_init` (the
+    dense-tableau paths) and `_revised_core` so the accept thresholds and
+    repair semantics cannot drift apart."""
     B, R, C0 = A.shape
     dtype = A.dtype
     bas = jnp.clip(basis0, 0, C0 - 1).astype(jnp.int32)
@@ -434,7 +464,6 @@ def _warm_init(A, b, basis0):
     resid = jnp.max(jnp.abs(Bmat @ Binv - jnp.eye(R, dtype=dtype)),
                     axis=(1, 2))
     rhs = (Binv @ b[..., None])[..., 0]                        # (B, R)
-    tabA = Binv @ A                                            # (B, R, C0)
 
     # f32 (global x64 off, single-instance path) carries ~1e-7 relative
     # noise through the factor-solve: loosen the accept thresholds so a
@@ -447,11 +476,25 @@ def _warm_init(A, b, basis0):
     # artificial goes basic (label C0 + row)
     flip = rhs < -feas_tol                                     # (B, R)
     sgn = jnp.where(flip, -1.0, 1.0)
-    tabA = tabA * sgn[:, :, None]
+    Binv = Binv * sgn[:, :, None]
     rhs = jnp.maximum(rhs * sgn, 0.0)      # clamp -feas_tol..0 dust to 0
     rows = jnp.arange(R, dtype=jnp.int32)
     bas = jnp.where(flip, C0 + rows[None, :], bas)
-    return tabA, rhs, bas.astype(jnp.int32), ok
+    return Binv, rhs, bas.astype(jnp.int32), ok
+
+
+def _warm_init(A, b, basis0):
+    """`_warm_init_reduced` expanded to dense-tableau form: the repaired
+    factor prices the full tableau (``tabA = Binv @ A``) for the
+    `_phase_batched` paths.  Because the repair sign-flips distribute
+    exactly over the row sums (IEEE negation is exact), this is
+    bit-identical to flipping the priced tableau's rows directly.
+
+    Returns ``(tabA (B, R, C0), rhs (B, R), bas (B, R) int32, ok (B,))``;
+    shared by `_warm_batch_jit` (host dispatch) and `simplex_batch_core`
+    (the traced engine path)."""
+    Binv, rhs, bas, ok = _warm_init_reduced(A, b, basis0)
+    return Binv @ A, rhs, bas, ok
 
 
 def _two_phase_virtual(tabA, rhs, bas, b, c_full, *, nv, maxiter, tol,
@@ -507,9 +550,10 @@ def _two_phase_virtual(tabA, rhs, bas, b, c_full, *, nv, maxiter, tol,
         # a zeroed tableau would otherwise spend one "unbounded" pivot
         obj = jnp.where(lane_mask[:, None], obj, 0.0)
     tabs = tabs.at[:, -1, :].set(obj)
+    # phase 2 resumes phase 1's per-lane counts: one shared maxiter budget
     tabs, bases, it2, status2 = _phase_batched(
         tabs, bases, C0, maxiter=maxiter, tol=tol, bland_after=bland_after,
-        impl=impl)
+        impl=impl, it0=it1)
 
     vals = jnp.where(bases < C0, tabs[:, :R, -1], 0.0)
     x = jnp.zeros((B, C0), dtype)
@@ -517,7 +561,161 @@ def _two_phase_virtual(tabA, rhs, bas, b, c_full, *, nv, maxiter, tol,
     fun = -tabs[:, -1, -1]
     status = jnp.where(status1 != OPTIMAL, status1,
                        jnp.where(infeasible, INFEASIBLE, status2))
-    return x[:, :nv], fun, status, it1 + it2, bases
+    return x[:, :nv], fun, status, it2, bases
+
+
+# --------------------------------------------------------------------------
+# Reduced-tableau revised simplex (batched)
+# --------------------------------------------------------------------------
+def _reduced_pivot_batch(A, c_phase, Binv, xB, bas, use_bland, may_pivot,
+                         lane_ok, art_cost, tol, impl: str):
+    """One fused revised-simplex iteration across the whole lane stack.
+
+    ``impl="jnp"`` uses the shared reference op; ``impl="pallas"`` routes
+    through the fused `kernels/simplex_pivot.reduced_pivot` TPU kernel
+    (interpret mode off-TPU, like the dense pivot)."""
+    if impl == "pallas":
+        from ..kernels.simplex_pivot import ops as _pivot_ops
+        return _pivot_ops.reduced_pivot(A, c_phase, Binv, xB, bas,
+                                        use_bland, may_pivot, lane_ok,
+                                        art_cost=art_cost, tol=tol)
+    from ..kernels.simplex_pivot.ref import reduced_pivot_ref
+    return reduced_pivot_ref(A, c_phase, Binv, xB, bas, use_bland,
+                             may_pivot, lane_ok, art_cost=art_cost,
+                             tol=tol)
+
+
+def _revised_phase(A, c_phase, Binv, xB, bas, *, art_cost: float,
+                   maxiter: int, tol: float, bland_after: int, impl: str,
+                   lane_ok, it0=None):
+    """Masked batched simplex phase in REDUCED form: only the (R, R)
+    basis-inverse factor and the basic solution are carried per lane;
+    every iteration prices all C0 columns on demand out of the factor and
+    applies the product-form (eta) rank-1 update — the C0-wide tableau of
+    `_phase_batched` is never materialized.
+
+    Per-lane selection rules (Dantzig entering with the Bland fallback,
+    smallest-basis-index leaving tie-break, artificial drive-out) and the
+    status/iteration bookkeeping match `_phase_batched`; ``art_cost`` is
+    the phase cost of virtual artificial labels (1 in phase 1, 0 in
+    phase 2) and ``it0`` seeds the per-lane counters (shared two-phase
+    maxiter budget)."""
+    from ..kernels.simplex_pivot.ref import price_reduced_ref
+    B = A.shape[0]
+    lane_ok = (jnp.ones(B, dtype=bool) if lane_ok is None
+               else jnp.asarray(lane_ok, dtype=bool))
+
+    def cond(state):
+        Binv, xB, bas, it, status, degen = state
+        return jnp.any((status == ITERATION_LIMIT) & (it < maxiter))
+
+    def body(state):
+        Binv, xB, bas, it, status, degen = state
+        running = status == ITERATION_LIMIT
+        Binv2, xB2, bas2, has_enter, unbounded, degen_piv = \
+            _reduced_pivot_batch(A, c_phase, Binv, xB, bas,
+                                 degen >= bland_after,
+                                 running & (it < maxiter), lane_ok,
+                                 art_cost, tol, impl)
+        status = jnp.where(running & ~has_enter, OPTIMAL, status)
+        active = running & has_enter & (it < maxiter)
+        status = jnp.where(active & unbounded, UNBOUNDED, status)
+        do_pivot = active & ~unbounded
+        degen = jnp.where(do_pivot,
+                          jnp.where(degen_piv, degen + 1,
+                                    jnp.zeros_like(degen)), degen)
+        return (Binv2, xB2, bas2, it + active.astype(it.dtype), status,
+                degen)
+
+    init = (Binv, xB, bas,
+            jnp.zeros(B, jnp.int32) if it0 is None else it0,
+            jnp.full(B, ITERATION_LIMIT, jnp.int32), jnp.zeros(B, jnp.int32))
+    Binv, xB, bas, it, status, _ = jax.lax.while_loop(cond, body, init)
+    rc = price_reduced_ref(A, c_phase, Binv, bas, art_cost)
+    done = ~((rc < -tol) & lane_ok[:, None]).any(axis=1)
+    status = jnp.where((status == ITERATION_LIMIT) & done, OPTIMAL, status)
+    return Binv, xB, bas, it, status
+
+
+def _revised_two_phase(A, b, c_full, Binv, xB, bas, *, nv, maxiter, tol,
+                       bland_after, impl, lane_mask=None):
+    """Both simplex phases in reduced form (`_two_phase_virtual`'s twin).
+
+    Phase 1 minimizes the sum of basic virtual artificials (real columns
+    cost 0, artificial labels cost 1), phase 2 prices the real objective;
+    the infeasibility certificate reads the basic-artificial levels off
+    ``xB`` directly (the reduced form of the tableau's phase-1 objective
+    cell).  ``lane_mask`` False lanes never produce an entering column —
+    0 pivots, OPTIMAL status, x = 0 — matching the zeroed-tableau
+    contract.  Returns ``(x (B, nv), fun, status, niter, bases)``."""
+    B, R, C0 = A.shape
+    dtype = A.dtype
+    Binv, xB, bas, it1, status1 = _revised_phase(
+        A, jnp.zeros_like(c_full), Binv, xB, bas, art_cost=1.0,
+        maxiter=maxiter, tol=tol, bland_after=bland_after, impl=impl,
+        lane_ok=lane_mask)
+    art_sum = jnp.sum(jnp.where(bas >= C0, xB, 0.0), axis=1)
+    infeasible = art_sum > max(tol, 1e-5) * (1.0 + jnp.abs(b).sum(axis=1))
+    if lane_mask is not None:
+        infeasible = infeasible & lane_mask
+
+    # phase 2 resumes phase 1's per-lane counts: one shared maxiter budget
+    Binv, xB, bas, it2, status2 = _revised_phase(
+        A, c_full, Binv, xB, bas, art_cost=0.0, maxiter=maxiter, tol=tol,
+        bland_after=bland_after, impl=impl, lane_ok=lane_mask, it0=it1)
+
+    vals = jnp.where(bas < C0, xB, 0.0)
+    x = jnp.zeros((B, C0), dtype)
+    x = x.at[jnp.arange(B)[:, None], jnp.clip(bas, 0, C0 - 1)].add(vals)
+    cb = jnp.where(bas < C0,
+                   jnp.take_along_axis(c_full, jnp.clip(bas, 0, C0 - 1),
+                                       axis=1), 0.0)
+    fun = jnp.sum(cb * vals, axis=1)
+    if lane_mask is not None:
+        fun = jnp.where(lane_mask, fun, 0.0)
+    status = jnp.where(status1 != OPTIMAL, status1,
+                       jnp.where(infeasible, INFEASIBLE, status2))
+    return x[:, :nv], fun, status, it2, bas
+
+
+def _revised_core(A, b, c_full, basis0, *, nv, maxiter, tol,
+                  bland_after=BLAND_AFTER, impl="jnp", lane_mask=None):
+    """Traceable warm-OR-cold batched revised simplex — the
+    ``method="revised"`` body of `simplex_batch_core`, with the same
+    start/rejection semantics: a cold lane's factor is the identity
+    (xB = b, every row basic on its virtual artificial) and a warm lane
+    reuses its repaired `_warm_init_reduced` factor; rejected lanes start
+    cold in the same call.  Returns the `simplex_batch_core` tuple."""
+    B, R, C0 = A.shape
+    dtype = A.dtype
+    rows = jnp.arange(R, dtype=jnp.int32)
+    bas_c = jnp.broadcast_to(C0 + rows[None, :], (B, R)).astype(jnp.int32)
+    eye = jnp.broadcast_to(jnp.eye(R, dtype=dtype), (B, R, R))
+
+    if basis0 is None:
+        warm_ok = jnp.zeros(B, dtype=bool)
+        Binv, xB, bas = eye, b, bas_c
+    else:
+        Binv_w, rhs_w, bas_w, warm_ok = _warm_init_reduced(A, b, basis0)
+        Binv = jnp.where(warm_ok[:, None, None], Binv_w, eye)
+        xB = jnp.where(warm_ok[:, None], rhs_w, b)
+        bas = jnp.where(warm_ok[:, None], bas_w, bas_c)
+
+    x, fun, status, niter, bases = _revised_two_phase(
+        A, b, c_full, Binv, xB, bas, nv=nv, maxiter=maxiter, tol=tol,
+        bland_after=bland_after, impl=impl, lane_mask=lane_mask)
+    return x, fun, status, niter, bases, warm_ok
+
+
+@partial(jax.jit,
+         static_argnames=("nv", "maxiter", "tol", "bland_after", "impl"))
+def _revised_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
+                       bland_after=BLAND_AFTER, impl="jnp"):
+    """Jitted `_revised_core` for the `solve_lp_batch(method="revised")`
+    host dispatch (warm and cold lanes resolve in ONE call — no separate
+    rejected-subset re-solve)."""
+    return _revised_core(A_j, b_j, c_j, basis0, nv=nv, maxiter=maxiter,
+                         tol=tol, bland_after=bland_after, impl=impl)
 
 
 @partial(jax.jit,
@@ -543,7 +741,8 @@ def _warm_batch_jit(A_j, b_j, c_j, basis0, *, nv, maxiter, tol,
 
 def simplex_batch_core(A, b, c_full, basis0, *, nv: int, maxiter: int,
                        tol: float = 1e-7, bland_after: int = BLAND_AFTER,
-                       impl: str = "jnp", lane_mask=None):
+                       impl: str = "jnp", lane_mask=None,
+                       method: str = "tableau"):
     """Traceable warm-OR-cold batched two-phase simplex (the scan path).
 
     Unlike `solve_lp_batch` — which accepts warm lanes via `_warm_batch_jit`
@@ -573,9 +772,25 @@ def simplex_batch_core(A, b, c_full, basis0, *, nv: int, maxiter: int,
     pivots, garbage x — for masked sub-batch solves without a host-side
     subset.
 
+    ``method`` selects the pivot representation: ``"tableau"`` (default)
+    is the dense (R+1, C0+1) path above, bit-compatible with the existing
+    dispatch; ``"revised"`` carries only the (R, R) basis inverse per lane
+    (`_revised_core`) — same warm/cold/rejection semantics and selection
+    rules, entering columns priced on demand, eta-factor updates instead
+    of wide-tableau pivots.  The paths agree on status/basis/pivot counts
+    and to solver tolerance on x/fun (pinned by the parity tests), but not
+    bit-for-bit — their floating-point summation orders differ.
+
     Expects canonicalised inputs (``b >= 0``; see `_canonicalize_batch`).
     Returns ``(x (B, nv), fun, status, niter, basis, warm_ok)``.
     """
+    if method == "revised":
+        return _revised_core(A, b, c_full, basis0, nv=nv, maxiter=maxiter,
+                             tol=tol, bland_after=bland_after, impl=impl,
+                             lane_mask=lane_mask)
+    if method != "tableau":
+        raise ValueError(f"unknown simplex method {method!r}; expected "
+                         f"'tableau' or 'revised'")
     B, R, C0 = A.shape
     rows = jnp.arange(R, dtype=jnp.int32)
     # cold init: every row basic on its virtual artificial (`_solve_core`)
@@ -643,30 +858,36 @@ def _warm_np(A, b, c_full, nv, basis0, maxiter, tol, bland_after):
     obj = obj - obj[basis] @ tab[:R, :]
     tab[-1, :] = obj
     tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol,
-                                     bland_after)
+                                     bland_after, it0=it1)
     x = np.zeros(C)
     x[basis] = tab[:R, -1]
     if st1 != OPTIMAL:
         status = st1
     else:
         status = INFEASIBLE if infeasible else st2
-    return x[:nv], -tab[-1, -1], status, it1 + it2, basis
+    return x[:nv], -tab[-1, -1], status, it2, basis
 
 
 # --------------------------------------------------------------------------
 # NumPy backend (float64 reference)
 # --------------------------------------------------------------------------
 def _phase_np(tab, basis, art_start, maxiter, tol,
-              bland_after=BLAND_AFTER):
+              bland_after=BLAND_AFTER, it0=0):
+    """``it0`` seeds the iteration counter (cumulative across phases, so
+    an explicit ``maxiter`` caps the two-phase total; see
+    `_simplex_phase`).  Optimality is checked before the cap — matching
+    the jax path's post-loop upgrade."""
     R = tab.shape[0] - 1
     C = tab.shape[1] - 1
-    it = 0
+    it = it0
     degen = 0
-    while it < maxiter:
+    while True:
         rc = tab[-1, :C]
         enter = np.where((rc < -tol) & (np.arange(C) < art_start))[0]
         if enter.size == 0:
             return tab, basis, it, OPTIMAL
+        if it >= maxiter:
+            return tab, basis, it, ITERATION_LIMIT
         if degen >= bland_after:
             j = enter[0]                  # Bland: smallest eligible index
         else:
@@ -692,7 +913,6 @@ def _phase_np(tab, basis, art_start, maxiter, tol,
         basis[r] = j
         degen = degen + 1 if rmin <= tol else 0
         it += 1
-    return tab, basis, it, ITERATION_LIMIT
 
 
 def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol,
@@ -716,7 +936,7 @@ def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol,
     obj = obj - obj[basis] @ tab[:R, :]
     tab[-1, :] = obj
     tab, basis, it2, st2 = _phase_np(tab, basis, C0, maxiter, tol,
-                                     bland_after)
+                                     bland_after, it0=it1)
 
     x = np.zeros(C)
     x[basis] = tab[:R, -1]
@@ -727,7 +947,7 @@ def _solve_np(A, b, c_full, nv, n_slack, maxiter, tol,
         status = st1
     else:
         status = INFEASIBLE if infeasible else st2
-    return x[:nv], fun, status, it1 + it2, basis
+    return x[:nv], fun, status, it2, basis
 
 
 # --------------------------------------------------------------------------
@@ -829,8 +1049,8 @@ def _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq):
 def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
                    maxiter: Optional[int] = None, tol: float = 1e-7,
                    warm_basis: Optional[np.ndarray] = None,
-                   impl: str = "jnp", bland_after: int = BLAND_AFTER
-                   ) -> BatchLPResult:
+                   impl: str = "jnp", bland_after: int = BLAND_AFTER,
+                   method: str = "tableau") -> BatchLPResult:
     """Solve B structurally-identical LPs in one jitted `vmap` of the simplex.
 
     Inputs mirror `solve_lp` with a leading batch axis on every array.  Runs
@@ -842,13 +1062,45 @@ def solve_lp_batch(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, *,
     revised-simplex warm path; rejected lanes (stale / singular / primal
     infeasible bases — pass -1 rows to force a cold solve) are re-solved by
     the two-phase path in one extra jitted call over the rejected subset.
-    ``impl="pallas"`` runs the warm path's batched pivot through the
-    `kernels/simplex_pivot` TPU kernel.
+    ``impl="pallas"`` runs the batched pivot through the
+    `kernels/simplex_pivot` TPU kernels.
+
+    ``method="revised"`` dispatches to the reduced-tableau revised simplex
+    (`simplex_batch_core`'s revised path): warm and cold lanes resolve in
+    ONE jitted call, only (R, R) factors are carried, and the bucketed
+    default maxiter / float64 scope / result contract are identical.  The
+    default ``"tableau"`` keeps the existing dispatch bit-for-bit.
     """
+    if method not in ("tableau", "revised"):
+        raise ValueError(f"unknown simplex method {method!r}; expected "
+                         f"'tableau' or 'revised'")
     A, b, c_full, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
     if maxiter is None:
         maxiter = _bucket_maxiter(50 * (A.shape[1] + 2))
     from jax.experimental import enable_x64
+    if method == "revised":
+        basis0 = None
+        if warm_basis is not None:
+            wb = np.asarray(warm_basis, np.int64)
+            if wb.shape != A.shape[:2]:
+                raise ValueError(
+                    f"warm_basis must be (B, R) = {A.shape[:2]}; "
+                    f"got {wb.shape}")
+            basis0 = jnp.asarray(wb)
+        with enable_x64():
+            x, fun, status, niter, basis, ok = jax.tree_util.tree_map(
+                np.asarray,
+                _revised_batch_jit(jnp.asarray(A, jnp.float64),
+                                   jnp.asarray(b, jnp.float64),
+                                   jnp.asarray(c_full, jnp.float64),
+                                   basis0, nv=nv, maxiter=maxiter, tol=tol,
+                                   bland_after=bland_after, impl=impl))
+        return BatchLPResult(x=np.asarray(x, np.float64),
+                             fun=np.asarray(fun, np.float64),
+                             status=np.asarray(status, np.int64),
+                             niter=np.asarray(niter, np.int64),
+                             basis=np.asarray(basis, np.int64),
+                             warm=np.asarray(ok, bool))
     with enable_x64():
         if warm_basis is not None:
             wb = np.asarray(warm_basis, np.int64)

@@ -1,13 +1,22 @@
-"""jit'd wrapper exposing the kernel with `core.lp`'s batched pivot-update
-signature (so the warm-started simplex drops it in as ``impl="pallas"``,
+"""jit'd wrappers exposing the kernels with `core.lp`'s batched pivot
+signatures (so both simplex paths drop them in as ``impl="pallas"``,
 mirroring how `cckp_dp` is wired into AMDP)."""
 from __future__ import annotations
 
 import jax
 
+from .simplex_pivot import reduced_pivot as _reduced_pivot
 from .simplex_pivot import simplex_pivot
 
 
 def pivot_update(tabs, r, j, mask):
     interpret = jax.default_backend() != "tpu"
     return simplex_pivot(tabs, r, j, mask, interpret=interpret)
+
+
+def reduced_pivot(A, c_phase, Binv, xB, basis, use_bland, may_pivot,
+                  lane_ok, *, art_cost, tol):
+    interpret = jax.default_backend() != "tpu"
+    return _reduced_pivot(A, c_phase, Binv, xB, basis, use_bland,
+                          may_pivot, lane_ok, art_cost=float(art_cost),
+                          tol=float(tol), interpret=interpret)

@@ -1,9 +1,17 @@
-"""Pure-jnp reference for the batched simplex pivot (rank-1 tableau update).
+"""Pure-jnp references for the batched simplex pivot kernels.
 
-This is both the oracle the Pallas kernel is tested against and the default
-(``impl="jnp"``) implementation the warm-started fleet LP path uses — there
-is ONE definition of the update, shared by `core.lp._phase_batched` and the
-kernel tests.
+Two ops live here, each the oracle its Pallas kernel is tested against AND
+the default (``impl="jnp"``) implementation the fleet LP path uses — there
+is ONE definition of each update, shared by `core.lp` and the kernel tests:
+
+  * `pivot_update_ref` — the dense rank-1 tableau update used by
+    `core.lp._phase_batched` (the legacy full-tableau path).
+  * `reduced_pivot_ref` — one FUSED revised-simplex iteration (BTRAN
+    pricing + entering/leaving selection + product-form eta update of the
+    basis-inverse factors) used by `core.lp._revised_phase`.  Only the
+    (R, R) basis inverse and the basic solution are updated; entering
+    columns are priced on demand from the original (R, C0) column data, so
+    the C0-wide tableau is never materialized.
 """
 from __future__ import annotations
 
@@ -32,3 +40,82 @@ def pivot_update_ref(tabs: jnp.ndarray, r: jnp.ndarray, j: jnp.ndarray,
     is_r = jnp.arange(tabs.shape[1])[None, :] == r[:, None]
     new = jnp.where(is_r[:, :, None], prow[:, None, :], new)
     return jnp.where(mask[:, None, None], new, tabs)
+
+
+def price_reduced_ref(A, c_phase, Binv, basis, art_cost):
+    """Reduced costs out of the basis-inverse factor (one BTRAN + pricing).
+
+    A: (B, R, C0) original columns; c_phase: (B, C0) phase costs; Binv:
+    (B, R, R); basis: (B, R) labels — entries >= C0 are VIRTUAL artificials
+    (no column exists; they price at ``art_cost``: 1 in phase 1, 0 in
+    phase 2).  Returns rc (B, C0)."""
+    C0 = A.shape[2]
+    cB = jnp.where(
+        basis >= C0, jnp.asarray(art_cost, A.dtype),
+        jnp.take_along_axis(c_phase, jnp.clip(basis, 0, C0 - 1), axis=1))
+    y = jnp.einsum("br,brk->bk", cB, Binv)          # simplex multipliers
+    return c_phase - jnp.einsum("bk,bkc->bc", y, A)
+
+
+def reduced_pivot_ref(A, c_phase, Binv, xB, basis, use_bland, may_pivot,
+                      lane_ok, *, art_cost: float, tol: float):
+    """One fused revised-simplex iteration across the whole lane stack.
+
+    Prices every column out of the current factor (`price_reduced_ref`),
+    picks the entering column (Dantzig, or Bland's smallest index where
+    ``use_bland``), runs the ratio test on the FTRAN-transformed entering
+    column (with `core.lp`'s artificial drive-out rule and
+    smallest-basis-index tie-break), and applies the product-form (eta)
+    rank-1 update to ``[Binv | xB]`` — the revised-simplex replacement for
+    the dense (R+1, C0+1) tableau pivot of `pivot_update_ref`.
+
+    A: (B, R, C0); c_phase: (B, C0); Binv: (B, R, R); xB: (B, R) basic
+    solution; basis: (B, R) labels (>= C0 virtual artificial);
+    use_bland / may_pivot / lane_ok: (B,) bool — ``lane_ok`` False lanes
+    never produce an entering column (the masked-lane contract), and the
+    update is applied only where ``may_pivot & has_enter & ~unbounded``.
+
+    Returns ``(Binv', xB', basis', has_enter, unbounded, degenerate)``
+    with the three flags (B,) bool (``degenerate``: min ratio <= tol,
+    meaningful only on lanes that pivoted).
+    """
+    B, R, C0 = A.shape
+    dtype = A.dtype
+    intmax = jnp.iinfo(jnp.int32).max
+
+    rc = price_reduced_ref(A, c_phase, Binv, basis, art_cost)
+    enter = (rc < -tol) & lane_ok[:, None]
+    has_enter = enter.any(axis=1)
+    score = jnp.where(enter, rc, jnp.inf)
+    j_dantzig = jnp.argmin(score, axis=1)
+    j_bland = jnp.argmax(enter, axis=1)             # first eligible index
+    j = jnp.where(use_bland, j_bland, j_dantzig).astype(jnp.int32)
+    j = jnp.where(has_enter, j, 0)                  # safe gather index
+
+    # FTRAN: entering column in basis coordinates
+    Aj = jnp.take_along_axis(A, j[:, None, None], axis=2)[..., 0]  # (B, R)
+    d = jnp.einsum("brk,bk->br", Binv, Aj)
+    pos = d > tol
+    ratio = jnp.where(pos, xB / jnp.where(pos, d, 1.0), jnp.inf)
+    art_basic = (basis >= C0) & (jnp.abs(d) > tol) & (xB <= tol)
+    ratio = jnp.where(art_basic, 0.0, ratio)
+    unbounded = ~jnp.any(ratio < jnp.inf, axis=1)
+    rmin = jnp.min(ratio, axis=1)
+    tie = ratio <= (rmin + jnp.maximum(jnp.abs(rmin) * 1e-9,
+                                       1e-12))[:, None]
+    r = jnp.argmin(jnp.where(tie, basis, intmax), axis=1).astype(jnp.int32)
+
+    do = may_pivot & has_enter & ~unbounded
+    # product-form update of the augmented factor [Binv | xB]
+    F = jnp.concatenate([Binv, xB[..., None]], axis=2)     # (B, R, R+1)
+    prow = jnp.take_along_axis(F, r[:, None, None], axis=1)[:, 0, :]
+    piv = jnp.take_along_axis(d, r[:, None], axis=1)[:, 0]
+    piv = jnp.where(do, piv, jnp.ones((), dtype))          # no 0-divide
+    prow = prow / piv[:, None]
+    Fnew = F - d[:, :, None] * prow[:, None, :]
+    is_r = jnp.arange(R)[None, :] == r[:, None]
+    Fnew = jnp.where(is_r[:, :, None], prow[:, None, :], Fnew)
+    F = jnp.where(do[:, None, None], Fnew, F)
+    basis = jnp.where(do[:, None] & is_r, j[:, None], basis)
+    return (F[:, :, :R], F[:, :, R], basis.astype(jnp.int32),
+            has_enter, unbounded, rmin <= tol)

@@ -1,20 +1,27 @@
-"""Batched simplex pivot kernel — TPU Pallas.
+"""Batched simplex pivot kernels — TPU Pallas.
 
-One simplex pivot is a rank-1 update of a dense tableau:
+Two kernels, both gridded over the lane (device) axis with per-lane flags
+as scalar-prefetch operands and every dynamic row/column selection done
+with broadcasted-iota one-hot masks (no gathers, pure VPU work):
 
-    tab' = tab - tab[:, j] (x) (tab[r, :] / tab[r, j]),   row r := tab[r]/piv
+  * ``simplex_pivot`` — the dense rank-1 tableau update
 
-The warm-started fleet LP path (`core.lp._phase_batched`) performs this
-across B device tableaus per iteration.  This kernel runs the whole stack in
-one ``pallas_call`` — grid over lanes, each (R+1, C+1) tableau resident in
-VMEM — with the per-lane pivot coordinates (r, j) and the active mask as
-scalar-prefetch operands.  Dynamic row/column selection uses
-broadcasted-iota one-hot masks (no gathers, pure VPU work) and inactive
-lanes copy through unchanged, mirroring the jnp reference in ``ref.py``.
+        tab' = tab - tab[:, j] (x) (tab[r, :] / tab[r, j])
 
-Like `cckp_dp`, the kernel runs in interpret mode off-TPU; fleet tableaus
-are float64 on CPU (the LP parity contract), so on a real TPU the caller
-must run the float32 LP mode.
+    that `core.lp._phase_batched` performs across B device tableaus per
+    iteration; pivot coordinates (r, j) are chosen by the caller.
+
+  * ``reduced_pivot`` — one FUSED revised-simplex iteration for
+    `core.lp._revised_phase`: BTRAN pricing out of the (R, R) basis
+    inverse, entering-column selection (Dantzig / Bland), the ratio test
+    with the artificial drive-out rule, and the product-form (eta) rank-1
+    update of ``[Binv | xB]`` — all in one kernel launch per iteration,
+    with the original (R, C0) column data streamed per lane instead of a
+    materialized C0-wide tableau.
+
+Both mirror the jnp references in ``ref.py`` and, like `cckp_dp`, run in
+interpret mode off-TPU; fleet factors are float64 on CPU (the LP parity
+contract), so on a real TPU the caller must run the float32 LP mode.
 """
 from __future__ import annotations
 
@@ -68,3 +75,111 @@ def simplex_pivot(tabs: jnp.ndarray, r: jnp.ndarray, j: jnp.ndarray,
         interpret=interpret,
     )(r.astype(jnp.int32), j.astype(jnp.int32), mask.astype(jnp.int32),
       tabs)
+
+
+def _reduced_kernel(bland_ref, may_ref, ok_ref, A_ref, c_ref, binv_ref,
+                    xb_ref, bas_ref, binv_out, xb_out, bas_out, flag_out,
+                    *, art_cost: float, tol: float):
+    b = pl.program_id(0)
+    A = A_ref[0]                           # (R, C0) original columns
+    c = c_ref[0]                           # (C0,) phase costs
+    Binv = binv_ref[0]                     # (R, R) basis inverse
+    xB = xb_ref[0]                         # (R,) basic solution
+    bas = bas_ref[0]                       # (R,) labels (>= C0 virtual)
+    R, C0 = A.shape
+    dtype = A.dtype
+    use_bland = bland_ref[b] != 0
+    may = may_ref[b] != 0
+    ok = ok_ref[b] != 0
+    inf = jnp.asarray(jnp.inf, dtype)
+    intmax = jnp.iinfo(jnp.int32).max
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R, C0), 1)
+    cols1 = cols[0]                        # (C0,) = arange(C0)
+    rows1 = jax.lax.broadcasted_iota(jnp.int32, (R, R), 0)[:, 0]
+
+    # BTRAN + pricing: rc = c - (cB Binv) A
+    cB = jnp.sum(jnp.where(cols == bas[:, None], c[None, :], 0.0), axis=1)
+    cB = jnp.where(bas >= C0, jnp.asarray(art_cost, dtype), cB)
+    y = jnp.sum(cB[:, None] * Binv, axis=0)              # (R,)
+    rc = c - jnp.sum(y[:, None] * A, axis=0)             # (C0,)
+
+    enter = (rc < -tol) & ok
+    has_enter = jnp.any(enter)
+    score = jnp.where(enter, rc, inf)
+    smin = jnp.min(score)
+    j_dantzig = jnp.min(jnp.where(score == smin, cols1, C0))
+    j_bland = jnp.min(jnp.where(enter, cols1, C0))
+    j = jnp.where(use_bland, j_bland, j_dantzig)
+    j = jnp.where(has_enter, j, 0)
+
+    # FTRAN + ratio test (drive-out rule, smallest-basis-index tie-break)
+    Aj = jnp.sum(jnp.where(cols1[None, :] == j, A, 0.0), axis=1)   # (R,)
+    d = jnp.sum(Binv * Aj[None, :], axis=1)                        # (R,)
+    pos = d > tol
+    ratio = jnp.where(pos, xB / jnp.where(pos, d, 1.0), inf)
+    art_basic = (bas >= C0) & (jnp.abs(d) > tol) & (xB <= tol)
+    ratio = jnp.where(art_basic, 0.0, ratio)
+    unbounded = ~jnp.any(ratio < inf)
+    rmin = jnp.min(ratio)
+    tie = ratio <= rmin + jnp.maximum(jnp.abs(rmin) * 1e-9, 1e-12)
+    bmin = jnp.min(jnp.where(tie, bas, intmax))          # basis labels are
+    r = jnp.min(jnp.where(tie & (bas == bmin), rows1, R))  # unique per lane
+
+    do = may & has_enter & ~unbounded
+    is_r = rows1 == r
+    piv = jnp.sum(jnp.where(is_r, d, 0.0))
+    piv = jnp.where(do, piv, jnp.ones((), dtype))
+    brow = jnp.sum(jnp.where(is_r[:, None], Binv, 0.0), axis=0) / piv
+    xr = jnp.sum(jnp.where(is_r, xB, 0.0)) / piv
+    Binv2 = Binv - d[:, None] * brow[None, :]
+    Binv2 = jnp.where(is_r[:, None], brow[None, :], Binv2)
+    xB2 = jnp.where(is_r, xr, xB - d * xr)
+    binv_out[0] = jnp.where(do, Binv2, Binv)
+    xb_out[0] = jnp.where(do, xB2, xB)
+    bas_out[0] = jnp.where(do & is_r, j, bas)
+    flag_out[0] = jnp.stack([has_enter, unbounded,
+                             rmin <= tol]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("art_cost", "tol", "interpret"))
+def reduced_pivot(A: jnp.ndarray, c_phase: jnp.ndarray, Binv: jnp.ndarray,
+                  xB: jnp.ndarray, basis: jnp.ndarray,
+                  use_bland: jnp.ndarray, may_pivot: jnp.ndarray,
+                  lane_ok: jnp.ndarray, *, art_cost: float, tol: float,
+                  interpret: bool = True):
+    """One fused revised-simplex iteration on every lane of the stack.
+
+    Signature and semantics match `ref.reduced_pivot_ref`: per lane, price
+    all C0 columns out of the (R, R) basis inverse, select the pivot, and
+    apply the eta update — lanes where ``may_pivot & has_enter &
+    ~unbounded`` is False pass their factors through unchanged.  Returns
+    ``(Binv', xB', basis', has_enter, unbounded, degenerate)``.
+    """
+    B, R, C0 = A.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, R, C0), lambda b, *_: (b, 0, 0)),
+                  pl.BlockSpec((1, C0), lambda b, *_: (b, 0)),
+                  pl.BlockSpec((1, R, R), lambda b, *_: (b, 0, 0)),
+                  pl.BlockSpec((1, R), lambda b, *_: (b, 0)),
+                  pl.BlockSpec((1, R), lambda b, *_: (b, 0))],
+        out_specs=[pl.BlockSpec((1, R, R), lambda b, *_: (b, 0, 0)),
+                   pl.BlockSpec((1, R), lambda b, *_: (b, 0)),
+                   pl.BlockSpec((1, R), lambda b, *_: (b, 0)),
+                   pl.BlockSpec((1, 3), lambda b, *_: (b, 0))],
+    )
+    binv2, xb2, bas2, flags = pl.pallas_call(
+        functools.partial(_reduced_kernel, art_cost=art_cost, tol=tol),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, R, R), Binv.dtype),
+                   jax.ShapeDtypeStruct((B, R), xB.dtype),
+                   jax.ShapeDtypeStruct((B, R), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 3), jnp.int32)],
+        interpret=interpret,
+    )(use_bland.astype(jnp.int32), may_pivot.astype(jnp.int32),
+      lane_ok.astype(jnp.int32), A, c_phase, Binv, xB,
+      basis.astype(jnp.int32))
+    return (binv2, xb2, bas2, flags[:, 0] != 0, flags[:, 1] != 0,
+            flags[:, 2] != 0)

@@ -438,6 +438,14 @@ class FleetEngine:
         warm = (np.asarray(g.warm_basis, np.int32)
                 if g.warm_basis is not None
                 else np.full((D, params.n_basis_rows), -1, np.int32))
+        if t > 0:
+            # a basis optimal for last period's LP is stale when the ES
+            # column set changed underneath it (outage flip): cold-start
+            # those lanes instead of warm-factoring the wrong problem
+            prev = np.fromiter(
+                (st.spec.outage_at(t - 1) for st in self.devices),
+                dtype=bool, count=D)
+            warm = np.where((prev != outage)[:, None], np.int32(-1), warm)
 
         t0 = _time.perf_counter()
         with enable_x64():
@@ -499,15 +507,31 @@ class FleetEngine:
         plan_seconds = 0.0
         staged = []                   # (group, fleet_problem, base, assign)
         es_demand_all = np.zeros(D_all)
+        stale_all = None
+        if t > 0:
+            prev = np.fromiter(
+                (st.spec.outage_at(t - 1) for st in self.devices),
+                dtype=bool, count=D_all)
+            stale_all = prev != outage     # ES column set changed: the
+            #                                carried basis labels a
+            #                                different LP — cold-start
         for g in self._groups:
             fp, base = self._assemble(g, arrivals, outage, n_pad)
             warm = {}
             if self.backend == "jax" and g.warm_basis is not None:
-                warm["warm_start"] = g.warm_basis
+                wb = np.asarray(g.warm_basis)
+                if stale_all is not None:
+                    wb = np.where(stale_all[g.ids][:, None], -1, wb)
+                warm["warm_start"] = wb
             sol = solve(fp, policy=self.policy, backend=self.backend,
                         **warm)
             if sol.basis is not None:   # LP-backed rows warm the next period
                 g.warm_basis = np.asarray(sol.basis)
+            else:
+                # e.g. the policy switched to a non-LP solver ("auto"
+                # dispatching every lane to the DP): drop the stale carry
+                # rather than hand it to a later LP period
+                g.warm_basis = None
             plan_seconds += sol.plan_seconds
             assign = sol.assignment
             es_demand_all[g.ids] = sol.es_makespan

@@ -1,0 +1,87 @@
+"""`benchmarks/fleet_bench._record` merge semantics — regression for the
+key-clobbering bug: recording one section slice (one device count, one
+policy) used to ASSIGN the section dict, dropping every previously
+recorded sibling key both in-process and (via the rewrite) on disk, so a
+partial bench rerun silently shrank BENCH_fleet.json and
+`scripts/check_bench_keys.py --verify` failed on unrelated keys."""
+import importlib
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def fb(tmp_path, monkeypatch):
+    """A fresh fleet_bench module writing to a throwaway JSON file."""
+    if REPO not in sys.path:
+        monkeypatch.syspath_prepend(REPO)
+    import benchmarks.fleet_bench as mod
+    mod = importlib.reload(mod)
+    monkeypatch.setattr(mod, "_JSON_PATH", str(tmp_path / "bench.json"))
+    monkeypatch.setattr(mod, "_RESULTS", {})
+    return mod
+
+
+def _keys(doc, prefix=""):
+    out = set()
+    for k, v in doc.items():
+        p = f"{prefix}/{k}" if prefix else k
+        out.add(p)
+        if isinstance(v, dict):
+            out |= _keys(v, p)
+    return out
+
+
+def test_merge_is_recursive_and_sibling_preserving(fb):
+    old = {"64": {"amr2": {"a": 1}, "dual": {"b": 2}}, "256": {"c": 3}}
+    new = {"64": {"amr2": {"a": 9, "extra": 4}}}
+    got = fb._merge(old, new)
+    assert got == {"64": {"amr2": {"a": 9, "extra": 4}, "dual": {"b": 2}},
+                   "256": {"c": 3}}
+    # leaves (non-dicts) are replaced, not merged
+    assert fb._merge({"x": {"y": 1}}, {"x": 5}) == {"x": 5}
+    assert fb._merge(None, {"x": 1}) == {"x": 1}
+
+
+def test_record_preserves_sibling_keys_in_process(fb):
+    fb._record("scale", {"256": {"amr2": {"devices_per_s": 100.0}}})
+    fb._record("scale", {"16384": {"amr2": {"devices_per_s": 90.0}}})
+    # the second call must not clobber the first size's entry
+    assert set(fb._RESULTS["scale"]) == {"256", "16384"}
+    doc = json.load(open(fb._JSON_PATH))
+    assert set(doc["scale"]) == {"256", "16384"}
+
+
+def test_record_merges_into_existing_document_on_disk(fb):
+    with open(fb._JSON_PATH, "w") as fh:
+        json.dump({"scale": {"1024": {"auto": {"x": 1}}},
+                   "parity": {"64": {"ok": True}}}, fh)
+    fb._record("scale", {"1024": {"amr2": {"y": 2}}})
+    doc = json.load(open(fb._JSON_PATH))
+    # old format key ('auto') and other sections survive a partial rerun
+    assert doc["scale"]["1024"] == {"auto": {"x": 1}, "amr2": {"y": 2}}
+    assert doc["parity"] == {"64": {"ok": True}}
+    before = _keys({"scale": {"1024": {"auto": {"x": 1}}},
+                    "parity": {"64": {"ok": True}}})
+    assert before <= _keys(doc)       # the check_bench_keys invariant
+
+
+def test_record_scalar_sections_still_assign(fb):
+    fb._record("note", "hello")
+    fb._record("note", "world")
+    assert json.load(open(fb._JSON_PATH))["note"] == "world"
+
+
+def test_record_survives_corrupt_document(fb):
+    fb._record("scale", {"8": {"amr2": {"z": 1}}})
+    with open(fb._JSON_PATH, "w") as fh:
+        fh.write("{not json")
+    # rewrite can't read the disk doc; the in-process accumulator (which
+    # MERGES, not assigns) still carries the earlier slice forward
+    fb._record("scale", {"16": {"amr2": {"z": 2}}})
+    doc = json.load(open(fb._JSON_PATH))
+    assert set(doc["scale"]) == {"8", "16"}

@@ -404,3 +404,177 @@ def test_engine_pytrees_roundtrip():
         jax.tree_util.tree_leaves(params))
     assert rebuilt.policy == "amr2"
     assert rebuilt.batch_max == params.batch_max
+
+
+# ---------------------------------------------------------------------------
+# reduced-tableau LP method, buffer donation, dtype guard, plan chunking
+# ---------------------------------------------------------------------------
+def test_rollout_lp_method_revised_matches_tableau():
+    """The engine on `lp_method="revised"` must replay the tableau
+    engine's trajectory: same integer metrics, same warm-basis carry,
+    accuracies to fp noise.  The carried basis is compared as a label
+    SET per device: the two representations reach the same optimal
+    vertex but may order its rows differently (the leaving-row slot
+    depends on the pivot sequence, which differs between the dense
+    tableau and the reduced factor on degenerate ties)."""
+    cfg = _config(8, horizon=10)
+    pt = E.EngineParams.from_config(cfg, horizon=10)
+    pr = E.EngineParams.from_config(cfg, horizon=10, lp_method="revised")
+    assert pt.lp_method == "tableau" and pr.lp_method == "revised"
+    st, mt = E.rollout(E.init_state(pt), pt, 6)
+    sr, mr = E.rollout(E.init_state(pr), pr, 6)
+    for f in INT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(mr, f)),
+                                      np.asarray(getattr(mt, f)), f)
+    np.testing.assert_allclose(np.asarray(mr.total_accuracy),
+                               np.asarray(mt.total_accuracy), atol=1e-12)
+    np.testing.assert_array_equal(np.sort(np.asarray(sr.warm_basis), -1),
+                                  np.sort(np.asarray(st.warm_basis), -1))
+
+
+def test_from_fleet_rejects_unknown_lp_method():
+    cfg = _config(4, horizon=6)
+    with pytest.raises(ValueError, match="lp_method"):
+        E.EngineParams.from_config(cfg, horizon=6, lp_method="dense")
+
+
+def test_rollout_donate_is_bitwise_invisible():
+    """`donate=True` consumes the input state's buffers in place (its own
+    jit cache entry) — the results must be BIT-identical to the
+    non-donated rollout."""
+    cfg = _config(6, horizon=8)
+    params = E.EngineParams.from_config(cfg, horizon=8)
+    s0, m0 = E.rollout(E.init_state(params), params, 5)
+    s1, m1 = E.rollout(E.init_state(params), params, 5, donate=True)
+    for f in _STATE_FIELDS_TEST:
+        np.testing.assert_array_equal(np.asarray(getattr(s0, f)),
+                                      np.asarray(getattr(s1, f)), f)
+    for f in INT_FIELDS + FLOAT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(m0, f)),
+                                      np.asarray(getattr(m1, f)), f)
+
+
+_STATE_FIELDS_TEST = ("period", "key", "p_ed", "pending", "head",
+                      "warm_basis", "n_updates")
+
+
+def test_engine_rejects_float32_state_and_params():
+    """The f64 guard: a float32 leaf (e.g. a `device_put` outside any
+    enable_x64 scope with global x64 off) must raise, naming the leaf,
+    instead of silently running the rollout at single precision."""
+    import dataclasses
+
+    cfg = _config(4, horizon=6)
+    params = E.EngineParams.from_config(cfg, horizon=6)
+    state = E.init_state(params)
+    bad_state = dataclasses.replace(
+        state, p_ed=np.asarray(state.p_ed, np.float32))
+    with pytest.raises(TypeError, match=r"state\.p_ed.*float32"):
+        E.step(bad_state, params)
+    bad_params = dataclasses.replace(
+        params, acc=np.asarray(params.acc, np.float32))
+    with pytest.raises(TypeError, match=r"params\.acc.*float32"):
+        E.rollout(state, bad_params, 2)
+
+
+def test_plan_lane_chunking_is_bitwise_invisible(monkeypatch):
+    """`_plan` over lane chunks (`_PLAN_LANE_CHUNK`) must return exactly
+    what the flat plan returns — warm, cold, and non-divisible (flat
+    fallback) alike.  The chunking is purely a cache-blocking transform;
+    any numerical difference is a bug."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.problem import FleetProblem
+
+    cfg = _config(16, horizon=6)
+    params = E.EngineParams.from_config(cfg, horizon=6)
+    state = E.init_state(params)
+    with enable_x64():
+        ci, take, *_ = E._arrivals(state, params)
+        D, n = 16, params.batch_max
+        mask = jnp.arange(n)[None, :] < take[:, None]
+        rows = jnp.arange(D)[:, None]
+        cic = jnp.clip(ci, 0, params.p_es.shape[1] - 1)
+        fp = FleetProblem.from_arrays_unchecked(
+            jnp.where(mask[..., None], jnp.asarray(state.p_ed)[rows, cic],
+                      0.0),
+            jnp.where(mask, jnp.asarray(params.p_es)[rows, cic], 0.0),
+            jnp.asarray(params.acc), jnp.broadcast_to(params.T, (D,)),
+            mask)
+        wb = jnp.asarray(state.warm_basis)
+        monkeypatch.setattr(E, "_PLAN_LANE_CHUNK", 0)
+        flat = E._plan(params, fp, wb)
+        flat_cold = E._plan(params, fp, None)
+        for chunk in (4, 8, 5):          # 5 does not divide 16: flat path
+            monkeypatch.setattr(E, "_PLAN_LANE_CHUNK", chunk)
+            for ref, got in ((flat, E._plan(params, fp, wb)),
+                             (flat_cold, E._plan(params, fp, None))):
+                for r, g in zip(ref, got):
+                    np.testing.assert_array_equal(np.asarray(r),
+                                                  np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# stale warm-basis invalidation (outage flip) — regression
+# ---------------------------------------------------------------------------
+class _Captured(Exception):
+    pass
+
+
+def test_step_cold_starts_warm_basis_on_outage_flip(monkeypatch):
+    """An outage edge swaps a device's ES columns for the disabled
+    sentinel, so last period's optimal basis labels a DIFFERENT LP.
+    `step` must mask exactly the flipped devices' warm rows to -1 before
+    handing them to the period core (regression: they used to be
+    warm-factored against the wrong problem)."""
+    import dataclasses
+
+    cfg = _config(6, horizon=4, outage_frac=0.0)
+    params = E.EngineParams.from_config(cfg, horizon=4)
+    outage = np.zeros((6, params.outage.shape[1]), bool)
+    outage[0, 1] = True            # device 0 flips ON at t=1
+    outage[1, :] = True            # device 1 always out: no edge
+    outage[2, 0] = True            # device 2 flips OFF at t=1
+    params = dataclasses.replace(params, outage=outage)
+    wb = np.tile(np.arange(params.n_basis_rows, dtype=np.int32), (6, 1))
+    state = dataclasses.replace(E.init_state(params),
+                                period=np.int32(1), warm_basis=wb)
+    captured = {}
+
+    def spy(belief, warm, *a, **k):
+        captured["warm"] = np.asarray(warm)
+        raise _Captured
+
+    monkeypatch.setattr(E, "_period_impl", spy)
+    with pytest.raises(_Captured):
+        E._step_impl(state, params)
+    got = captured["warm"]
+    assert (got[0] == -1).all() and (got[2] == -1).all()
+    np.testing.assert_array_equal(got[[1, 3, 4, 5]], wb[[1, 3, 4, 5]])
+
+
+def test_step_keeps_warm_basis_at_period_zero(monkeypatch):
+    """t=0 has no previous period: the (t-1) % H wraparound row must not
+    fabricate a flip and throw away a caller-provided basis."""
+    import dataclasses
+
+    cfg = _config(4, horizon=4, outage_frac=0.0)
+    params = E.EngineParams.from_config(cfg, horizon=4)
+    outage = np.zeros((4, params.outage.shape[1]), bool)
+    outage[1, -1] = True           # differs from t=0 only via wraparound
+    params = dataclasses.replace(params, outage=outage)
+    wb = np.tile(np.arange(params.n_basis_rows, dtype=np.int32), (4, 1))
+    state = dataclasses.replace(E.init_state(params), warm_basis=wb)
+    captured = {}
+
+    def spy(belief, warm, *a, **k):
+        captured["warm"] = np.asarray(warm)
+        raise _Captured
+
+    monkeypatch.setattr(E, "_period_impl", spy)
+    with pytest.raises(_Captured):
+        E._step_impl(state, params)
+    np.testing.assert_array_equal(captured["warm"], wb)

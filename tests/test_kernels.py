@@ -4,6 +4,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -258,3 +259,73 @@ def test_simplex_pivot_ref_is_a_simplex_pivot():
         expect = np.zeros(4)
         expect[int(r[b])] = 1.0
         np.testing.assert_allclose(col, expect, atol=1e-12)
+
+
+def _reduced_state(B, R, C0, seed):
+    """A valid cold revised-simplex state: identity factor, xB = b > 0,
+    every row basic on its VIRTUAL artificial (labels >= C0)."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(B, R, C0))
+    xB = rng.uniform(0.5, 2.0, size=(B, R))
+    c_phase = np.zeros((B, C0))        # phase 1: artificials cost art_cost
+    Binv = np.broadcast_to(np.eye(R), (B, R, R)).copy()
+    basis = np.broadcast_to(C0 + np.arange(R, dtype=np.int32), (B, R)).copy()
+    with enable_x64():
+        return tuple(jnp.asarray(x) for x in (A, c_phase, Binv, xB)) + (
+            jnp.asarray(basis, jnp.int32),)
+
+
+@pytest.mark.parametrize("B,R,C0", [(4, 5, 9), (8, 11, 27), (1, 3, 4)])
+def test_reduced_pivot_kernel_vs_ref(B, R, C0):
+    """The fused reduced-factor pivot kernel must replay the jnp oracle:
+    all pivot DECISIONS (basis labels, has_enter/unbounded/degenerate
+    flags) exactly, and the updated [Binv | xB] factor to within a few
+    ulps — the ref prices via einsum (dot-general) while the kernel uses
+    an elementwise multiply-reduce, so the accumulation order can differ
+    at shapes where XLA picks different lowerings.  (At the fleet LP
+    shape the two are measured bit-identical; `tests/test_lp.py` pins
+    that.)  Masked lanes must pass through untouched, bit for bit."""
+    from repro.kernels.simplex_pivot.ops import reduced_pivot
+    from repro.kernels.simplex_pivot.ref import reduced_pivot_ref
+    with enable_x64():
+        A, c_phase, Binv, xB, basis = _reduced_state(B, R, C0, B * 10 + C0)
+        rng = np.random.default_rng(1)
+        use_bland = jnp.asarray(rng.uniform(size=B) < 0.3)
+        may_pivot = jnp.ones(B, bool)
+        lane_ok = jnp.asarray(rng.uniform(size=B) < 0.8)
+        args = (A, c_phase, Binv, xB, basis, use_bland, may_pivot, lane_ok)
+        got = reduced_pivot(*args, art_cost=1.0, tol=1e-7)
+        ref = reduced_pivot_ref(*args, art_cost=1.0, tol=1e-7)
+        for g, r in zip(got[:2], ref[:2]):       # Binv', xB': ulp-close
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=1e-13, atol=1e-15)
+        for g, r in zip(got[2:], ref[2:]):       # basis + flags: exact
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+        ok = np.asarray(lane_ok)
+        np.testing.assert_array_equal(np.asarray(got[0])[~ok],
+                                      np.asarray(Binv)[~ok])
+        np.testing.assert_array_equal(np.asarray(got[2])[~ok],
+                                      np.asarray(basis)[~ok])
+
+
+def test_reduced_pivot_ref_maintains_basis_inverse():
+    """After a pivot the updated factor must still be the inverse of the
+    basis matrix the updated labels describe (virtual label C0+k <-> e_k,
+    real label j <-> column A[:, j]) — i.e. the eta update is a genuine
+    product-form basis-inverse update, not just a tableau transform."""
+    from repro.kernels.simplex_pivot.ref import reduced_pivot_ref
+    with enable_x64():
+        B, R, C0 = 6, 5, 12
+        A, c_phase, Binv, xB, basis = _reduced_state(B, R, C0, 3)
+        on = jnp.ones(B, bool)
+        for _ in range(3):                    # a few successive pivots
+            Binv, xB, basis, has_enter, unbounded, _deg = reduced_pivot_ref(
+                A, c_phase, Binv, xB, basis, ~on, on, on,
+                art_cost=1.0, tol=1e-7)
+        An, Bn, bn = (np.asarray(A), np.asarray(Binv),
+                      np.asarray(basis))
+        for b in range(B):
+            Bmat = np.stack(
+                [An[b, :, l] if l < C0 else np.eye(R)[l - C0]
+                 for l in bn[b]], axis=1)
+            np.testing.assert_allclose(Bn[b] @ Bmat, np.eye(R), atol=1e-9)

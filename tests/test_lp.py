@@ -357,3 +357,183 @@ def test_simplex_batch_core_lane_mask_zeroes_masked_lanes():
     np.testing.assert_array_equal(x[lane_mask], ref.x[lane_mask])
     np.testing.assert_array_equal(niter[lane_mask], ref.niter[lane_mask])
     assert (niter[~lane_mask] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# method="revised": the reduced-tableau revised simplex vs the dense tableau
+# ---------------------------------------------------------------------------
+def _run_core_m(c, A_ub, b_ub, A_eq, b_eq, basis0, method, impl="jnp",
+                lane_mask=None, maxiter=None):
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.lp import (_bucket_maxiter, _canonicalize_batch,
+                               simplex_batch_core)
+    A, b, cf, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
+    if maxiter is None:
+        maxiter = _bucket_maxiter(50 * (A.shape[1] + 2))
+    with enable_x64():
+        out = simplex_batch_core(
+            jnp.asarray(A), jnp.asarray(b), jnp.asarray(cf),
+            None if basis0 is None else jnp.asarray(basis0),
+            nv=nv, maxiter=maxiter, method=method, impl=impl,
+            lane_mask=None if lane_mask is None else jnp.asarray(lane_mask))
+    return [np.asarray(o) for o in out]
+
+
+def _fleet_lp(B, seed=0):
+    from repro.core import InstanceBatch, random_instance
+    from repro.core.amr2 import build_lp_arrays_batch
+    batch = InstanceBatch.stack(
+        [random_instance(8, 2, T=1.2, seed=seed + s) for s in range(B)])
+    return build_lp_arrays_batch(batch)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_revised_cold_matches_tableau_small(seed):
+    """Cold parity contract: statuses exact; OPTIMAL lanes agree on x and
+    objective to fp noise.  (Pivot SEQUENCES can differ between the two
+    representations on degenerate floating-point Dantzig ties — observed
+    only on INFEASIBLE lanes of random batches, whose x/fun are
+    meaningless — so niter/basis are deliberately not pinned cold.)"""
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(seed, nb=6)
+    t = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "tableau")
+    r = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised")
+    np.testing.assert_array_equal(r[2], t[2])          # status, every lane
+    opt = t[2] == OPTIMAL
+    np.testing.assert_allclose(r[0][opt], t[0][opt], atol=1e-12)
+    np.testing.assert_allclose(r[1][opt], t[1][opt], atol=1e-12)
+
+
+@pytest.mark.parametrize("B", [64, 256])
+def test_revised_fleet_parity(B):
+    """The ISSUE's 64/256-device pins on real fleet LPs: cold statuses
+    exact + OPTIMAL-lane optima to <= 1e-12; warm restart from the
+    tableau's own optimal bases accepts/rejects identically, and every
+    ACCEPTED lane is pivot-for-pivot exact (0 iterations, same basis,
+    bit-identical x)."""
+    c, A_ub, b_ub, A_eq, b_eq = _fleet_lp(B)
+    t = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "tableau")
+    r = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised")
+    np.testing.assert_array_equal(r[2], t[2])
+    opt = t[2] == OPTIMAL
+    assert opt.sum() > B // 2                    # the pin is not vacuous
+    np.testing.assert_allclose(r[0][opt], t[0][opt], atol=1e-12)
+    np.testing.assert_allclose(r[1][opt], t[1][opt], atol=1e-12)
+
+    tw = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, t[4], "tableau")
+    rw = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, t[4], "revised")
+    np.testing.assert_array_equal(rw[5], tw[5])  # same accept/reject set
+    ok = tw[5]
+    assert ok.sum() > B // 2
+    assert (rw[3][ok] == 0).all()                # optimal basis: 0 pivots
+    np.testing.assert_array_equal(rw[4][ok], tw[4][ok])
+    np.testing.assert_array_equal(rw[0][ok], tw[0][ok])   # bitwise
+    np.testing.assert_allclose(rw[1][ok], tw[1][ok], atol=1e-12)
+
+
+def test_revised_pallas_impl_bit_identical():
+    """The fused reduced-pivot kernel (interpret mode on CPU) replays the
+    jnp reference trajectory bit for bit across a whole two-phase solve."""
+    for seed in (0, 7):
+        c, A_ub, b_ub, A_eq, b_eq = _batch_lp(seed, nb=6)
+        ref = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised",
+                          impl="jnp")
+        got = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised",
+                          impl="pallas")
+        np.testing.assert_array_equal(got[2], ref[2])
+        np.testing.assert_array_equal(got[3], ref[3])
+        np.testing.assert_array_equal(got[4], ref[4])
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_revised_infeasible_lane_status():
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(5, nb=4)
+    b_eq = b_eq.copy()
+    b_eq[1] = 100.0                            # sum x = 100 with x <= ~3 cap
+    t = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "tableau")
+    r = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised")
+    assert r[2][1] == INFEASIBLE
+    np.testing.assert_array_equal(r[2], t[2])
+
+
+def test_revised_lane_mask_zeroes_masked_lanes():
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(2, nb=6)
+    full = _run_core_m(c, A_ub, b_ub, A_eq, b_eq, None, "revised")
+    lane_mask = np.array([True, False, True, False, True, False])
+    x, fun, status, niter, basis, ok = _run_core_m(
+        c, A_ub, b_ub, A_eq, b_eq, None, "revised", lane_mask=lane_mask)
+    np.testing.assert_array_equal(x[lane_mask], full[0][lane_mask])
+    np.testing.assert_array_equal(niter[lane_mask], full[3][lane_mask])
+    assert (niter[~lane_mask] == 0).all()
+
+
+def test_simplex_batch_core_unknown_method_raises():
+    from repro.core.lp import simplex_batch_core
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(0, nb=2)
+    from repro.core.lp import _canonicalize_batch
+    A, b, cf, nv, _ = _canonicalize_batch(c, A_ub, b_ub, A_eq, b_eq)
+    with pytest.raises(ValueError, match="method"):
+        simplex_batch_core(A, b, cf, None, nv=nv, maxiter=8,
+                           method="dense")
+
+
+def test_solve_lp_batch_method_revised_host_dispatch():
+    """`solve_lp_batch(method="revised")` resolves warm AND rejected lanes
+    in one jitted call (no pow2-padded subset re-solve) and agrees with
+    the tableau dispatch on status, acceptance, and optima."""
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(1)
+    ref = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq)
+    got = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, method="revised")
+    np.testing.assert_array_equal(got.status, ref.status)
+    opt = np.asarray(ref.status) == OPTIMAL
+    np.testing.assert_allclose(got.x[opt], ref.x[opt], atol=1e-12)
+    np.testing.assert_allclose(got.fun[opt], ref.fun[opt], atol=1e-12)
+
+    wb = np.asarray(ref.basis).copy()
+    wb[::2] = -1                               # stale every other lane
+    wref = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, warm_basis=wb)
+    wgot = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, warm_basis=wb,
+                          method="revised")
+    np.testing.assert_array_equal(wgot.warm, wref.warm)
+    np.testing.assert_array_equal(wgot.status, wref.status)
+    accepted = np.asarray(wref.warm)
+    np.testing.assert_array_equal(wgot.basis[accepted], wref.basis[accepted])
+    np.testing.assert_allclose(wgot.x[accepted], wref.x[accepted],
+                               atol=1e-12)
+
+    with pytest.raises(ValueError, match="method"):
+        solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, method="etas")
+
+
+# ---------------------------------------------------------------------------
+# explicit maxiter= caps the TWO-PHASE TOTAL (regression: each phase used
+# to spend the full budget, so niter could reach 2x the requested cap)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_explicit_maxiter_caps_two_phase_total(backend):
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(3)
+    full = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend)
+    assert full.status == OPTIMAL and full.niter > 4
+    for cap in (1, 3, full.niter - 1):
+        res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                       maxiter=cap)
+        assert res.niter <= cap, \
+            f"maxiter={cap} but {res.niter} iterations ran"
+    # a budget of exactly the cold pivot count still certifies optimality
+    # (the cap check runs AFTER the optimality check on both backends)
+    exact = solve_lp(c, A_ub, b_ub, A_eq, b_eq, backend=backend,
+                     maxiter=full.niter)
+    assert exact.status == OPTIMAL and exact.niter == full.niter
+
+
+@pytest.mark.parametrize("method", ["tableau", "revised"])
+def test_batched_explicit_maxiter_caps_two_phase_total(method):
+    from repro.core import solve_lp_batch
+    c, A_ub, b_ub, A_eq, b_eq = _batch_lp(4)
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, maxiter=3,
+                         method=method)
+    assert (np.asarray(res.niter) <= 3).all()
+    assert (np.asarray(res.status) == 1).any()   # ITERATION_LIMIT surfaced

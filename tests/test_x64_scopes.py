@@ -87,3 +87,56 @@ def test_both_solvers_interleaved_under_toggles(x64_toggle):
         got_dual = dual_schedule_batch_arrays(batch)
         np.testing.assert_array_equal(got_lp.x, ref_lp.x)
         np.testing.assert_array_equal(got_dual[0], ref_dual[0])
+
+
+def test_engine_f32_guard_under_global_x64_off():
+    """The engine's float64 guard, end to end in a FRESH interpreter with
+    the global x64 flag off: a `device_put` of the state outside any
+    `enable_x64` scope silently materializes float32 buffers, and
+    `engine.step` must refuse them with a TypeError naming the leaf (the
+    old behavior ran the whole rollout at single precision, quietly
+    voiding the documented parity claims)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import jax
+        assert not jax.config.jax_enable_x64
+        import numpy as np
+        from repro.api import engine as E
+        from repro.serving import FleetConfig
+
+        cfg = FleetConfig(n_devices=4, T=1.2, n_servers=1, policy="amr2",
+                          backend="jax", rate=6.0, batch_max=8,
+                          horizon=6, seed=0)
+        params = E.EngineParams.from_config(cfg, horizon=6)
+        state = E.init_state(params)
+        # the buggy pattern: an unscoped transfer downcasts to f32
+        bad = jax.tree.map(jax.device_put, state)
+        assert np.asarray(bad.p_ed).dtype == np.float32
+        try:
+            E.step(bad, params)
+        except TypeError as e:
+            assert "state.p_ed" in str(e) and "float32" in str(e), e
+            print("GUARDED")
+        else:
+            raise SystemExit("f32 state was accepted silently")
+
+        # the correct pattern still works: scoped transfers stay f64
+        from jax.experimental import enable_x64
+        with enable_x64():
+            good = jax.tree.map(jax.device_put, state)
+        st2, m = E.step(good, params)
+        assert np.asarray(st2.p_ed).dtype == np.float64
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env.pop("JAX_ENABLE_X64", None)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "GUARDED" in out.stdout and "OK" in out.stdout
