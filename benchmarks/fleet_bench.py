@@ -31,6 +31,15 @@ Sections:
   * ``fleet/speedup``  — the scanned `engine.rollout` hot path (amr2 and
     dual policies) against the PR-1 per-device `run_period_reference`
     loop at the 256-device point.
+  * ``fleet/chaos/*`` — the fault-injection subsystem under load
+    (``FLEET_BENCH_CHAOS_DEVICES`` / ``FLEET_BENCH_CHAOS_PERIODS``):
+    pins the armed-null rollout bitwise against the fault-free engine,
+    sweeps the offload loss rate through 40% on ONE compiled rollout
+    (fault rates are pytree leaves), and asserts graceful degradation —
+    per-period offload accounting closes exactly, realized makespans
+    respect the 2T + retry-budget bound, and the 10%-loss point keeps
+    >= 90% of the fault-free accuracy (no cliff) — plus a harsh
+    crash+degrade+straggler entry for the documented worst case.
 
 Every section also folds its numbers into ``BENCH_fleet.json`` (repo root;
 override with ``BENCH_FLEET_JSON``).  Sections merge dict-into-dict (one
@@ -795,7 +804,149 @@ def sharded():
     ]
 
 
-ALL = [parity, warm_cold, scaling, speedup, rollout, sharded]
+def chaos():
+    """Graceful degradation under injected faults, at the 64-device point
+    (``FLEET_BENCH_CHAOS_DEVICES`` / ``FLEET_BENCH_CHAOS_PERIODS``).
+
+    Three pieces, all on the scanned `engine.rollout` path:
+
+      * *armed-null parity* — chaos=True with the all-zero FaultModel
+        must reproduce the fault-free rollout BIT for BIT (identity
+        factors and zero losses are exact in float64), so arming the
+        subsystem costs nothing but the traced fault block;
+      * *loss sweep* — offload loss 0% -> 40% on ONE compiled rollout
+        (rates are leaves, only the armed trace compiles once).  Gates:
+        the per-period accounting identity ``admitted == completed +
+        fallback + dropped`` closes exactly at every point, realized
+        makespans stay under ``2T + backoff_cap + one retransmission of
+        the worst admitted demand``, and the 10%-loss point retains
+        >= 90% of the fault-free accuracy — the retry + local-fallback
+        ladder flattens the loss cliff instead of dropping work;
+      * *harsh* — crash + link-degrade + straggler + loss all armed at
+        once: the worst-case regime the README documents (deadline
+        misses are EXPECTED here — the point is they are counted, not
+        hidden)."""
+    import dataclasses
+
+    import jax
+
+    from repro.api import engine as E
+    from repro.serving import FaultModel, FleetConfig
+
+    n = int(os.environ.get("FLEET_BENCH_CHAOS_DEVICES", 64))
+    periods = int(os.environ.get("FLEET_BENCH_CHAOS_PERIODS", 12))
+    T = 1.2
+    cfg = FleetConfig(
+        n_devices=n, T=T, n_servers=max(1, n // 16), policy="amr2",
+        rate=10.0, batch_max=PARITY_JOBS, horizon=periods + 2, seed=7,
+        fault_seed=11)
+    base = E.EngineParams.from_config(cfg, horizon=periods + 2)
+    assert not base.chaos
+    out = []
+
+    # --- armed-null bitwise parity -------------------------------------
+    _, m0 = E.rollout(E.init_state(base), base, periods)
+    armed = dataclasses.replace(base, faults=FaultModel.none(), chaos=True)
+    t0 = time.perf_counter()
+    _, m1 = E.rollout(E.init_state(armed), armed, periods)
+    jax.block_until_ready(np.asarray(m1.total_accuracy))
+    armed_s = time.perf_counter() - t0
+    for f in ("total_accuracy", "n_jobs", "n_violations", "n_offloading",
+              "backlog", "realized_makespan"):
+        assert np.array_equal(np.asarray(getattr(m0, f)),
+                              np.asarray(getattr(m1, f))), \
+            f"armed-null chaos rollout diverged from fault-free on {f}"
+    acc0 = float(np.asarray(m0.total_accuracy).sum())
+    jobs0 = int(np.asarray(m0.n_jobs).sum())
+
+    # realized-makespan bound for loss-only models: no link degradation,
+    # so one retry round retransmits at most the worst admitted demand
+    demand_cap = float(np.asarray(base.p_es).max()) * base.batch_max
+
+    def _gated_run(params, worst_link):
+        _, M = E.rollout(E.init_state(params), params, periods)
+        n_off = np.asarray(M.n_offload_samples)
+        closed = (n_off == np.asarray(M.n_offload_ok)
+                  + np.asarray(M.n_fallback_local)
+                  + np.asarray(M.n_dropped))
+        assert closed.all(), "per-period offload accounting did not close"
+        cap = float(params.faults.backoff_cap)
+        bound = 2.0 * T + cap + demand_cap * worst_link
+        worst = float(np.asarray(M.realized_makespan).max())
+        assert worst <= bound + 1e-9, \
+            f"realized makespan {worst:.3f} exceeds the ladder bound " \
+            f"{bound:.3f} (2T + backoff cap + one retransmission)"
+        return M, worst
+
+    # --- offload-loss sweep on the one armed trace ---------------------
+    sweep = {}
+    for loss in (0.0, 0.05, 0.1, 0.2, 0.4):
+        p = dataclasses.replace(armed,
+                                faults=FaultModel.make(loss_rate=loss))
+        M, worst = _gated_run(p, worst_link=1.0)
+        acc = float(np.asarray(M.total_accuracy).sum())
+        entry = {
+            "loss_rate": loss,
+            "accuracy_vs_fault_free": acc / max(acc0, 1e-12),
+            "total_accuracy": acc,
+            "n_retries": int(np.asarray(M.n_retries).sum()),
+            "n_fallback_local": int(np.asarray(M.n_fallback_local).sum()),
+            "n_dropped": int(np.asarray(M.n_dropped).sum()),
+            "n_deadline_miss": int(np.asarray(M.n_deadline_miss).sum()),
+            "worst_realized_makespan": worst,
+        }
+        sweep[f"{loss:g}"] = entry
+        out.append((
+            f"fleet/chaos/loss_{loss:g}", 0.0,
+            f"devices={n};acc_ratio={entry['accuracy_vs_fault_free']:.4f};"
+            f"retries={entry['n_retries']};"
+            f"fallback={entry['n_fallback_local']};"
+            f"dropped={entry['n_dropped']};"
+            f"worst_makespan={worst:.3f}"))
+    assert sweep["0"]["accuracy_vs_fault_free"] == 1.0, \
+        "zero-rate sweep point must reproduce the fault-free accuracy"
+    assert sweep["0.1"]["accuracy_vs_fault_free"] >= 0.90, \
+        f"10% offload loss dropped accuracy to " \
+        f"{sweep['0.1']['accuracy_vs_fault_free']:.3f}x fault-free — " \
+        f"the degradation ladder should hold >= 0.90x (no cliff)"
+
+    # --- harsh regime: everything armed at once ------------------------
+    harsh_fm = FaultModel.make(es_crash_prob=0.08, link_degrade_prob=0.25,
+                               link_degrade_mag=0.6, straggler_prob=0.2,
+                               straggler_mult=1.8, loss_rate=0.15)
+    M, worst = _gated_run(
+        dataclasses.replace(armed, faults=harsh_fm),
+        worst_link=1.0 + float(harsh_fm.link_degrade_mag))
+    acc = float(np.asarray(M.total_accuracy).sum())
+    harsh = {
+        "accuracy_vs_fault_free": acc / max(acc0, 1e-12),
+        "n_retries": int(np.asarray(M.n_retries).sum()),
+        "n_fallback_local": int(np.asarray(M.n_fallback_local).sum()),
+        "n_dropped": int(np.asarray(M.n_dropped).sum()),
+        "n_deadline_miss": int(np.asarray(M.n_deadline_miss).sum()),
+        "deadline_miss_rate": int(np.asarray(M.n_deadline_miss).sum())
+        / max(jobs0, 1),
+        "worst_realized_makespan": worst,
+    }
+    assert harsh["n_retries"] + harsh["n_fallback_local"] \
+        + harsh["n_dropped"] > 0, "harsh fault model never fired"
+
+    _record("chaos", {
+        "devices": n, "periods": periods, "jobs": jobs0,
+        "armed_null_parity": "bitwise",
+        "armed_null_devices_per_s": n * periods / armed_s,
+        "loss_sweep": sweep, "harsh": harsh,
+        "assertions": "passed",
+    })
+    out.append((
+        f"fleet/chaos/harsh", 0.0,
+        f"devices={n};acc_ratio={harsh['accuracy_vs_fault_free']:.4f};"
+        f"miss_rate={harsh['deadline_miss_rate']:.4f};"
+        f"dropped={harsh['n_dropped']};worst_makespan={worst:.3f}"))
+    return out
+
+
+ALL = [parity, warm_cold, scaling, speedup, rollout, sharded, chaos]
 
 
 def main():

@@ -7,10 +7,13 @@ must survive a 64-device smoke run.  Usage:
 
     python scripts/check_bench_keys.py snapshot BENCH_fleet.json keys.json
     ... run the bench ...
-    python scripts/check_bench_keys.py verify BENCH_fleet.json keys.json
+    python scripts/check_bench_keys.py verify BENCH_fleet.json keys.json \
+        [--require SECTION ...]
 
 ``verify`` exits 1 if any recursively-collected dict key path from the
-snapshot is missing from the current document.
+snapshot is missing from the current document, or if a ``--require``d
+top-level section (e.g. ``chaos``) is absent — the snapshot mechanism
+alone cannot catch a section that was never recorded in the first place.
 """
 from __future__ import annotations
 
@@ -30,7 +33,12 @@ def key_paths(doc, prefix=""):
 
 
 def main(argv) -> int:
-    if len(argv) != 4 or argv[1] not in ("snapshot", "verify"):
+    required = []
+    if "--require" in argv:
+        i = argv.index("--require")
+        argv, required = argv[:i], argv[i + 1:]
+    if len(argv) != 4 or argv[1] not in ("snapshot", "verify") \
+            or (required and argv[1] != "verify"):
         print(__doc__, file=sys.stderr)
         return 2
     mode, bench_path, keys_path = argv[1], argv[2], argv[3]
@@ -51,6 +59,11 @@ def main(argv) -> int:
     with open(keys_path) as fh:
         before = set(json.load(fh))
     after = set(key_paths(doc))
+    missing = [s for s in required if s not in doc]
+    if missing:
+        print(f"FAIL: required BENCH section(s) absent: {missing}",
+              file=sys.stderr)
+        return 1
     lost = sorted(before - after)
     if lost:
         print(f"FAIL: {len(lost)} previously-recorded BENCH key path(s) "

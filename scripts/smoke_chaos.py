@@ -1,0 +1,109 @@
+"""Chaos-subsystem CI smoke: the fault-injection path must be armed,
+deterministic, and bitwise-invisible when null.
+
+Three gates on a 64-device fleet (``CHAOS_SMOKE_DEVICES`` /
+``CHAOS_SMOKE_PERIODS`` shrink for CI) with a fixed fault seed:
+
+  1. *armed-null parity* — ``chaos=True`` with the all-zero `FaultModel`
+     reproduces the fault-free rollout BIT for BIT (identity factors and
+     zero losses are exact in float64);
+  2. *the ladder fires* — a harsh fault model produces nonzero retry /
+     fallback / drop-or-miss counters (a chaos run that never walks the
+     ladder is vacuously green);
+  3. *accounting closes* — ``n_offload_samples == n_offload_ok +
+     n_fallback_local + n_dropped`` exactly, every period, and the
+     realized makespan respects the documented
+     ``2T + backoff_cap + one retransmission`` bound.
+
+Standalone:  PYTHONPATH=src python scripts/smoke_chaos.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def main() -> int:
+    import dataclasses
+
+    import numpy as np
+
+    from repro.api import engine as E
+    from repro.serving import FaultModel, FleetConfig
+
+    n_devices = int(os.environ.get("CHAOS_SMOKE_DEVICES", 64))
+    periods = int(os.environ.get("CHAOS_SMOKE_PERIODS", 8))
+    T = 1.2
+    cfg = FleetConfig(n_devices=n_devices, T=T,
+                      n_servers=max(1, n_devices // 16), policy="amr2",
+                      rate=9.0, batch_max=8, horizon=periods + 2, seed=0,
+                      fault_seed=11)
+    base = E.EngineParams.from_config(cfg, horizon=periods + 2)
+    failures = []
+
+    # gate 1: armed-null bitwise parity -----------------------------------
+    _, m0 = E.rollout(E.init_state(base), base, periods)
+    armed = dataclasses.replace(base, faults=FaultModel.none(), chaos=True)
+    _, m1 = E.rollout(E.init_state(armed), armed, periods)
+    for f in [x.name for x in dataclasses.fields(type(m0))]:
+        a, b = np.asarray(getattr(m0, f)), np.asarray(getattr(m1, f))
+        if not np.array_equal(a, b):
+            failures.append(f"armed-null parity broken on {f}: {b} != {a}")
+
+    # gates 2 + 3: harsh model fires and accounts for every sample --------
+    fm = FaultModel.make(es_crash_prob=0.08, link_degrade_prob=0.25,
+                         link_degrade_mag=0.6, straggler_prob=0.2,
+                         straggler_mult=1.8, loss_rate=0.15)
+    params = base.with_faults(fm, fault_seed=11)
+    _, M = E.rollout(E.init_state(params), params, periods)
+    ladder = (int(np.asarray(M.n_retries).sum())
+              + int(np.asarray(M.n_fallback_local).sum())
+              + int(np.asarray(M.n_dropped).sum())
+              + int(np.asarray(M.n_deadline_miss).sum()))
+    if ladder == 0:
+        failures.append("harsh fault model never fired (vacuous smoke)")
+    n_off = np.asarray(M.n_offload_samples)
+    closed = n_off == (np.asarray(M.n_offload_ok)
+                       + np.asarray(M.n_fallback_local)
+                       + np.asarray(M.n_dropped))
+    if not closed.all():
+        failures.append("offload accounting identity broken in period(s) "
+                        f"{np.nonzero(~closed)[0].tolist()}")
+    demand_cap = float(np.asarray(base.p_es).max()) * base.batch_max
+    bound = 2.0 * T + float(fm.backoff_cap) \
+        + demand_cap * (1.0 + float(fm.link_degrade_mag))
+    worst = float(np.asarray(M.realized_makespan).max())
+    if worst > bound + 1e-9:
+        failures.append(f"realized makespan {worst:.3f} exceeds the "
+                        f"ladder bound {bound:.3f}")
+    # determinism under the fixed fault seed
+    _, M2 = E.rollout(E.init_state(params), params, periods)
+    for f in ("total_accuracy", "n_retries", "n_dropped",
+              "realized_makespan"):
+        if not np.array_equal(np.asarray(getattr(M, f)),
+                              np.asarray(getattr(M2, f))):
+            failures.append(f"chaos rollout not deterministic on {f}")
+
+    if failures:
+        print("FAIL: chaos smoke:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    acc0 = float(np.asarray(m0.total_accuracy).sum())
+    acc = float(np.asarray(M.total_accuracy).sum())
+    print(f"[chaos-smoke] ok: {n_devices} devices x {periods} periods — "
+          f"armed-null bitwise parity, ladder fired "
+          f"(retries={int(np.asarray(M.n_retries).sum())}, "
+          f"fallback={int(np.asarray(M.n_fallback_local).sum())}, "
+          f"dropped={int(np.asarray(M.n_dropped).sum())}, "
+          f"miss={int(np.asarray(M.n_deadline_miss).sum())}), "
+          f"accounting closed, accuracy {acc / max(acc0, 1e-12):.4f}x "
+          f"fault-free")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

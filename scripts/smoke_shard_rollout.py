@@ -8,9 +8,13 @@ Launch with host-platform devices spawned BEFORE jax initialises:
 
 Environment knobs: ``SHARD_SMOKE_DEVICES`` (fleet size, default 64),
 ``SHARD_SMOKE_SHARDS`` (mesh size, default all jax devices),
-``SHARD_SMOKE_PERIODS`` (default 8).  Exits 1 on any parity failure —
-integer metrics and the final pytree state must match exactly, float
-metrics to 1e-9 (per-shard partial sums + psum reassociate the float64
+``SHARD_SMOKE_PERIODS`` (default 8), ``SHARD_SMOKE_CHAOS=1`` (arm the
+fault-injection subsystem with a replayed fault trace AND flip a quarter
+of the fleet's outage schedule mid-horizon — the stale-warm-basis guard
+and the per-device folded fault draws must both hold under sharding).
+Exits 1 on any parity failure — integer metrics (including the ladder
+counters) and the final pytree state must match exactly, float metrics
+to 1e-9 (per-shard partial sums + psum reassociate the float64
 reductions).
 """
 from __future__ import annotations
@@ -43,6 +47,24 @@ def main() -> int:
                       n_servers=max(1, n_devices // 16), policy="amr2",
                       rate=8.0, batch_max=8, horizon=periods + 2, seed=0)
     params = E.EngineParams.from_config(cfg, horizon=periods + 2)
+    chaos = os.environ.get("SHARD_SMOKE_CHAOS", "0") == "1"
+    if chaos:
+        import dataclasses
+
+        from repro.serving import FaultModel
+
+        # mid-horizon outage flip on every 4th device: the stale-warm-
+        # basis cold-start (PR 6) must agree across shards with the
+        # fault path armed
+        outage = np.array(params.outage)
+        outage[::4, max(1, periods // 2):] = \
+            ~outage[::4, max(1, periods // 2):]
+        params = dataclasses.replace(params, outage=outage)
+        params = params.with_faults(
+            FaultModel.make(loss_rate=0.1, straggler_prob=0.15,
+                            straggler_mult=2.0, link_degrade_prob=0.2,
+                            link_degrade_mag=0.5, es_crash_prob=0.05),
+            fault_seed=3)
     state = E.init_state(params)
     mesh = E.fleet_mesh(n_shards)
     sstate, sparams = E.shard(state, params, mesh)
@@ -56,23 +78,32 @@ def main() -> int:
         if not ok:
             failures.append(f"{tag}: sharded {got} != unsharded {want}")
 
+    ladder_ints = ("n_offload_samples", "n_offload_ok", "n_deadline_miss",
+                   "n_retries", "n_fallback_local", "n_dropped")
+
     # one sharded step vs unsharded
     u1, mu = E.step(state, params)
     s1, ms = E.step_sharded(sstate, sparams, mesh)
     for f in ("n_jobs", "n_violations", "n_offloading", "n_backpressured",
-              "n_outage", "n_straggler_updates", "backlog"):
+              "n_outage", "n_straggler_updates", "backlog") + ladder_ints:
         check(f"step/{f}", getattr(ms, f), getattr(mu, f), exact=True)
-    for f in ("total_accuracy", "worst_violation", "es_utilization"):
+    for f in ("total_accuracy", "worst_violation", "es_utilization",
+              "realized_makespan"):
         check(f"step/{f}", getattr(ms, f), getattr(mu, f), exact=False)
 
     # whole sharded rollout vs unsharded rollout
     uf, MU = E.rollout(state, params, periods)
     sf, MS = E.rollout_sharded(sstate, sparams, periods, mesh)
     for f in ("n_jobs", "n_violations", "n_offloading", "n_backpressured",
-              "n_outage", "backlog"):
+              "n_outage", "backlog") + ladder_ints:
         check(f"rollout/{f}", getattr(MS, f), getattr(MU, f), exact=True)
-    check("rollout/total_accuracy", MS.total_accuracy, MU.total_accuracy,
-          exact=False)
+    for f in ("total_accuracy", "realized_makespan"):
+        check(f"rollout/{f}", getattr(MS, f), getattr(MU, f), exact=False)
+    if chaos and int(np.asarray(MU.n_retries).sum()) \
+            + int(np.asarray(MU.n_fallback_local).sum()) \
+            + int(np.asarray(MU.n_dropped).sum()) == 0:
+        failures.append("chaos armed but the ladder never fired "
+                        "(vacuous parity)")
     check("final/warm_basis", sf.warm_basis, uf.warm_basis, exact=True)
     check("final/pending", sf.pending, uf.pending, exact=True)
     check("final/p_ed", sf.p_ed, uf.p_ed, exact=False)

@@ -67,6 +67,8 @@ import numpy as np
 
 from ..core.amr2 import build_lp_arrays_jnp, round_relaxation_jnp
 from ..core.dual import _dual_one
+from ..core.faults import (FaultModel, greedy_local_fill,
+                           realize_execution, sample_realization)
 from ..core.lp import _bucket_maxiter, simplex_batch_core
 from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED as
                             _ST_UNSOLVED, FleetProblem)
@@ -132,6 +134,11 @@ class EngineParams:
     outage: np.ndarray      # (D, H) bool, ES link down
     counts: np.ndarray      # (Hc, D) replayed arrival counts (replay mode)
     stream: np.ndarray      # (D, S) replayed class indices (replay mode)
+    # chaos: the fault distribution sampled inside the traced step (all
+    # float64 scalar leaves — sweeping fault rates reuses one compiled
+    # rollout).  Only consulted when the static ``chaos`` aux is True;
+    # the fault-free trace carries the leaves but never reads them.
+    faults: FaultModel = dataclasses.field(default_factory=FaultModel.none)
     # ---- static aux -----------------------------------------------------
     policy: str = "amr2"
     arrivals: str = "replay"
@@ -147,6 +154,15 @@ class EngineParams:
     # the PR-5 pins) or "revised" (reduced-tableau eta-factor path — the
     # 100k-lane memory/throughput shape; see core.lp.simplex_batch_core)
     lp_method: str = "tableau"
+    # chaos (static, so the fault-free trace is byte-identical to an
+    # engine without the fault subsystem): ``chaos`` arms the realized-
+    # execution pass, ``max_retries`` bounds the unrolled retry rounds of
+    # the degradation ladder, ``fault_seed`` seeds the replayed fault
+    # stream (independent of the arrival PRNG — arming chaos never
+    # perturbs arrivals)
+    chaos: bool = False
+    max_retries: int = 2
+    fault_seed: int = 0
 
     @property
     def n_devices(self) -> int:
@@ -170,7 +186,10 @@ class EngineParams:
                    frac_tol: float = 1e-4, iters: int = 40,
                    maxiter: Optional[int] = None,
                    tol: float = 1e-7,
-                   lp_method: str = "tableau") -> "EngineParams":
+                   lp_method: str = "tableau",
+                   faults: Optional[FaultModel] = None,
+                   max_retries: int = 2,
+                   fault_seed: int = 0) -> "EngineParams":
         """Build params from `DeviceSpec`s + a `RequestQueue` (the host
         engine's vocabulary).  Requires one shape group — every profile
         sharing a class table and model count — which is what
@@ -189,6 +208,8 @@ class EngineParams:
                              f"'tableau' or 'revised'")
         if horizon <= 0:
             raise ValueError("horizon must be positive")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
         qcls = np.asarray(queue.classes)
@@ -243,11 +264,14 @@ class EngineParams:
             rate=np.asarray(queue.rate, np.float64),
             class_probs=probs, drift=drift, outage=outage,
             counts=counts.astype(np.int32), stream=stream,
+            faults=faults if faults is not None else FaultModel.none(),
             policy=policy, arrivals=arrivals, n_servers=n_servers,
             batch_max=queue.batch_max,
             straggler_threshold=straggler_threshold, ema=ema,
             frac_tol=frac_tol, iters=iters, maxiter=maxiter, tol=tol,
-            lp_method=lp_method)
+            lp_method=lp_method,
+            chaos=faults is not None and not faults.is_null(),
+            max_retries=max_retries, fault_seed=fault_seed)
 
     @classmethod
     def from_config(cls, config, *, horizon: Optional[int] = None,
@@ -265,7 +289,24 @@ class EngineParams:
             policy=policy if policy is not None else config.policy,
             horizon=horizon, arrivals=arrivals,
             straggler_threshold=config.straggler_threshold, ema=config.ema,
-            lp_method=lp_method)
+            lp_method=lp_method,
+            faults=getattr(config, "faults", None),
+            max_retries=getattr(config, "max_retries", 2),
+            fault_seed=getattr(config, "fault_seed", 0))
+
+    def with_faults(self, faults: Optional[FaultModel], *,
+                    max_retries: Optional[int] = None,
+                    fault_seed: Optional[int] = None) -> "EngineParams":
+        """Arm (or disarm, with ``None``/`FaultModel.none()`) chaos on an
+        existing params value, keeping the static ``chaos`` flag
+        consistent with the model's nullness."""
+        fm = faults if faults is not None else FaultModel.none()
+        return dataclasses.replace(
+            self, faults=fm, chaos=not fm.is_null(),
+            max_retries=(self.max_retries if max_retries is None
+                         else max_retries),
+            fault_seed=(self.fault_seed if fault_seed is None
+                        else fault_seed))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -304,16 +345,31 @@ class PeriodMetrics:
     n_unsolved: jnp.ndarray
     es_utilization: jnp.ndarray
     backlog: jnp.ndarray
+    # realized execution (the chaos subsystem, serving.faults): admitted
+    # offloaded samples and how each one resolved — the per-period
+    # accounting identity ``n_offload_samples == n_offload_ok +
+    # n_fallback_local + n_dropped`` holds by construction.  With chaos
+    # off, the ladder counters are exact zeros, ``n_offload_ok ==
+    # n_offload_samples``, and ``realized_makespan`` equals the priced
+    # fleet makespan.
+    n_offload_samples: jnp.ndarray
+    n_offload_ok: jnp.ndarray
+    n_deadline_miss: jnp.ndarray
+    n_retries: jnp.ndarray
+    n_fallback_local: jnp.ndarray
+    n_dropped: jnp.ndarray
+    realized_makespan: jnp.ndarray
 
 
 _STATE_FIELDS = ("period", "key", "p_ed", "pending", "head", "warm_basis",
                  "n_updates")
 _METRIC_FIELDS = tuple(f.name for f in dataclasses.fields(PeriodMetrics))
 _PARAM_LEAVES = ("classes", "base_p_ed", "p_es", "acc", "T", "rate",
-                 "class_probs", "drift", "outage", "counts", "stream")
+                 "class_probs", "drift", "outage", "counts", "stream",
+                 "faults")
 _PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
               "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
-              "tol", "lp_method")
+              "tol", "lp_method", "chaos", "max_retries", "fault_seed")
 
 _register(EngineParams, _PARAM_LEAVES, _PARAM_AUX)
 _register(EngineState, _STATE_FIELDS)
@@ -426,8 +482,29 @@ def _plan_flat(params: EngineParams, fp: FleetProblem, warm_basis,
     return assign.astype(jnp.int32), st.astype(jnp.int32), basis
 
 
+def _recover_unsolved(assign, unsolved, p_ed_jobs, mask, acc, T):
+    """Greedy local-only recovery for ``unsolved`` lanes: a lane whose
+    simplex hit the iteration cap (or went unbounded) used to ship a
+    best-effort argmax rounding that could oversubscribe the ES pool and
+    poison the whole period's admission; instead, re-assign its samples
+    with the same greedy masked-argmax fill the degradation ladder uses
+    (largest local model fitting the residual budget, job order), and
+    give no-fit samples the fastest local model (the infeasible-rounding
+    convention).  Solved lanes pass through untouched (`jnp.where`), so
+    unsolved-free periods are bitwise-unchanged.  The lane still counts
+    in ``n_unsolved`` — recovery is damage control, not certification."""
+    D, _n, m = p_ed_jobs.shape
+    eligible = unsolved[:, None] & mask
+    choice, fit, _ = greedy_local_fill(
+        p_ed_jobs, acc[:, :m], jnp.broadcast_to(T, (D,)), eligible)
+    cheapest = jnp.argmin(p_ed_jobs, axis=2).astype(jnp.int32)
+    local = jnp.where(fit, choice, cheapest)
+    return jnp.where(eligible, local, assign).astype(jnp.int32)
+
+
 def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
-                 params: EngineParams, axis_name: Optional[str] = None):
+                 params: EngineParams, axis_name: Optional[str] = None,
+                 fault_key=None):
     """The pure period core shared by `step`, the sharded step, and the
     host `FleetEngine.run_period` delegation: everything AFTER arrivals
     (the released job-class indices ``ci`` (D, n) + counts ``take`` (D,))
@@ -460,7 +537,13 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
 
     # ---- plan the whole (local) fleet in one traced solve ---------------
     assign, status, basis = _plan(params, fp, warm_basis)
-    n_unsolved = (status == _ST_UNSOLVED).astype(jnp.int32)
+    unsolved_lane = status == _ST_UNSOLVED
+    n_unsolved = unsolved_lane.astype(jnp.int32)
+    # per-lane recovery: unsolved lanes fall back to a greedy local-only
+    # plan (no ES demand) instead of racing uncertified roundings into
+    # the admission scan
+    assign = _recover_unsolved(assign, unsolved_lane, p_ed_jobs, mask,
+                               params.acc, params.T)
 
     # ---- ES-pool admission on the GLOBAL demand vector ------------------
     demand = jnp.where(mask & (assign == m), p_es_jobs, 0.0).sum(axis=1)
@@ -491,8 +574,12 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         assign_bp, st_bp, _ = _plan(
             params, fp_bp, None,
             lane_mask=bumped if params.policy == "amr2" else None)
-        unsolved_bp = (bumped & (st_bp == _ST_UNSOLVED)).astype(jnp.int32)
-        return jnp.where(bumped[:, None], assign_bp, assign), unsolved_bp
+        unsolved_bp_lane = bumped & (st_bp == _ST_UNSOLVED)
+        assign_bp = _recover_unsolved(assign_bp, unsolved_bp_lane,
+                                      p_ed_jobs, mask, params.acc,
+                                      params.T)
+        return (jnp.where(bumped[:, None], assign_bp, assign),
+                unsolved_bp_lane.astype(jnp.int32))
 
     assign, unsolved_bp = jax.lax.cond(
         bumped.any(), _replan,
@@ -509,7 +596,6 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         return jax.lax.pmax(v, axis_name) if axis_name else v
 
     acc_jobs = params.acc[rows, assign]
-    total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
     n_jobs = _sum(mask.astype(jnp.int32))
 
     on_ed = mask & (assign < m)
@@ -521,10 +607,50 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         on_ed, jnp.take_along_axis(base_jobs, picked, axis=2)[..., 0],
         0.0).sum(axis=1) * drift_t
     es_wall = jnp.where(admitted, demand, 0.0)
-    wall = jnp.maximum(ed_wall, es_wall)
+    es_samp = mask & (assign == m)       # admitted offloads (post-replan)
+
+    # ---- realized execution (chaos): inject faults, walk the ladder -----
+    # `params.chaos` is static aux, so the fault-free trace below is the
+    # byte-identical pre-chaos graph; armed with a zero-rate FaultModel,
+    # every factor is exactly 1.0 / every mask empty, and the realized
+    # quantities reproduce the priced ones bit for bit.
+    if params.chaos:
+        real = sample_realization(fault_key, params.faults, D, n,
+                                  params.max_retries + 1,
+                                  axis_name=axis_name)
+        lat_local = base_jobs * (drift_t * real.straggler_factor
+                                 )[:, None, None]
+        rx = realize_execution(
+            params.faults, real, mask=mask, es_samp=es_samp,
+            acc_jobs=acc_jobs, p_es_jobs=p_es_jobs, ed_wall=ed_wall,
+            lat_local=lat_local, acc=params.acc, T=params.T,
+            max_retries=params.max_retries)
+        total_acc = _sum(jnp.where(mask, rx.acc, 0.0))
+        wall = rx.wall
+        ed_audit = rx.ed_audit       # excl. fallback compute: the audit
+        #                              tracks per-op slowdown, not load
+        ladder = {
+            "n_offload_samples": _sum(rx.n_offload),
+            "n_offload_ok": _sum(rx.n_offload_ok),
+            "n_deadline_miss": _sum(rx.n_deadline_miss),
+            "n_retries": _sum(rx.n_retries),
+            "n_fallback_local": _sum(rx.n_fallback_local),
+            "n_dropped": _sum(rx.n_dropped),
+        }
+    else:
+        total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
+        wall = jnp.maximum(ed_wall, es_wall)
+        ed_audit = ed_wall
+        n_off = _sum(es_samp.astype(jnp.int32))
+        zero = jnp.zeros((), jnp.int32)
+        ladder = {
+            "n_offload_samples": n_off, "n_offload_ok": n_off,
+            "n_deadline_miss": zero, "n_retries": zero,
+            "n_fallback_local": zero, "n_dropped": zero,
+        }
     viol = jnp.maximum(0.0, wall / params.T - 1.0)
 
-    ratio = ed_wall / jnp.maximum(ed_pred, 1e-9)
+    ratio = ed_audit / jnp.maximum(ed_pred, 1e-9)
     upd = (ed_pred > 0) & (ratio > params.straggler_threshold)
     factor = (1.0 - params.ema) + params.ema * ratio
     new_belief = jnp.where(upd[:, None, None],
@@ -543,6 +669,8 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         "n_straggler_updates": _sum(upd.astype(jnp.int32)),
         "n_unsolved": _sum(n_unsolved),
         "es_utilization": jnp.sum(loads) / (params.n_servers * params.T),
+        "realized_makespan": _max(wall),
+        **ladder,
     }
     return new_belief, new_warm.astype(jnp.int32), upd, factor, metrics
 
@@ -603,9 +731,15 @@ def _step_impl(state: EngineState, params: EngineParams,
     stale = (t > 0) & (outage_prev != outage_t)
     warm0 = jnp.where(stale[:, None], jnp.int32(-1), state.warm_basis)
     ci, take, pending, head, key = _arrivals(state, params, axis_name)
+    # the fault stream is replayed — folded from a dedicated seed, never
+    # drawn from state.key — so arming chaos leaves the arrival (and
+    # fault-free metric) trajectory bitwise-untouched, and the host
+    # delegation can reproduce the exact same draw per period
+    fkey = (jax.random.fold_in(jax.random.PRNGKey(params.fault_seed), t)
+            if params.chaos else None)
     new_belief, new_warm, upd, _factor, m = _period_impl(
         state.p_ed, warm0, ci, take, drift_t, outage_t, params,
-        axis_name=axis_name)
+        axis_name=axis_name, fault_key=fkey)
     backlog = jnp.sum(pending)
     if axis_name:
         backlog = jax.lax.psum(backlog, axis_name)
@@ -628,12 +762,16 @@ def _step_jit(state, params):
 
 
 @jax.jit
-def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params):
+def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params,
+                fault_key=None):
     """The host `FleetEngine.run_period` delegation target: the same
     period core `step` scans over, minus the arrival/state bookkeeping
-    (the host engine owns its queue and stats)."""
+    (the host engine owns its queue and stats).  ``fault_key`` replays
+    one period of the fault stream (`fold_in(PRNGKey(fault_seed),
+    period)` — the exact draw `step` makes), or None when chaos is
+    disarmed."""
     return _period_impl(belief, warm_basis, ci, take, drift_t, outage_t,
-                        params)
+                        params, fault_key=fault_key)
 
 
 def _rollout_impl(state, params, periods: int):
@@ -662,6 +800,9 @@ def _require_f64(tag: str, tree) -> None:
     bit-parity guarantees, so fail with the leaf's path instead."""
     for f in dataclasses.fields(tree):
         leaf = getattr(tree, f.name)
+        if dataclasses.is_dataclass(leaf) and not isinstance(leaf, type):
+            _require_f64(f"{tag}.{f.name}", leaf)   # e.g. params.faults
+            continue
         dt = getattr(leaf, "dtype", None)
         if (dt is not None and jnp.issubdtype(dt, jnp.floating)
                 and dt != jnp.float64):
@@ -746,10 +887,12 @@ def _param_specs(params: EngineParams):
     along so tree_map/shard_map can pair specs with leaves)."""
     from jax.sharding import PartitionSpec as P
     dev = P(FLEET_AXIS)
+    fault_specs = FaultModel(
+        **{f.name: P() for f in dataclasses.fields(FaultModel)})
     return dataclasses.replace(
         params, classes=P(), base_p_ed=dev, p_es=dev, acc=dev, T=P(),
         rate=dev, class_probs=P(), drift=dev, outage=dev,
-        counts=P(None, FLEET_AXIS), stream=dev)
+        counts=P(None, FLEET_AXIS), stream=dev, faults=fault_specs)
 
 
 def _metric_specs():

@@ -1,0 +1,317 @@
+"""Traced fault injection + the graceful-degradation ladder.
+
+The paper's AMR^2 guarantee (makespan <= 2T, accuracy within a constant of
+optimal) assumes the plan executes as priced: the ES is up, links deliver
+at the estimated rate, every offloaded sample returns in time.  The
+engine's `drift`/`outage` schedules model only faults the planner can see
+*in advance*; this module injects the mid-period surprises it cannot —
+an ES crash after admission, link degradation during transmission,
+straggler EDs, per-sample offload loss — and resolves them with a
+deterministic degradation ladder, all as pure traced array ops so chaos
+runs *inside* the one-`lax.scan` `rollout()` at full fleet throughput.
+
+Vocabulary
+----------
+``FaultModel``
+    A pytree of float64 scalars describing the fault distribution.  All
+    leaves, no static aux, so swapping fault rates never retriggers a jit
+    trace.  ``FaultModel.none()`` is the all-zero model; the engine keeps
+    the chaos code path out of the trace entirely when it is null (the
+    fault-free rollout is bitwise-identical to an engine without this
+    module).
+``sample_realization(key, fm, ...)``
+    One period's concrete fault draw (`FaultRealization`).  The key is a
+    *replayed* stream — `fold_in(PRNGKey(fault_seed), period)` — separate
+    from the engine's arrival PRNG, so arming chaos never perturbs the
+    arrival trajectory.  Per-device draws fold in the GLOBAL device id,
+    so sharded and unsharded realizations agree (the `_arrivals` idiom).
+``realize_execution(...)``
+    The realized-execution pass: realized latencies diverge from the
+    priced estimates under the drawn faults, failed offloads walk the
+    ladder, and per-sample realized accuracies + deadline hits/misses
+    come back as per-device counters the engine psum-reduces.
+
+The degradation ladder (per offloaded sample)
+---------------------------------------------
+1. **Retry** with capped exponential backoff: up to ``max_retries``
+   statically-unrolled masked rounds (no `lax.while_loop` — the trace
+   stays scan/shard-compatible).  Round ``k`` costs one device-level
+   backoff ``min(backoff_base * 2**(k-1), backoff_cap)`` plus the
+   retransmission of every still-lost sample at the degraded link rate.
+   A device only opens round ``k`` while its realized ES time is still
+   under ``2T`` (the paper's makespan guarantee), so by construction the
+   realized ES time never exceeds
+   ``2T + backoff_cap + admitted_demand * link_factor``.
+   An ES crash skips retries outright — the pool is down, retrying
+   cannot help — and sends every offloaded sample straight to rung 2.
+2. **Fall back locally**: the largest (max-accuracy) local model that
+   still fits the device's residual deadline ``max(0, 2T - realized ED
+   time)``, a greedy masked-argmax fill in job order over the realized
+   per-device latency tables (`greedy_local_fill`).
+3. **Drop**: accuracy 0, counted in ``n_dropped`` — never silently lost:
+   ``n_offload_samples == n_offload_ok + n_fallback_local + n_dropped``
+   holds per period by construction.
+
+Everything is deterministic under a fixed key: same key + same model →
+the same realization, the same ladder outcome, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultModel", "FaultRealization", "RealizedExecution",
+    "sample_realization", "greedy_local_fill", "realize_execution",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-period fault distribution (pytree; every field is a float64
+    scalar leaf — no static aux, so sweeping fault rates reuses one
+    compiled rollout).
+
+    Probabilities are per period: ``es_crash_prob`` for the whole pool
+    (one Bernoulli draw, shared across shards), ``link_degrade_prob`` /
+    ``straggler_prob`` per device, ``loss_rate`` per offloaded sample
+    *per attempt* (so the chance a sample survives no attempt is
+    ``loss_rate ** (max_retries + 1)`` — retries flatten the loss cliff).
+    """
+
+    es_crash_prob: np.ndarray       # () P[ES pool crashes mid-period]
+    link_degrade_prob: np.ndarray   # () P[a device's link degrades]
+    link_degrade_mag: np.ndarray    # () max extra slowdown (factor 1+mag*U)
+    straggler_prob: np.ndarray      # () P[a device straggles this period]
+    straggler_mult: np.ndarray      # () ED slowdown factor when straggling
+    loss_rate: np.ndarray           # () P[an offload attempt is lost]
+    backoff_base: np.ndarray        # () first-retry backoff (seconds)
+    backoff_cap: np.ndarray         # () max per-round backoff (seconds)
+
+    @classmethod
+    def none(cls) -> "FaultModel":
+        """The all-zero model: chaos disarmed, bitwise-invisible."""
+        z = np.float64(0.0)
+        return cls(es_crash_prob=z, link_degrade_prob=z,
+                   link_degrade_mag=z, straggler_prob=z,
+                   straggler_mult=np.float64(1.0), loss_rate=z,
+                   backoff_base=z, backoff_cap=z)
+
+    @classmethod
+    def make(cls, *, es_crash_prob: float = 0.0,
+             link_degrade_prob: float = 0.0, link_degrade_mag: float = 0.0,
+             straggler_prob: float = 0.0, straggler_mult: float = 1.0,
+             loss_rate: float = 0.0, backoff_base: float = 0.02,
+             backoff_cap: float = 0.25) -> "FaultModel":
+        """Keyword constructor with float64 coercion (the engine is
+        float64-only) and range validation."""
+        for name, v, lo, hi in (
+                ("es_crash_prob", es_crash_prob, 0.0, 1.0),
+                ("link_degrade_prob", link_degrade_prob, 0.0, 1.0),
+                ("straggler_prob", straggler_prob, 0.0, 1.0),
+                ("loss_rate", loss_rate, 0.0, 1.0)):
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} must be in [{lo}, {hi}]")
+        if link_degrade_mag < 0:
+            raise ValueError("link_degrade_mag must be >= 0")
+        if straggler_mult < 1.0:
+            raise ValueError("straggler_mult must be >= 1 (a slowdown)")
+        if backoff_base < 0 or backoff_cap < 0:
+            raise ValueError("backoff_base/backoff_cap must be >= 0")
+        return cls(es_crash_prob=np.float64(es_crash_prob),
+                   link_degrade_prob=np.float64(link_degrade_prob),
+                   link_degrade_mag=np.float64(link_degrade_mag),
+                   straggler_prob=np.float64(straggler_prob),
+                   straggler_mult=np.float64(straggler_mult),
+                   loss_rate=np.float64(loss_rate),
+                   backoff_base=np.float64(backoff_base),
+                   backoff_cap=np.float64(backoff_cap))
+
+    def is_null(self) -> bool:
+        """Host-side: no fault can ever fire under this model (the engine
+        uses this to keep chaos out of the trace entirely)."""
+        return (float(self.es_crash_prob) == 0.0
+                and float(self.link_degrade_prob) == 0.0
+                and float(self.straggler_prob) == 0.0
+                and float(self.loss_rate) == 0.0)
+
+
+_FAULT_FIELDS = tuple(f.name for f in dataclasses.fields(FaultModel))
+
+
+def _fault_unflatten(aux, children):
+    # bypass __init__ so tracers survive the round-trip (the `_register`
+    # idiom in repro.api.engine)
+    obj = object.__new__(FaultModel)
+    for f, v in zip(_FAULT_FIELDS, children):
+        object.__setattr__(obj, f, v)
+    return obj
+
+
+jax.tree_util.register_pytree_node(
+    FaultModel,
+    lambda fm: (tuple(getattr(fm, f) for f in _FAULT_FIELDS), None),
+    _fault_unflatten)
+
+
+class FaultRealization(NamedTuple):
+    """One period's concrete fault draw."""
+
+    es_crash: jnp.ndarray          # ()   bool — pool down mid-period
+    link_factor: jnp.ndarray       # (D,) ES-transmission slowdown (>= 1)
+    straggler_factor: jnp.ndarray  # (D,) ED slowdown (>= 1)
+    lost: jnp.ndarray              # (D, n, A) per-attempt offload loss
+
+
+class RealizedExecution(NamedTuple):
+    """Realized walls, per-sample accuracy, and ladder counters — every
+    counter is per-device so the engine's psum reductions apply."""
+
+    acc: jnp.ndarray               # (D, n) realized per-sample accuracy
+    ed_wall: jnp.ndarray           # (D,) realized ED time incl. fallback
+    ed_audit: jnp.ndarray          # (D,) realized ED time excl. fallback
+    es_wall: jnp.ndarray           # (D,) realized ES time incl. retries
+    wall: jnp.ndarray              # (D,) realized device makespan
+    n_offload: jnp.ndarray         # (D,) int32 admitted offloaded samples
+    n_offload_ok: jnp.ndarray      # (D,) int32 completed via ES
+    n_retries: jnp.ndarray         # (D,) int32 retry attempts
+    n_fallback_local: jnp.ndarray  # (D,) int32 rung-2 local completions
+    n_dropped: jnp.ndarray         # (D,) int32 rung-3 drops
+    n_deadline_miss: jnp.ndarray   # (D,) int32 samples past the 2T bound
+
+
+def sample_realization(key, fm: FaultModel, n_devices: int, n_jobs: int,
+                       max_attempts: int,
+                       axis_name: Optional[str] = None
+                       ) -> FaultRealization:
+    """Draw one period's faults from a replayed key.
+
+    ``key`` must come from a stream independent of the engine's arrival
+    PRNG (the engine folds a dedicated ``fault_seed`` by period), so the
+    fault-free trajectory is untouched by arming chaos.  The pool-crash
+    draw uses the replicated key directly — every shard sees the same
+    crash — while device-level draws fold in the *global* device id, so
+    an 8-shard and an unsharded run realize identical faults.
+    """
+    D, n = n_devices, n_jobs
+    k_crash, k_dev = jax.random.split(key)
+    es_crash = jax.random.bernoulli(k_crash, fm.es_crash_prob)
+    offset = (jax.lax.axis_index(axis_name) * D if axis_name
+              else jnp.int32(0))
+    gid = offset + jnp.arange(D, dtype=jnp.int32)
+    kd = jax.vmap(lambda g: jax.random.fold_in(k_dev, g))(gid)
+
+    def _one_device(k):
+        k_link, k_mag, k_strag, k_loss = jax.random.split(k, 4)
+        u_link = jax.random.uniform(k_link, dtype=jnp.float64)
+        u_mag = jax.random.uniform(k_mag, dtype=jnp.float64)
+        u_strag = jax.random.uniform(k_strag, dtype=jnp.float64)
+        u_loss = jax.random.uniform(k_loss, (n, max_attempts),
+                                    dtype=jnp.float64)
+        link = jnp.where(u_link < fm.link_degrade_prob,
+                         1.0 + fm.link_degrade_mag * u_mag, 1.0)
+        strag = jnp.where(u_strag < fm.straggler_prob,
+                          fm.straggler_mult, 1.0)
+        lost = u_loss < fm.loss_rate
+        return link, strag, lost
+
+    link_factor, straggler_factor, lost = jax.vmap(_one_device)(kd)
+    return FaultRealization(es_crash=es_crash, link_factor=link_factor,
+                            straggler_factor=straggler_factor, lost=lost)
+
+
+def greedy_local_fill(lat_jobs, acc_local, budget, eligible):
+    """Greedy local-only fill: for each eligible sample, in job order,
+    pick the max-accuracy local model whose latency still fits the
+    device's residual budget, and spend it.
+
+    ``lat_jobs`` (D, n, m) per-sample local-model latencies, ``acc_local``
+    (D, m) local accuracies, ``budget`` (D,) or scalar seconds,
+    ``eligible`` (D, n) bool.  Returns ``(choice (D, n) int32 — model
+    index, m = nothing fits —, fit (D, n) bool, time_used (D,))``.
+    Argmax ties break to the lowest model index; job order (not
+    accuracy order) keeps the scan one pass and deterministic.  Used for
+    rung 2 of the ladder and for recovering `unsolved` LP lanes.
+    """
+    D, n, m = lat_jobs.shape
+    res0 = jnp.broadcast_to(jnp.asarray(budget, jnp.float64), (D,))
+
+    def body(res, xs):
+        lat_j, elig_j = xs                      # (D, m), (D,)
+        fits = lat_j <= res[:, None] + 1e-12
+        score = jnp.where(fits, acc_local, -jnp.inf)
+        pick = jnp.argmax(score, axis=1)
+        any_fit = fits.any(axis=1)
+        take = elig_j & any_fit
+        spend = jnp.where(take, lat_j[jnp.arange(D), pick], 0.0)
+        choice = jnp.where(take, pick, m).astype(jnp.int32)
+        return res - spend, (choice, take)
+
+    res, (choice, fit) = jax.lax.scan(
+        body, res0, (jnp.moveaxis(lat_jobs, 1, 0),
+                     jnp.moveaxis(eligible, 1, 0)))
+    return (jnp.moveaxis(choice, 1, 0), jnp.moveaxis(fit, 1, 0),
+            res0 - res)
+
+
+def realize_execution(fm: FaultModel, real: FaultRealization, *,
+                      mask, es_samp, acc_jobs, p_es_jobs, ed_wall,
+                      lat_local, acc, T, max_retries: int
+                      ) -> RealizedExecution:
+    """Replay the plan through one period's fault realization and walk
+    the degradation ladder for every failed offload.
+
+    ``mask`` (D, n) real samples, ``es_samp`` (D, n) admitted offloaded
+    samples, ``acc_jobs`` (D, n) planned per-sample accuracies,
+    ``p_es_jobs`` (D, n) priced per-sample ES seconds, ``ed_wall`` (D,)
+    the nominal (pre-straggler) realized ED time, ``lat_local``
+    (D, n, m) *realized* local-model latencies (base x drift x injected
+    straggler), ``acc`` (D, m+1) accuracy tables, ``T`` the period
+    budget.  All zeros / identity factors reproduce the priced execution
+    bit for bit (`x * 1.0` and `x + 0.0` are exact in float64).
+    """
+    D, n, m = lat_local.shape
+    deadline = 2.0 * T                     # the paper's AMR^2 guarantee
+    link = real.link_factor
+    es_cost = jnp.where(es_samp, p_es_jobs, 0.0)        # priced seconds
+    es_time = es_cost.sum(axis=1) * link                # first attempt
+    failed = es_samp & (real.lost[:, :, 0] | real.es_crash)
+    n_retries = jnp.zeros(D, jnp.int32)
+    for k in range(1, max_retries + 1):
+        backoff = jnp.minimum(fm.backoff_base * (2.0 ** (k - 1)),
+                              fm.backoff_cap)
+        can = (~real.es_crash) & (es_time < deadline) & failed.any(axis=1)
+        attempt = failed & can[:, None]
+        resend = jnp.where(attempt, es_cost, 0.0).sum(axis=1) * link
+        es_time = es_time + jnp.where(can, backoff + resend, 0.0)
+        n_retries = n_retries + attempt.sum(axis=1).astype(jnp.int32)
+        failed = jnp.where(attempt, real.lost[:, :, k], failed)
+
+    ed_real = ed_wall * real.straggler_factor
+    residual = jnp.maximum(0.0, deadline - ed_real)
+    choice, fit, fb_time = greedy_local_fill(lat_local, acc[:, :m],
+                                             residual, failed)
+    dropped = failed & ~fit
+    ed_final = ed_real + fb_time
+    ok_off = es_samp & ~failed
+
+    acc_real = jnp.where(fit, acc[jnp.arange(D)[:, None],
+                                  jnp.clip(choice, 0, m - 1)], acc_jobs)
+    acc_real = jnp.where(dropped, 0.0, acc_real)
+
+    on_ed = mask & ~es_samp
+    late_ed = (ed_final > deadline)[:, None]
+    late_es = (es_time > deadline)[:, None]
+    miss = dropped | ((on_ed | fit) & late_ed) | (ok_off & late_es)
+
+    count = lambda b: b.sum(axis=1).astype(jnp.int32)
+    return RealizedExecution(
+        acc=acc_real, ed_wall=ed_final, ed_audit=ed_real, es_wall=es_time,
+        wall=jnp.maximum(ed_final, es_time),
+        n_offload=count(es_samp), n_offload_ok=count(ok_off),
+        n_retries=n_retries, n_fallback_local=count(fit),
+        n_dropped=count(dropped), n_deadline_miss=count(miss))

@@ -8,12 +8,15 @@ from .profile import (TierProfile, measure_profiles, measure_latency,
                       comm_time, roofline_profile)
 from .planner import (FleetPlan, Plan, plan, plan_batch, plan_batch_arrays,
                       replan_without_es, replan_without_es_batch)
-from .executor import ExecutionReport, execute
+from .executor import (EXEC_DROPPED, EXEC_FALLBACK_LOCAL, EXEC_OK_ED,
+                       EXEC_OK_ES, ExecutionReport, execute)
 from .runtime import ServingRuntime, PeriodStats, audit_profile
 from .queue import RequestQueue
 from .fleet import (DeviceSpec, EdgeServerPool, FleetConfig, FleetEngine,
-                    FleetPeriodStats, make_fleet, paper_style_profile,
-                    roofline_style_profile)
+                    FleetPeriodStats, UnsolvedPeriodError, make_fleet,
+                    paper_style_profile, roofline_style_profile)
+from .faults import (FaultModel, FaultRealization, greedy_local_fill,
+                     realize_execution, sample_realization)
 from . import engine_v2  # pure-functional EngineState/step/rollout/shard
 
 __all__ = [
@@ -25,12 +28,16 @@ __all__ = [
     "replan_without_es", "replan_without_es_batch",
     # execution + single-device runtime
     "ExecutionReport", "execute",
+    "EXEC_OK_ED", "EXEC_OK_ES", "EXEC_FALLBACK_LOCAL", "EXEC_DROPPED",
     "ServingRuntime", "PeriodStats", "audit_profile",
     # traffic + fleet engine
     "RequestQueue",
     "DeviceSpec", "EdgeServerPool", "FleetConfig", "FleetEngine",
-    "FleetPeriodStats", "make_fleet", "paper_style_profile",
-    "roofline_style_profile",
+    "FleetPeriodStats", "UnsolvedPeriodError", "make_fleet",
+    "paper_style_profile", "roofline_style_profile",
+    # chaos: fault injection + the degradation ladder
+    "FaultModel", "FaultRealization", "sample_realization",
+    "greedy_local_fill", "realize_execution",
     # pure-functional engine (EngineState pytree + step/rollout/shard)
     "engine_v2",
 ]

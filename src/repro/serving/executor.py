@@ -21,6 +21,17 @@ import numpy as np
 
 from ..api import Problem, solve
 
+# per-sample execution status codes (ExecutionReport.status).  A sample
+# starts DROPPED and is promoted as its result lands, so a short apply-fn
+# output (or a job no tier ever ran) is *visible* in the report instead
+# of silently missing from `results` — consistent with the fleet engine's
+# `n_dropped` ladder metric.
+EXEC_OK_ED = 0           # completed on the planned ED-ladder model
+EXEC_OK_ES = 1           # completed on the ES tier
+EXEC_FALLBACK_LOCAL = 2  # ES failed; completed via the ED-only replan
+EXEC_DROPPED = 3         # no tier produced a result for this sample
+EXEC_STATUS_NAMES = ("ok_ed", "ok_es", "fallback_local", "dropped")
+
 
 @dataclasses.dataclass
 class ExecutionReport:
@@ -29,10 +40,21 @@ class ExecutionReport:
     es_wall: float
     results: Dict[int, object]
     replanned: bool = False
+    # (n,) int32 EXEC_* code per sample; None only for reports built by
+    # legacy callers that never ran `execute`
+    status: Optional[np.ndarray] = None
 
     @property
     def wall_makespan(self) -> float:
         return max(self.ed_wall, self.es_wall)
+
+    @property
+    def n_dropped(self) -> int:
+        """Samples that fell through execution with no result — the
+        audit-facing count (0 when every job landed)."""
+        if self.status is None:
+            return 0
+        return int((self.status == EXEC_DROPPED).sum())
 
 
 def _instance_of(plan_):
@@ -58,6 +80,15 @@ def execute(plan_, apply_ed: List[Callable], apply_es: Callable,
     ed_wall = 0.0
     es_wall = 0.0
     replanned = False
+    # every sample starts DROPPED; landing a result promotes it (a short
+    # apply-fn output leaves its tail samples visibly dropped)
+    status = np.full(len(jobs), EXEC_DROPPED, dtype=np.int32)
+
+    def _land(ids, out, code):
+        nonlocal results
+        for j, r in zip(ids, out):
+            results[int(j)] = r
+            status[int(j)] = code
 
     es_ids = plan_.per_model.get(m, np.array([], np.int64))
     if len(es_ids):
@@ -74,16 +105,14 @@ def execute(plan_, apply_ed: List[Callable], apply_es: Callable,
                     t0 = time.perf_counter()
                     out = apply_ed[i]([jobs[j] for j in ids])
                     ed_wall += time.perf_counter() - t0
-                    for j, r in zip(ids, out):
-                        results[int(j)] = r
+                    _land(ids, out, EXEC_FALLBACK_LOCAL)
         else:
             if comm_simulator is not None:
                 es_wall += comm_simulator(es_ids)
             t0 = time.perf_counter()
             out = apply_es([jobs[j] for j in es_ids])
             es_wall += time.perf_counter() - t0
-            for j, r in zip(es_ids, out):
-                results[int(j)] = r
+            _land(es_ids, out, EXEC_OK_ES)
 
     for i in range(m):
         ids = plan_.per_model.get(i, np.array([], np.int64))
@@ -91,10 +120,9 @@ def execute(plan_, apply_ed: List[Callable], apply_es: Callable,
             t0 = time.perf_counter()
             out = apply_ed[i]([jobs[j] for j in ids])
             ed_wall += time.perf_counter() - t0
-            for j, r in zip(ids, out):
-                results[int(j)] = r
+            _land(ids, out, EXEC_OK_ED)
 
     return ExecutionReport(
         predicted_makespan=_predicted_makespan(plan_),
         ed_wall=ed_wall, es_wall=es_wall, results=results,
-        replanned=replanned)
+        replanned=replanned, status=status)

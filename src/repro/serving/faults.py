@@ -1,0 +1,26 @@
+"""`repro.serving.faults` — the serving-layer name for the traced fault
+model and degradation ladder.
+
+The implementation lives in `repro.core.faults` (it is pure-numerics
+territory: the ladder is array math over the same latency tables
+`core.amr2`/`core.lp` price, with no serving dependencies — which also
+keeps `repro.api.engine`, which consumes it inside the traced period
+step, free of an import cycle through this package).  This module
+re-exports it under the serving namespace so chaos config reads
+naturally next to `FleetEngine` (the `engine_v2` idiom):
+
+    from repro.serving import faults
+    fm = faults.FaultModel.make(loss_rate=0.1, straggler_prob=0.05)
+    eng = FleetEngine.from_config(dataclasses.replace(cfg, faults=fm))
+
+`FaultModel.none()` is the all-zero model; a rollout carrying it is
+bitwise-identical to one with chaos disarmed.
+"""
+from ..core.faults import (FaultModel, FaultRealization, RealizedExecution,
+                           greedy_local_fill, realize_execution,
+                           sample_realization)
+
+__all__ = [
+    "FaultModel", "FaultRealization", "RealizedExecution",
+    "sample_realization", "greedy_local_fill", "realize_execution",
+]

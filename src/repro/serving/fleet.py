@@ -44,11 +44,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..api import solve, solve_many
+from ..core.faults import FaultModel
 from ..core.instances import (PAPER_ACC, PAPER_COMM, PAPER_P_ED,
                               PAPER_P_ES_PROC)
 from ..core.problem import ES_DISABLED_SENTINEL, FleetProblem, Problem
@@ -60,6 +62,27 @@ from .runtime import audit_profile
 # ES-link down: uniform huge p_es, the same sentinel the api's es_disabled
 # path applies to real jobs
 _OUTAGE_ES = ES_DISABLED_SENTINEL
+
+
+class UnsolvedPeriodError(RuntimeError):
+    """A period's LP left ``n_unsolved`` lanes uncertified under
+    ``strict="raise"``.
+
+    Carries the failing ``period`` index and ``partial_stats`` — every
+    `FleetPeriodStats` the engine completed *before* the failure — so a
+    multi-period `run()` no longer discards the whole trajectory when one
+    late period trips the iteration cap.  (`FleetEngine.history` holds
+    the same records; the exception copies them for callers that lost
+    the engine reference.)  The traced core has already re-planned the
+    unsolved lanes with the greedy local-only fallback, so
+    ``strict="warn"`` can book the period and continue instead."""
+
+    def __init__(self, message: str, *, period: int, n_unsolved: int,
+                 partial_stats: List["FleetPeriodStats"]):
+        super().__init__(message)
+        self.period = period
+        self.n_unsolved = n_unsolved
+        self.partial_stats = partial_stats
 
 
 @dataclasses.dataclass
@@ -148,6 +171,16 @@ class FleetPeriodStats:
     n_straggler_updates: int
     es_utilization: float       # admitted demand / (n_servers * T)
     backlog: int                # jobs still queued after this period
+    # realized execution (chaos; see repro.serving.faults) — fault-free
+    # periods report n_offload_ok == n_offload_samples, zero ladder
+    # counters, and realized_makespan == the priced fleet makespan
+    n_offload_samples: int = 0  # admitted offloaded samples this period
+    n_offload_ok: int = 0       # of those, completed via the ES
+    n_deadline_miss: int = 0    # samples past the 2T realized deadline
+    n_retries: int = 0          # ladder rung 1: retransmission attempts
+    n_fallback_local: int = 0   # ladder rung 2: local-model completions
+    n_dropped: int = 0          # ladder rung 3: accuracy-0 drops
+    realized_makespan: float = 0.0  # max realized device wall (seconds)
 
 
 class EdgeServerPool:
@@ -254,6 +287,16 @@ class FleetConfig:
     # False forces the legacy host period pipeline even where the
     # engine-v2 delegation would apply (benchmark baselines, debugging)
     delegate: bool = True
+    # chaos: fault injection + degradation ladder (engine-v2 delegation
+    # only; see repro.serving.faults).  None/FaultModel.none() disarms.
+    faults: Optional[FaultModel] = None
+    max_retries: int = 2
+    fault_seed: int = 0
+    # "raise" (default): an uncertified-LP period raises
+    # UnsolvedPeriodError (carrying partial stats); "warn": warn and book
+    # the period — its unsolved lanes were re-planned local-only by the
+    # traced core
+    strict: str = "raise"
     # traffic (RequestQueue)
     classes: Sequence[int] = (128, 512, 1024)
     rate: float = 10.0
@@ -300,14 +343,21 @@ class FleetEngine:
                    n_servers=config.n_servers, T=config.T,
                    policy=config.policy, backend=config.backend,
                    straggler_threshold=config.straggler_threshold,
-                   ema=config.ema, delegate=config.delegate)
+                   ema=config.ema, delegate=config.delegate,
+                   faults=config.faults, max_retries=config.max_retries,
+                   fault_seed=config.fault_seed, strict=config.strict)
 
     def __init__(self, devices: Sequence[DeviceSpec], queue: RequestQueue, *,
                  n_servers: int = 1, T: float, policy: str = "auto",
                  backend: str = "jax", straggler_threshold: float = 1.5,
-                 ema: float = 0.5, delegate: bool = True):
+                 ema: float = 0.5, delegate: bool = True,
+                 faults: Optional[FaultModel] = None, max_retries: int = 2,
+                 fault_seed: int = 0, strict: str = "raise"):
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
+        if strict not in ("raise", "warn"):
+            raise ValueError(f"strict={strict!r}; expected 'raise' or "
+                             f"'warn'")
         if policy != "auto":
             from ..api import get_solver
             info = get_solver(policy).info        # also rejects unknowns
@@ -348,6 +398,7 @@ class FleetEngine:
         self.backend = backend
         self.straggler_threshold = straggler_threshold
         self.ema = ema
+        self.strict = strict
         self.history: List[FleetPeriodStats] = []
         self._period = 0
         # ---- array residency: stack per-device profiles by shape group ---
@@ -380,7 +431,9 @@ class FleetEngine:
                 devices, queue, T=T, n_servers=n_servers, policy=policy,
                 horizon=1, arrivals="poisson",   # arrivals come from the
                 #             host queue; the mode only gates presampling
-                straggler_threshold=straggler_threshold, ema=ema)
+                straggler_threshold=straggler_threshold, ema=ema,
+                faults=faults, max_retries=max_retries,
+                fault_seed=fault_seed)
             g = self._groups[0]
             self._v2_lut = np.searchsorted(np.asarray(g.classes),
                                            np.asarray(queue.classes))
@@ -390,9 +443,22 @@ class FleetEngine:
             qcls = np.asarray(queue.classes)
             self._v2_qorder = np.argsort(qcls, kind="stable")
             self._v2_qsorted = qcls[self._v2_qorder]
+        if faults is not None and not faults.is_null() \
+                and self._v2_params is None:
+            # the ladder lives in the traced period core; there is no
+            # host twin of the realized-execution pass to fall back to
+            raise ValueError(
+                "fault injection needs the engine-v2 delegation (jax "
+                "backend, amr2/dual policy, one profile shape group, "
+                "delegate=True); this engine would run the host period "
+                "pipeline")
 
     # ------------------------------------------------------------------
     def run(self, periods: int) -> List[FleetPeriodStats]:
+        """Run ``periods`` periods.  Under ``strict="raise"``, a period
+        with uncertified LP lanes raises `UnsolvedPeriodError` — the
+        completed periods' stats survive on the exception's
+        ``partial_stats`` (and on ``self.history``)."""
         return [self.run_period() for _ in range(periods)]
 
     # ------------------------------------------------------------------
@@ -449,17 +515,33 @@ class FleetEngine:
 
         t0 = _time.perf_counter()
         with enable_x64():
+            fault_key = None
+            if params.chaos:
+                # the exact per-period draw step() makes inside the scan:
+                # fold the dedicated fault seed by period index
+                import jax as _jax
+                fault_key = _jax.random.fold_in(
+                    _jax.random.PRNGKey(params.fault_seed), np.int32(t))
             _belief2, new_warm, upd, factor, m = _period_jit(
-                belief, warm, ci, take, drift, outage, params)
+                belief, warm, ci, take, drift, outage, params, fault_key)
         m = {k: np.asarray(v) for k, v in m.items()}
         plan_seconds = _time.perf_counter() - t0
         if int(m["n_unsolved"]):
             # mirror api.solve's strict=True default: never silently
-            # serve best-effort roundings of a non-converged LP
-            raise RuntimeError(
-                f"{int(m['n_unsolved'])} device plan(s) were not solved "
-                f"to optimality this period (simplex iteration limit or "
-                f"unbounded LP); raise maxiter")
+            # serve best-effort roundings of a non-converged LP.  The
+            # traced core has already re-planned the unsolved lanes with
+            # the greedy local-only fallback, so "warn" mode can book the
+            # period; "raise" keeps the completed periods on the error.
+            msg = (f"period {t}: {int(m['n_unsolved'])} device plan(s) "
+                   f"were not solved to optimality (simplex iteration "
+                   f"limit or unbounded LP); raise maxiter — the lanes "
+                   f"were served by the greedy local-only fallback")
+            if self.strict == "warn":
+                warnings.warn(msg, RuntimeWarning, stacklevel=3)
+            else:
+                raise UnsolvedPeriodError(
+                    msg, period=t, n_unsolved=int(m["n_unsolved"]),
+                    partial_stats=list(self.history))
 
         if self.policy == "amr2":   # LP-backed: carry the warm bases
             g.warm_basis = np.asarray(new_warm, np.int64)
@@ -486,7 +568,14 @@ class FleetEngine:
             n_outage=int(m["n_outage"]),
             n_straggler_updates=int(m["n_straggler_updates"]),
             es_utilization=float(m["es_utilization"]),
-            backlog=self.queue.backlog)
+            backlog=self.queue.backlog,
+            n_offload_samples=int(m["n_offload_samples"]),
+            n_offload_ok=int(m["n_offload_ok"]),
+            n_deadline_miss=int(m["n_deadline_miss"]),
+            n_retries=int(m["n_retries"]),
+            n_fallback_local=int(m["n_fallback_local"]),
+            n_dropped=int(m["n_dropped"]),
+            realized_makespan=float(m["realized_makespan"]))
         self.history.append(stats)
         return stats
 
@@ -572,10 +661,15 @@ class FleetEngine:
         worst_viol = 0.0
         n_viol = 0
         n_updates = 0
+        n_off_samples = 0
+        realized_makespan = 0.0
         for g, fp, base, assign in staged:
             m = g.m
             mask = fp.real_mask
             n_jobs += int(mask.sum())
+            # fault-free realized execution (host twin of the engine-v2
+            # fields): every admitted offload completes via the ES
+            n_off_samples += int((mask & (assign == m)).sum())
             acc_jobs = fp.acc[np.arange(len(g.ids))[:, None], assign]
             total_acc += float(np.where(mask, acc_jobs, 0.0).sum())
 
@@ -594,6 +688,8 @@ class FleetEngine:
             es_wall = np.where(admitted_mask[g.ids], es_demand_all[g.ids],
                                0.0)
             wall = np.maximum(ed_wall, es_wall)
+            realized_makespan = max(realized_makespan,
+                                    float(wall.max(initial=0.0)))
             viol = np.maximum(0.0, wall / self.T - 1.0)
             worst_viol = max(worst_viol, float(viol.max(initial=0.0)))
             n_viol += int((viol > 0).sum())
@@ -618,7 +714,9 @@ class FleetEngine:
             n_offloading=n_offloading, n_backpressured=len(bumped),
             n_outage=int(outage.sum()), n_straggler_updates=n_updates,
             es_utilization=float(loads.sum()) / (self.pool.n_servers * self.T),
-            backlog=self.queue.backlog)
+            backlog=self.queue.backlog,
+            n_offload_samples=n_off_samples, n_offload_ok=n_off_samples,
+            realized_makespan=realized_makespan)
         self.history.append(stats)
         return stats
 
@@ -689,14 +787,19 @@ class FleetEngine:
         worst_viol = 0.0
         n_viol = 0
         n_updates = 0
+        n_off_samples = 0
+        realized_makespan = 0.0
         for d, st in enumerate(self.devices):
             sched = scheds[d]
             n_jobs += sched.instance.n
             total_acc += sched.total_accuracy
+            n_off_samples += int(
+                (sched.assignment == sched.instance.p_ed.shape[1]).sum())
             ed_wall = _ed_time_under(st.spec.profile, arrivals[d],
                                      sched.assignment) * st.spec.drift_at(t)
             es_wall = 0.0 if d in bumped else sched.es_makespan
             wall = max(ed_wall, es_wall)
+            realized_makespan = max(realized_makespan, wall)
             viol = max(0.0, wall / self.T - 1.0)
             worst_viol = max(worst_viol, viol)
             n_viol += viol > 0
@@ -718,7 +821,9 @@ class FleetEngine:
             n_offloading=len(demands), n_backpressured=len(bumped),
             n_outage=int(sum(outages)), n_straggler_updates=n_updates,
             es_utilization=float(loads.sum()) / (self.pool.n_servers * self.T),
-            backlog=self.queue.backlog)
+            backlog=self.queue.backlog,
+            n_offload_samples=n_off_samples, n_offload_ok=n_off_samples,
+            realized_makespan=realized_makespan)
         self.history.append(stats)
         return stats
 

@@ -52,6 +52,10 @@ class PeriodStats:
     violation: float
     replanned: bool
     profile_updated: bool
+    # samples that fell through execution with no result (short apply-fn
+    # output, unrouted job) — see executor.EXEC_DROPPED; consistent with
+    # the fleet engine's n_dropped ladder metric
+    n_dropped: int = 0
 
 
 class ServingRuntime:
@@ -81,7 +85,8 @@ class ServingRuntime:
             total_accuracy=float(sol.accuracy),
             plan_seconds=sol.plan_seconds,
             violation=max(0.0, report.wall_makespan / self.T - 1.0),
-            replanned=report.replanned, profile_updated=updated)
+            replanned=report.replanned, profile_updated=updated,
+            n_dropped=report.n_dropped)
         self.history.append(stats)
         return stats
 

@@ -1,6 +1,6 @@
 """Tier-1 collection shim for optional `hypothesis`.
 
-Four test modules use hypothesis property tests.  When the package is
+Five test modules use hypothesis property tests.  When the package is
 installed (see requirements-dev.txt) they run for real; when it is absent
 (minimal containers) this conftest installs a stub module BEFORE test
 collection so the modules still import — every `@given` test then skips
