@@ -465,6 +465,9 @@ def scaling():
             # the measured point in BENCH_fleet.json
             entries.setdefault(str(n_devices), {})[policy] = entry
             _record("scale", {str(n_devices): {policy: entry}})
+            if policy == "amr2" and n_devices == max(_scale_sizes()):
+                out.extend(_scale_chaos_point(params, n_devices, periods,
+                                              M, wall))
             if policy == "amr2":
                 assert int(np.asarray(M.n_unsolved).sum()) == 0, \
                     f"{n_devices}-device rollout left LPs unsolved"
@@ -488,6 +491,76 @@ def scaling():
                 f"violation_rate={entry['violation_rate']:.4f};"
                 f"backpressure_rate={entry['backpressure_rate']:.4f};"
                 f"sim_wall_s={wall:.2f}"))
+    return out
+
+
+def _scale_chaos_point(params, n_devices: int, periods: int, M_free,
+                       free_wall: float):
+    """Armed-chaos companion to the largest scale point: prices the fault
+    trace AT SCALE instead of extrapolating from the 64-device chaos
+    section.  Armed-null is GATED bitwise-free (same trajectory as the
+    fault-free rollout — arming buys only the traced fault block, whose
+    overhead is recorded); armed-hot records the full ladder's cost."""
+    import dataclasses
+
+    import jax
+
+    from repro.api import engine as E
+    from repro.serving import FaultModel
+
+    out = []
+    entry: dict = {"devices": n_devices, "periods": periods}
+    for tag, fm in (("armed_null", FaultModel.none()),
+                    ("armed_hot", FaultModel.make(
+                        link_degrade_prob=0.2, link_degrade_mag=0.6,
+                        straggler_prob=0.15, straggler_mult=1.8,
+                        loss_rate=0.05))):
+        p = dataclasses.replace(params, faults=fm, chaos=True,
+                                fault_seed=11)
+        _, M = E.rollout(E.init_state(p), p, periods,
+                         donate=True)                      # compile
+        jax.block_until_ready(np.asarray(M.total_accuracy))
+        t0 = time.perf_counter()
+        _, M = E.rollout(E.init_state(p), p, periods, donate=True)
+        jax.block_until_ready(np.asarray(M.total_accuracy))
+        wall = time.perf_counter() - t0
+        dps = n_devices * periods / wall
+        if tag == "armed_null":
+            for f in ("total_accuracy", "n_jobs", "n_violations",
+                      "n_offloading", "n_backpressured", "backlog",
+                      "es_utilization"):
+                assert np.array_equal(np.asarray(getattr(M, f)),
+                                      np.asarray(getattr(M_free, f))), \
+                    f"armed-null chaos at {n_devices} devices diverged " \
+                    f"from the fault-free rollout on {f}"
+            entry[tag] = {
+                "devices_per_s_wall": dps,
+                "overhead_vs_fault_free": free_wall / wall,
+                "parity": "bitwise_vs_fault_free",
+            }
+        else:
+            entry[tag] = {
+                "devices_per_s_wall": dps,
+                "overhead_vs_fault_free": free_wall / wall,
+                "n_retries": int(np.asarray(M.n_retries).sum()),
+                "n_fallback_local":
+                    int(np.asarray(M.n_fallback_local).sum()),
+                "n_dropped": int(np.asarray(M.n_dropped).sum()),
+                "n_deadline_miss":
+                    int(np.asarray(M.n_deadline_miss).sum()),
+                "n_es_audit_updates":
+                    int(np.asarray(M.n_es_audit_updates).sum()),
+                "worst_realized_makespan":
+                    float(np.asarray(M.realized_makespan).max()),
+            }
+        out.append((
+            f"fleet/scale/{n_devices}/chaos_{tag.split('_')[1]}",
+            wall / (n_devices * periods) * 1e6,
+            f"devices={n_devices};devices_per_s={dps:.0f};"
+            f"free_ratio={free_wall / wall:.2f}" + (
+                ";parity=bitwise" if tag == "armed_null" else
+                f";es_audit_updates={entry[tag]['n_es_audit_updates']}")))
+    _record("scale", {str(n_devices): {"chaos": entry}})
     return out
 
 
@@ -946,7 +1019,138 @@ def chaos():
     return out
 
 
-ALL = [parity, warm_cold, scaling, speedup, rollout, sharded, chaos]
+def _mobility_sizes():
+    env = os.environ.get("FLEET_BENCH_MOBILITY_SIZES")
+    if env:
+        return tuple(int(x) for x in env.split(","))
+    return (4096, 16384)
+
+
+def mobility():
+    """The multi-cell mobility subsystem at scale (`core.mobility`).
+
+    Two pieces per device count (``FLEET_BENCH_MOBILITY_SIZES``; the
+    102400 point is opt-in, like the scale section's):
+
+      * *admission microbench* — the OLD global sequential first-fit scan
+        (`admit_mask_jnp`: one `lax.scan` step per device, each step an
+        argmin over `n_servers` — the O(D x S) wall the ROADMAP names as
+        the entire 100k gap) against the NEW segmented per-cell
+        formulation (`admit_mask_segmented`: sorts + cumsums, no
+        sequential pass) on the same demand vector.  Both jitted, both
+        admitting into ``D // 16`` servers.  Gated: at >= 16384 devices
+        the segmented scan must beat the global scan.
+      * *mobility-armed rollout* — the full engine with a replayed
+        3-cell-per-128-device trace (routing + handover + segmented
+        admission + ES-belief plumbing) at the LARGEST size, reported as
+        devices/s alongside the scale section's single-pool number.  The
+        opt-in 102400 point is gated on beating the recorded single-pool
+        scan there (``FLEET_BENCH_MOBILITY_ANCHOR`` devices/s, default
+        8100 — the ~8.1k devices/s the global-admission engine measured),
+        closing the ROADMAP's "segmented/hierarchical admission scan"
+        rung."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.api import engine as E
+    from repro.core.mobility import MobilityModel, admit_mask_segmented
+
+    out = []
+    entries: dict = {}
+    sizes = _mobility_sizes()
+    anchor = float(os.environ.get("FLEET_BENCH_MOBILITY_ANCHOR", 8100))
+    reps = 3
+    rng = np.random.default_rng(0)
+    T = 1.2
+    with enable_x64():
+        for n in sizes:
+            n_servers = max(1, n // 16)
+            S = 16 if n_servers % 16 == 0 else 1
+            k = n_servers // S
+            demands = jnp.asarray(np.where(
+                rng.random(n) < 0.3, 0.0, rng.uniform(0.0, 1.5, n)))
+            cell = jnp.asarray(rng.integers(0, S, n).astype(np.int32))
+            glob = jax.jit(lambda d: E.admit_mask_jnp(d, T, n_servers))
+            seg = jax.jit(lambda d, c: admit_mask_segmented(
+                d, c, T, S, k))
+            jax.block_until_ready(glob(demands))           # compile
+            jax.block_until_ready(seg(demands, cell))
+            glob_s = min(_timed(lambda: jax.block_until_ready(
+                glob(demands))) for _ in range(reps))
+            seg_s = min(_timed(lambda: jax.block_until_ready(
+                seg(demands, cell))) for _ in range(reps))
+            speedup_x = glob_s / seg_s
+            entry = {
+                "devices": n, "n_servers": n_servers, "n_cells": S,
+                "global_scan_s": glob_s, "segmented_s": seg_s,
+                "segmented_speedup": speedup_x,
+            }
+            if n >= 16384:
+                assert speedup_x > 1.0, \
+                    f"segmented admission ({seg_s * 1e3:.1f} ms) did not " \
+                    f"beat the global sequential scan " \
+                    f"({glob_s * 1e3:.1f} ms) at {n} devices"
+            entries[str(n)] = {"admission": entry}
+            _record("mobility", {str(n): {"admission": entry}})
+            out.append((
+                f"fleet/mobility/admission/{n}", seg_s / n * 1e6,
+                f"devices={n};cells={S};servers={n_servers};"
+                f"segmented_ms={seg_s * 1e3:.2f};"
+                f"global_scan_ms={glob_s * 1e3:.2f};"
+                f"speedup={speedup_x:.1f}x"))
+
+    # --- mobility-armed rollout at the largest point ---------------------
+    n = max(sizes)
+    periods = _periods(n)
+    params = _scale_params(n, "amr2", periods)
+    n_servers = params.n_servers
+    S = 16 if n_servers % 16 == 0 else 1
+    cxy = np.stack([20.0 * np.array([i % 4, i // 4]) for i in range(S)])
+    dev_home = cxy[rng.integers(0, S, n)]
+    trace = (rng.normal(scale=6.0, size=(max(4, periods), n, 2))
+             + dev_home)
+    mob = MobilityModel.make(cell_xy=cxy, trace=trace, radius=30.0,
+                             link_alpha=0.2)
+    armed = params.with_mobility(mob, routing="nearest")
+    _, M = E.rollout(E.init_state(armed), armed, periods,
+                     donate=True)                          # compile
+    jax.block_until_ready(np.asarray(M.total_accuracy))
+    t0 = time.perf_counter()
+    _, M = E.rollout(E.init_state(armed), armed, periods, donate=True)
+    jax.block_until_ready(np.asarray(M.total_accuracy))
+    wall = time.perf_counter() - t0
+    dps = n * periods / wall
+    n_jobs = int(np.asarray(M.n_jobs).sum())
+    entry = {
+        "devices": n, "periods": periods, "n_cells": S,
+        "policy": "amr2", "routing": "nearest", "path":
+        "rollout_scan_donated_segmented_admission",
+        "devices_per_s_wall": dps,
+        "n_handover": int(np.asarray(M.n_handover).sum()),
+        "mean_job_accuracy": float(np.asarray(M.total_accuracy).sum())
+        / max(n_jobs, 1),
+        "violation_rate": float(np.asarray(M.n_violations).sum())
+        / (n * periods),
+    }
+    _record("mobility", {str(n): {"rollout": entry}})
+    if n >= 102400:
+        assert dps > anchor, \
+            f"102400-device mobility rollout at {dps:.0f} devices/s did " \
+            f"not improve on the recorded global-admission engine " \
+            f"(~{anchor:.0f} devices/s; FLEET_BENCH_MOBILITY_ANCHOR)"
+    out.append((
+        f"fleet/mobility/rollout/{n}", wall / (n * periods) * 1e6,
+        f"devices={n};cells={S};periods={periods};"
+        f"devices_per_s={dps:.0f};"
+        f"handovers={entry['n_handover']};"
+        f"acc_per_job={entry['mean_job_accuracy']:.4f};"
+        f"violation_rate={entry['violation_rate']:.4f}"))
+    return out
+
+
+ALL = [parity, warm_cold, scaling, speedup, rollout, sharded, chaos,
+       mobility]
 
 
 def main():

@@ -1,0 +1,164 @@
+"""Multi-cell mobility smoke: routing determinism, the S=1 bitwise
+reduction, and sharded-by-cell parity on a replayed trace.
+
+Launch with host-platform devices spawned BEFORE jax initialises (the
+sharded leg needs > 1 jax device; without it that leg is skipped):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python scripts/smoke_mobility.py
+
+Environment knobs: ``MOBILITY_SMOKE_DEVICES`` (fleet size, default 32),
+``MOBILITY_SMOKE_PERIODS`` (default 8), ``MOBILITY_SMOKE_SHARDS``
+(default all jax devices).  Three legs, exit 1 on any failure:
+
+  * *determinism* — two rollouts of the same replayed-trace multi-cell
+    params are BITWISE identical (routing, admission, and handover are
+    pure functions of the trace), and every period's routed cell
+    respects the coverage radius;
+  * *S=1 reduction* — one cell at the origin with an infinite radius
+    reproduces the single-pool engine bit for bit (the acceptance pin);
+  * *sharded-by-cell* — a geographically-local fleet (each shard's
+    devices roam only its own cell pair) under ``shard_by_cell=True``
+    (local segmented admission, the all_gather elided) matches the
+    unsharded rollout, and the plain sharded path (global segmented
+    admission over the gathered demand) matches too.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.api import engine as E
+    from repro.core.mobility import MobilityModel, route_cells
+    from repro.serving import FleetConfig
+
+    n_devices = int(os.environ.get("MOBILITY_SMOKE_DEVICES", 32))
+    periods = int(os.environ.get("MOBILITY_SMOKE_PERIODS", 8))
+    failures = []
+
+    def check(tag, got, want, exact=True):
+        got, want = np.asarray(got), np.asarray(want)
+        ok = (np.array_equal(got, want) if exact
+              else np.allclose(got, want, rtol=1e-9, atol=1e-12))
+        if not ok:
+            failures.append(f"{tag}: {got} != {want}")
+
+    cfg = FleetConfig(n_devices=n_devices, T=1.2, n_servers=8,
+                      policy="amr2", rate=8.0, batch_max=8,
+                      horizon=periods + 2, seed=0)
+    params = E.EngineParams.from_config(cfg, horizon=periods + 2)
+
+    # 8 cells in 4 close pairs (spacing 10 within a pair, 40 between):
+    # devices roam around their pair's midpoint, so handovers happen
+    # WITHIN a pair — each shard of the sharded leg owns one pair, so
+    # geographic locality holds for shard_by_cell
+    S = 8
+    rng = np.random.default_rng(1)
+    cxy = np.stack([40.0 * (np.arange(S) // 2) + 10.0 * (np.arange(S) % 2),
+                    np.zeros(S)], axis=1)
+    mid = 0.5 * (cxy[0::2] + cxy[1::2])              # (4, 2) pair centres
+    home = mid[np.arange(n_devices) % 4]
+    trace = rng.normal(scale=6.0, size=(periods + 2, n_devices, 2)) + home
+    mob = MobilityModel.make(cell_xy=cxy, trace=trace, radius=25.0,
+                             link_alpha=0.3)
+    armed = params.with_mobility(mob, routing="min_time")
+
+    # --- leg 1: routing determinism ------------------------------------
+    s_a, m_a = E.rollout(E.init_state(armed), armed, periods)
+    s_b, m_b = E.rollout(E.init_state(armed), armed, periods)
+    for f in E._METRIC_FIELDS:
+        check(f"determinism/{f}", getattr(m_a, f), getattr(m_b, f))
+    for f in E._STATE_FIELDS:
+        check(f"determinism/state/{f}", getattr(s_a, f), getattr(s_b, f))
+    if int(np.asarray(m_a.n_handover).sum()) == 0:
+        failures.append("no handovers fired (vacuous mobility smoke); "
+                        "loosen the trace")
+    # routed cells respect the coverage radius at every period
+    for t in range(periods):
+        cell, covered, _ = (np.asarray(a) for a in route_cells(
+            trace[t], mob, np.zeros(S), "min_time"))
+        dist = np.linalg.norm(trace[t][:, None] - cxy[None], axis=2)
+        ok = covered.nonzero()[0]
+        if not (dist[ok, cell[ok]] <= float(mob.radius)).all():
+            failures.append(f"period {t}: a device was routed to a cell "
+                            f"outside the coverage radius")
+            break
+
+    # --- leg 2: the S=1 / infinite-radius bitwise reduction -------------
+    null_mob = MobilityModel.make(cell_xy=np.zeros((1, 2)),
+                                  trace=np.zeros((periods + 2,
+                                                  n_devices, 2)))
+    reduced = params.with_mobility(null_mob)
+    s_off, m_off = E.rollout(E.init_state(params), params, periods)
+    s_red, m_red = E.rollout(E.init_state(reduced), reduced, periods)
+    for f in E._METRIC_FIELDS:
+        check(f"s1_reduction/{f}", getattr(m_red, f), getattr(m_off, f))
+    for f in ("key", "p_ed", "pending", "head", "warm_basis", "n_updates"):
+        check(f"s1_reduction/state/{f}", getattr(s_red, f),
+              getattr(s_off, f))
+
+    # --- leg 3: sharded-by-cell parity ----------------------------------
+    import jax
+    n_shards = int(os.environ.get("MOBILITY_SMOKE_SHARDS",
+                                  len(jax.devices())))
+    if len(jax.devices()) < 2:
+        print("[mobility-smoke] single jax device; sharded leg skipped "
+              "(launch with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=4)")
+        n_shards = 0
+    elif n_devices % n_shards or (n_devices // n_shards) % 4:
+        failures.append(f"{n_devices} devices do not split into "
+                        f"{n_shards} shards of whole cell-pair groups")
+        n_shards = 0
+    if n_shards:
+        # geographic locality for shard_by_cell: shard i's devices roam
+        # pair (i % 4) — regroup the fleet so contiguous shard slices
+        # hold one pair each (4 shards x pair = the home layout above
+        # reordered device-major)
+        order = np.argsort(np.arange(n_devices) % 4, kind="stable")
+        tr_local = trace[:, order]
+        mob_local = MobilityModel.make(cell_xy=cxy, trace=tr_local,
+                                       radius=25.0, link_alpha=0.3)
+        mesh = E.fleet_mesh(min(n_shards, 4))
+        for sbc in (False, True):
+            p = params.with_mobility(mob_local, routing="min_time",
+                                     shard_by_cell=sbc)
+            uf, MU = E.rollout(E.init_state(p), p, periods)
+            sstate, sparams = E.shard(E.init_state(p), p, mesh)
+            sf, MS = E.rollout_sharded(sstate, sparams, periods, mesh)
+            tag = f"sharded{'_by_cell' if sbc else ''}"
+            for f in ("n_jobs", "n_violations", "n_offloading",
+                      "n_backpressured", "n_outage", "backlog",
+                      "n_handover"):
+                check(f"{tag}/{f}", getattr(MS, f), getattr(MU, f))
+            for f in ("total_accuracy", "es_utilization",
+                      "worst_violation"):
+                check(f"{tag}/{f}", getattr(MS, f), getattr(MU, f),
+                      exact=False)
+            check(f"{tag}/final/warm_basis", sf.warm_basis, uf.warm_basis)
+            check(f"{tag}/final/cell", sf.cell, uf.cell)
+            check(f"{tag}/final/cell_load", sf.cell_load, uf.cell_load,
+                  exact=False)
+
+    if failures:
+        print("FAIL: mobility smoke:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    acc = float(np.asarray(m_a.total_accuracy).sum())
+    print(f"[mobility-smoke] ok: {n_devices} devices x {periods} periods, "
+          f"{S} cells, {int(np.asarray(m_a.n_handover).sum())} handovers; "
+          f"determinism + S=1 reduction + sharded parity hold "
+          f"(total accuracy {acc:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

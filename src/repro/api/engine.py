@@ -70,6 +70,8 @@ from ..core.dual import _dual_one
 from ..core.faults import (FaultModel, greedy_local_fill,
                            realize_execution, sample_realization)
 from ..core.lp import _bucket_maxiter, simplex_batch_core
+from ..core.mobility import (MobilityModel, admit_mask_segmented,
+                             route_cells, validate_mobility)
 from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED as
                             _ST_UNSOLVED, FleetProblem)
 
@@ -139,6 +141,12 @@ class EngineParams:
     # rollout).  Only consulted when the static ``chaos`` aux is True;
     # the fault-free trace carries the leaves but never reads them.
     faults: FaultModel = dataclasses.field(default_factory=FaultModel.none)
+    # multi-cell mobility: cell geometry + device motion (all-float64-leaf
+    # pytree like `faults`; only consulted when the static
+    # ``mobility_mode`` aux is not "off" — the single-pool trace carries
+    # the leaves but never reads them)
+    mobility: MobilityModel = dataclasses.field(
+        default_factory=MobilityModel.none)
     # ---- static aux -----------------------------------------------------
     policy: str = "amr2"
     arrivals: str = "replay"
@@ -163,6 +171,19 @@ class EngineParams:
     chaos: bool = False
     max_retries: int = 2
     fault_seed: int = 0
+    # multi-cell mobility (static): "off" keeps the byte-identical
+    # single-pool trace; "replay" reads positions from ``mobility.trace``;
+    # "walk" integrates Gaussian steps from the folded ``mobility_seed``
+    # stream (independent of the arrival PRNG, like ``fault_seed``).
+    # ``n_cells`` partitions the ``n_servers`` pool evenly across cells;
+    # ``routing`` picks the serving cell ("nearest" / "min_time");
+    # ``shard_by_cell`` elides the admission all_gather under shard_map
+    # (valid when each shard's devices route only to its own cells)
+    mobility_mode: str = "off"
+    routing: str = "nearest"
+    n_cells: int = 1
+    mobility_seed: int = 0
+    shard_by_cell: bool = False
 
     @property
     def n_devices(self) -> int:
@@ -177,6 +198,11 @@ class EngineParams:
         """Simplex rows R = batch_max + 2 (warm-basis width)."""
         return self.batch_max + 2
 
+    @property
+    def servers_per_cell(self) -> int:
+        """ES tiers fronted by each cell (the whole pool when S=1)."""
+        return self.n_servers // max(self.n_cells, 1)
+
     # ---- constructors ----------------------------------------------------
     @classmethod
     def from_fleet(cls, devices, queue, *, T: float, n_servers: int = 1,
@@ -189,7 +215,11 @@ class EngineParams:
                    lp_method: str = "tableau",
                    faults: Optional[FaultModel] = None,
                    max_retries: int = 2,
-                   fault_seed: int = 0) -> "EngineParams":
+                   fault_seed: int = 0,
+                   mobility: Optional[MobilityModel] = None,
+                   mobility_mode: str = "replay",
+                   routing: str = "nearest",
+                   mobility_seed: int = 0) -> "EngineParams":
         """Build params from `DeviceSpec`s + a `RequestQueue` (the host
         engine's vocabulary).  Requires one shape group — every profile
         sharing a class table and model count — which is what
@@ -212,6 +242,10 @@ class EngineParams:
             raise ValueError("max_retries must be >= 0")
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
+        mob = mobility if mobility is not None else MobilityModel.none()
+        mob_mode = mobility_mode if mobility is not None else "off"
+        validate_mobility(mob, n_devices=len(devices), n_servers=n_servers,
+                          mode=mob_mode, routing=routing)
         qcls = np.asarray(queue.classes)
         key0 = None
         for d, spec in enumerate(devices):
@@ -265,6 +299,9 @@ class EngineParams:
             class_probs=probs, drift=drift, outage=outage,
             counts=counts.astype(np.int32), stream=stream,
             faults=faults if faults is not None else FaultModel.none(),
+            mobility=mob, mobility_mode=mob_mode, routing=routing,
+            n_cells=mob.n_cells if mob_mode != "off" else 1,
+            mobility_seed=mobility_seed,
             policy=policy, arrivals=arrivals, n_servers=n_servers,
             batch_max=queue.batch_max,
             straggler_threshold=straggler_threshold, ema=ema,
@@ -292,7 +329,11 @@ class EngineParams:
             lp_method=lp_method,
             faults=getattr(config, "faults", None),
             max_retries=getattr(config, "max_retries", 2),
-            fault_seed=getattr(config, "fault_seed", 0))
+            fault_seed=getattr(config, "fault_seed", 0),
+            mobility=getattr(config, "mobility", None),
+            mobility_mode=getattr(config, "mobility_mode", "replay"),
+            routing=getattr(config, "routing", "nearest"),
+            mobility_seed=getattr(config, "mobility_seed", 0))
 
     def with_faults(self, faults: Optional[FaultModel], *,
                     max_retries: Optional[int] = None,
@@ -308,6 +349,26 @@ class EngineParams:
             fault_seed=(self.fault_seed if fault_seed is None
                         else fault_seed))
 
+    def with_mobility(self, mobility: Optional[MobilityModel], *,
+                      mode: str = "replay", routing: str = "nearest",
+                      mobility_seed: Optional[int] = None,
+                      shard_by_cell: bool = False) -> "EngineParams":
+        """Arm (or disarm, with ``None``) the multi-cell mobility
+        subsystem on an existing params value.  Validates the geometry
+        (`core.mobility.validate_mobility`) and keeps the static
+        ``mobility_mode``/``n_cells`` aux consistent with the model."""
+        mob = mobility if mobility is not None else MobilityModel.none()
+        mob_mode = mode if mobility is not None else "off"
+        validate_mobility(mob, n_devices=self.n_devices,
+                          n_servers=self.n_servers, mode=mob_mode,
+                          routing=routing)
+        return dataclasses.replace(
+            self, mobility=mob, mobility_mode=mob_mode, routing=routing,
+            n_cells=mob.n_cells if mob_mode != "off" else 1,
+            mobility_seed=(self.mobility_seed if mobility_seed is None
+                           else mobility_seed),
+            shard_by_cell=shard_by_cell)
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineState:
@@ -320,6 +381,13 @@ class EngineState:
     head: jnp.ndarray         # (D,) int32 replay-stream cursors
     warm_basis: jnp.ndarray   # (D, R) int32 previous optimal bases (-1 cold)
     n_updates: jnp.ndarray    # (D,) int32 straggler-audit update counts
+    # multi-cell mobility (inert zeros while mobility_mode == "off")
+    pos: jnp.ndarray          # (D, 2) device positions
+    cell: jnp.ndarray         # (D,) int32 serving cell (-1: uncovered)
+    cell_load: jnp.ndarray    # (S,) last period's admitted load per cell
+    # ES-latency belief (chaos audit state; == params.p_es until the
+    # realized-execution audit inflates it, handover resets rows)
+    p_es_belief: jnp.ndarray  # (D, c)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -359,17 +427,26 @@ class PeriodMetrics:
     n_fallback_local: jnp.ndarray
     n_dropped: jnp.ndarray
     realized_makespan: jnp.ndarray
+    # chaos -> planner feedback: devices whose REALIZED ES time blew past
+    # the priced demand (or missed the 2T deadline) and had their
+    # `p_es_belief` EMA-inflated this period.  Exact zero with chaos off.
+    n_es_audit_updates: jnp.ndarray
+    # mobility: devices that switched serving cells this period (handover
+    # count; exact zero while mobility is off or S=1)
+    n_handover: jnp.ndarray
 
 
 _STATE_FIELDS = ("period", "key", "p_ed", "pending", "head", "warm_basis",
-                 "n_updates")
+                 "n_updates", "pos", "cell", "cell_load", "p_es_belief")
 _METRIC_FIELDS = tuple(f.name for f in dataclasses.fields(PeriodMetrics))
 _PARAM_LEAVES = ("classes", "base_p_ed", "p_es", "acc", "T", "rate",
                  "class_probs", "drift", "outage", "counts", "stream",
-                 "faults")
+                 "faults", "mobility")
 _PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
               "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
-              "tol", "lp_method", "chaos", "max_retries", "fault_seed")
+              "tol", "lp_method", "chaos", "max_retries", "fault_seed",
+              "mobility_mode", "routing", "n_cells", "mobility_seed",
+              "shard_by_cell")
 
 _register(EngineParams, _PARAM_LEAVES, _PARAM_AUX)
 _register(EngineState, _STATE_FIELDS)
@@ -379,6 +456,8 @@ _register(PeriodMetrics, _METRIC_FIELDS)
 def init_state(params: EngineParams, *, seed: int = 0) -> EngineState:
     """A fresh fleet: beliefs = profiles, empty backlog, cold bases."""
     D = params.n_devices
+    S = max(params.n_cells, 1)
+    armed = params.mobility_mode != "off"
     return EngineState(
         period=np.zeros((), np.int32),
         key=np.asarray(jax.random.PRNGKey(seed)),
@@ -386,7 +465,12 @@ def init_state(params: EngineParams, *, seed: int = 0) -> EngineState:
         pending=np.zeros(D, np.int32),
         head=np.zeros(D, np.int32),
         warm_basis=np.full((D, params.n_basis_rows), -1, np.int32),
-        n_updates=np.zeros(D, np.int32))
+        n_updates=np.zeros(D, np.int32),
+        pos=(np.array(params.mobility.trace[0], np.float64) if armed
+             else np.zeros((D, 2), np.float64)),
+        cell=np.full(D, -1 if armed else 0, np.int32),
+        cell_load=np.zeros(S, np.float64),
+        p_es_belief=np.array(params.p_es, np.float64))
 
 
 # --------------------------------------------------------------------------
@@ -504,7 +588,8 @@ def _recover_unsolved(assign, unsolved, p_ed_jobs, mask, acc, T):
 
 def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                  params: EngineParams, axis_name: Optional[str] = None,
-                 fault_key=None):
+                 fault_key=None, es_belief=None, link_factor=None,
+                 covered=None, cell=None):
     """The pure period core shared by `step`, the sharded step, and the
     host `FleetEngine.run_period` delegation: everything AFTER arrivals
     (the released job-class indices ``ci`` (D, n) + counts ``take`` (D,))
@@ -514,12 +599,22 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
     the `all_gather`-ed global demand vector and every metric scalar is
     `psum`/`pmax`-reduced, so sharded and unsharded outputs agree.
 
+    Mobility plumbing (all optional, None = single-pool semantics):
+    ``es_belief`` (D, c) replaces `params.p_es` as the PRICED ES-latency
+    table (the chaos audit inflates it; realized execution always prices
+    from the true `params.p_es`); ``link_factor`` (D,) scales each
+    device's ES latencies by its link to the serving cell; ``covered``
+    (D,) False disables a device's ES column like an outage; ``cell``
+    (D,) int32 routes admission through the segmented per-cell scan when
+    the static ``n_cells`` aux is > 1.
+
     Returns ``(new_belief_p_ed, new_warm_basis, upd (D,) bool,
-    audit_factor (D,), metrics)`` with ``metrics`` a dict of scalars (no
-    period/backlog — the callers own those).  ``audit_factor`` is the EMA
-    rescale each updated device's belief was multiplied by — the host
-    `FleetEngine` delegation applies it to its profile-space tables (which
-    may cover more classes than the queue's).
+    audit_factor (D,), new_es_belief (D, c), cell_load (S,), metrics)``
+    with ``metrics`` a dict of scalars (no period/backlog — the callers
+    own those).  ``audit_factor`` is the EMA rescale each updated
+    device's belief was multiplied by — the host `FleetEngine` delegation
+    applies it to its profile-space tables (which may cover more classes
+    than the queue's).
     """
     D, _c, m = belief_p_ed.shape
     n = params.batch_max
@@ -528,9 +623,18 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
     ci = jnp.clip(ci, 0, params.p_es.shape[1] - 1)
     p_ed_jobs = jnp.where(mask[..., None], belief_p_ed[rows, ci], 0.0)
     base_jobs = jnp.where(mask[..., None], params.base_p_ed[rows, ci], 0.0)
-    p_es_jobs = jnp.where(mask, params.p_es[rows, ci], 0.0)
-    p_es_jobs = jnp.where(outage_t[:, None] & mask, ES_DISABLED_SENTINEL,
-                          p_es_jobs)
+    if covered is not None:
+        # out-of-coverage == ES link down for this period
+        outage_t = outage_t | ~covered
+
+    def _es_jobs(tbl):
+        e = jnp.where(mask, tbl[rows, ci], 0.0)
+        if link_factor is not None:
+            e = e * link_factor[:, None]
+        return jnp.where(outage_t[:, None] & mask, ES_DISABLED_SENTINEL, e)
+
+    es_tbl = params.p_es if es_belief is None else es_belief
+    p_es_jobs = _es_jobs(es_tbl)
     Tvec = jnp.broadcast_to(params.T, (D,))
     fp = FleetProblem.from_arrays_unchecked(p_ed_jobs, p_es_jobs,
                                             params.acc, Tvec, mask)
@@ -546,16 +650,46 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                                params.acc, params.T)
 
     # ---- ES-pool admission on the GLOBAL demand vector ------------------
+    # S=1 keeps the sequential global scan (the bitwise-pinned oracle);
+    # multi-cell fleets run the segmented per-cell formulation — pure
+    # sort/cumsum work, no O(D) sequential pass (core.mobility).  Under
+    # `shard_by_cell` the all_gather is elided outright: each shard admits
+    # its own cells locally and only the per-cell loads are psum-merged.
     demand = jnp.where(mask & (assign == m), p_es_jobs, 0.0).sum(axis=1)
+    use_cells = params.mobility_mode != "off" and params.n_cells > 1
     if axis_name is None:
-        admitted, loads = admit_mask_jnp(demand, params.T,
-                                         params.n_servers)
+        if use_cells:
+            admitted, cloads = admit_mask_segmented(
+                demand, cell, params.T, params.n_cells,
+                params.servers_per_cell)
+        else:
+            admitted, loads = admit_mask_jnp(demand, params.T,
+                                             params.n_servers)
+    elif use_cells and params.shard_by_cell:
+        admitted, cloads = admit_mask_segmented(
+            demand, cell, params.T, params.n_cells,
+            params.servers_per_cell)
+        cloads = jax.lax.psum(cloads, axis_name)
+    elif use_cells:
+        demand_g = jax.lax.all_gather(demand, axis_name, tiled=True)
+        cell_g = jax.lax.all_gather(cell, axis_name, tiled=True)
+        admitted_g, cloads = admit_mask_segmented(
+            demand_g, cell_g, params.T, params.n_cells,
+            params.servers_per_cell)
+        idx = jax.lax.axis_index(axis_name)
+        admitted = jax.lax.dynamic_slice_in_dim(admitted_g, idx * D, D)
     else:
         demand_g = jax.lax.all_gather(demand, axis_name, tiled=True)
         admitted_g, loads = admit_mask_jnp(demand_g, params.T,
                                            params.n_servers)
         idx = jax.lax.axis_index(axis_name)
         admitted = jax.lax.dynamic_slice_in_dim(admitted_g, idx * D, D)
+    if use_cells:
+        cell_load_out = cloads.sum(axis=1)              # (S,) global
+        loads_total = jnp.sum(cloads)
+    else:
+        cell_load_out = jnp.sum(loads)[None]            # (1,)
+        loads_total = jnp.sum(loads)
     offl = demand > 0
     bumped = offl & ~admitted
 
@@ -620,15 +754,31 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                                   axis_name=axis_name)
         lat_local = base_jobs * (drift_t * real.straggler_factor
                                  )[:, None, None]
+        # realized execution prices from the TRUE ES table — the audit's
+        # inflated belief steers planning/admission, not physics
+        true_es_jobs = p_es_jobs if es_belief is None \
+            else _es_jobs(params.p_es)
         rx = realize_execution(
             params.faults, real, mask=mask, es_samp=es_samp,
-            acc_jobs=acc_jobs, p_es_jobs=p_es_jobs, ed_wall=ed_wall,
+            acc_jobs=acc_jobs, p_es_jobs=true_es_jobs, ed_wall=ed_wall,
             lat_local=lat_local, acc=params.acc, T=params.T,
             max_retries=params.max_retries)
         total_acc = _sum(jnp.where(mask, rx.acc, 0.0))
         wall = rx.wall
         ed_audit = rx.ed_audit       # excl. fallback compute: the audit
         #                              tracks per-op slowdown, not load
+        # chaos -> planner feedback: a device whose realized ES time blew
+        # past its priced demand (or whose offloads got dropped) has its
+        # ES-latency belief EMA-inflated, so next period's plan offloads
+        # less / demands more conservatively.  Null faults realize the
+        # priced times bit for bit -> ratio == 1 -> no updates.
+        es_ratio = rx.es_wall / jnp.maximum(es_wall, 1e-9)
+        es_upd = (es_wall > 0) & ((es_ratio > params.straggler_threshold)
+                                  | (rx.n_dropped > 0))
+        es_factor = (1.0 - params.ema) + params.ema * jnp.maximum(
+            es_ratio, params.straggler_threshold)
+        new_es_belief = jnp.where(es_upd[:, None],
+                                  es_tbl * es_factor[:, None], es_tbl)
         ladder = {
             "n_offload_samples": _sum(rx.n_offload),
             "n_offload_ok": _sum(rx.n_offload_ok),
@@ -636,17 +786,20 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
             "n_retries": _sum(rx.n_retries),
             "n_fallback_local": _sum(rx.n_fallback_local),
             "n_dropped": _sum(rx.n_dropped),
+            "n_es_audit_updates": _sum(es_upd.astype(jnp.int32)),
         }
     else:
         total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
         wall = jnp.maximum(ed_wall, es_wall)
         ed_audit = ed_wall
+        new_es_belief = es_tbl
         n_off = _sum(es_samp.astype(jnp.int32))
         zero = jnp.zeros((), jnp.int32)
         ladder = {
             "n_offload_samples": n_off, "n_offload_ok": n_off,
             "n_deadline_miss": zero, "n_retries": zero,
             "n_fallback_local": zero, "n_dropped": zero,
+            "n_es_audit_updates": zero,
         }
     viol = jnp.maximum(0.0, wall / params.T - 1.0)
 
@@ -668,11 +821,12 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         "n_outage": _sum(outage_t.astype(jnp.int32)),
         "n_straggler_updates": _sum(upd.astype(jnp.int32)),
         "n_unsolved": _sum(n_unsolved),
-        "es_utilization": jnp.sum(loads) / (params.n_servers * params.T),
+        "es_utilization": loads_total / (params.n_servers * params.T),
         "realized_makespan": _max(wall),
         **ladder,
     }
-    return new_belief, new_warm.astype(jnp.int32), upd, factor, metrics
+    return (new_belief, new_warm.astype(jnp.int32), upd, factor,
+            new_es_belief, cell_load_out, metrics)
 
 
 def _arrivals(state: EngineState, params: EngineParams,
@@ -719,6 +873,7 @@ def _step_impl(state: EngineState, params: EngineParams,
                ) -> Tuple[EngineState, PeriodMetrics]:
     """One pure period: arrivals + `_period_impl` + state/metric assembly."""
     t = state.period
+    D = state.pending.shape[0]
     H = params.drift.shape[1]
     drift_t = jnp.take(params.drift, t % H, axis=1)
     outage_t = jnp.take(params.outage, t % H, axis=1)
@@ -729,6 +884,40 @@ def _step_impl(state: EngineState, params: EngineParams,
     # the wrong problem.
     outage_prev = jnp.take(params.outage, (t - 1) % H, axis=1)
     stale = (t > 0) & (outage_prev != outage_t)
+    # ---- mobility: move, route, detect handover -------------------------
+    if params.mobility_mode != "off":
+        mob = params.mobility
+        if params.mobility_mode == "replay":
+            pos_t = jnp.take(mob.trace, t % mob.trace.shape[0], axis=0)
+        else:                                               # random walk
+            # folded replayed stream (the fault_seed idiom): per-device
+            # GLOBAL-id folds, so sharded and unsharded walks agree and
+            # arming mobility never perturbs the arrival PRNG
+            kw = jax.random.fold_in(
+                jax.random.PRNGKey(params.mobility_seed), t)
+            offset = (jax.lax.axis_index(axis_name) * D
+                      if axis_name else jnp.int32(0))
+            gid = offset + jnp.arange(D, dtype=jnp.int32)
+            kd = jax.vmap(lambda g: jax.random.fold_in(kw, g))(gid)
+            steps = jax.vmap(
+                lambda k: jax.random.normal(k, (2,), jnp.float64))(kd)
+            pos_t = state.pos + mob.walk_sigma * steps
+        load_frac = state.cell_load / (params.servers_per_cell * params.T)
+        cell_t, covered, link_factor = route_cells(
+            pos_t, mob, load_frac, params.routing)
+        # handover: the previous cell's basis labels an LP whose ES
+        # column was priced for a different link — cold-start it, and
+        # migrate the ES belief back to the new cell's nominal table
+        switched = (t > 0) & (cell_t != state.cell)
+        stale = stale | switched
+        es_belief0 = jnp.where(switched[:, None], params.p_es,
+                               state.p_es_belief)
+        n_handover = jnp.sum(switched.astype(jnp.int32))
+    else:
+        pos_t, cell_t = state.pos, state.cell
+        covered = link_factor = None
+        es_belief0 = state.p_es_belief
+        n_handover = jnp.zeros((), jnp.int32)
     warm0 = jnp.where(stale[:, None], jnp.int32(-1), state.warm_basis)
     ci, take, pending, head, key = _arrivals(state, params, axis_name)
     # the fault stream is replayed — folded from a dedicated seed, never
@@ -737,22 +926,28 @@ def _step_impl(state: EngineState, params: EngineParams,
     # delegation can reproduce the exact same draw per period
     fkey = (jax.random.fold_in(jax.random.PRNGKey(params.fault_seed), t)
             if params.chaos else None)
-    new_belief, new_warm, upd, _factor, m = _period_impl(
-        state.p_ed, warm0, ci, take, drift_t, outage_t, params,
-        axis_name=axis_name, fault_key=fkey)
+    new_belief, new_warm, upd, _factor, new_es_belief, cell_load, m = \
+        _period_impl(
+            state.p_ed, warm0, ci, take, drift_t, outage_t, params,
+            axis_name=axis_name, fault_key=fkey, es_belief=es_belief0,
+            link_factor=link_factor, covered=covered, cell=cell_t)
     backlog = jnp.sum(pending)
     if axis_name:
         backlog = jax.lax.psum(backlog, axis_name)
+        n_handover = jax.lax.psum(n_handover, axis_name)
     n_jobs = m["n_jobs"]
     metrics = PeriodMetrics(
         period=t,
         mean_job_accuracy=jnp.where(
             n_jobs > 0, m["total_accuracy"] / jnp.maximum(n_jobs, 1), 0.0),
-        backlog=backlog.astype(jnp.int32), **m)
+        backlog=backlog.astype(jnp.int32),
+        n_handover=n_handover.astype(jnp.int32), **m)
     new_state = EngineState(
         period=(t + 1).astype(jnp.int32), key=key, p_ed=new_belief,
         pending=pending, head=head, warm_basis=new_warm,
-        n_updates=(state.n_updates + upd.astype(jnp.int32)))
+        n_updates=(state.n_updates + upd.astype(jnp.int32)),
+        pos=pos_t, cell=cell_t.astype(jnp.int32), cell_load=cell_load,
+        p_es_belief=new_es_belief)
     return new_state, metrics
 
 
@@ -763,15 +958,16 @@ def _step_jit(state, params):
 
 @jax.jit
 def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params,
-                fault_key=None):
+                fault_key=None, es_belief=None):
     """The host `FleetEngine.run_period` delegation target: the same
     period core `step` scans over, minus the arrival/state bookkeeping
     (the host engine owns its queue and stats).  ``fault_key`` replays
     one period of the fault stream (`fold_in(PRNGKey(fault_seed),
     period)` — the exact draw `step` makes), or None when chaos is
-    disarmed."""
+    disarmed.  ``es_belief`` threads the chaos-audited ES price table
+    between host periods (None prices from the nominal `params.p_es`)."""
     return _period_impl(belief, warm_basis, ci, take, drift_t, outage_t,
-                        params, fault_key=fault_key)
+                        params, fault_key=fault_key, es_belief=es_belief)
 
 
 def _rollout_impl(state, params, periods: int):
@@ -879,7 +1075,8 @@ def _state_specs():
     from jax.sharding import PartitionSpec as P
     dev = P(FLEET_AXIS)
     return EngineState(period=P(), key=P(), p_ed=dev, pending=dev,
-                       head=dev, warm_basis=dev, n_updates=dev)
+                       head=dev, warm_basis=dev, n_updates=dev,
+                       pos=dev, cell=dev, cell_load=P(), p_es_belief=dev)
 
 
 def _param_specs(params: EngineParams):
@@ -889,10 +1086,20 @@ def _param_specs(params: EngineParams):
     dev = P(FLEET_AXIS)
     fault_specs = FaultModel(
         **{f.name: P() for f in dataclasses.fields(FaultModel)})
+    # the trace is (H, D, 2): replicated horizon axis, sharded fleet axis
+    # (cells themselves are global — every shard sees all S of them).
+    # Disarmed, the null model's (1, 1, 2) placeholder trace cannot split
+    # over the fleet axis — replicate it instead.
+    mobility_specs = MobilityModel(
+        cell_xy=P(), cell_rate=P(), radius=P(), link_alpha=P(),
+        walk_sigma=P(),
+        trace=(P(None, FLEET_AXIS) if params.mobility_mode != "off"
+               else P()))
     return dataclasses.replace(
         params, classes=P(), base_p_ed=dev, p_es=dev, acc=dev, T=P(),
         rate=dev, class_probs=P(), drift=dev, outage=dev,
-        counts=P(None, FLEET_AXIS), stream=dev, faults=fault_specs)
+        counts=P(None, FLEET_AXIS), stream=dev, faults=fault_specs,
+        mobility=mobility_specs)
 
 
 def _metric_specs():

@@ -77,6 +77,59 @@ class AMR2Solver:
 
 
 @register_solver(
+    "routed", batched=True, exact_on_identical=False,
+    supports_es_disabled=True, warm_start=True,
+    description="geometry-aware amr2: route each lane to its best covered "
+                "cell, price ES by the link factor, then delegate "
+                "(core.mobility; uncovered lanes plan local-only)")
+class RoutedSolver:
+    """Multi-cell front-end over `AMR2Solver`: the host-level twin of the
+    engine's traced routing pass.  Each fleet lane is assigned a serving
+    cell from its position (`core.mobility.route_cells` semantics —
+    nearest / min-response-time under the coverage radius), its ES column
+    is scaled by the per-(device, cell) link factor, and uncovered lanes
+    get the ES-disabled sentinel (local-only plans).  The LP itself is
+    amr2 unchanged, so every paper guarantee (≤2T makespan, accuracy gap)
+    holds per lane under the routed prices."""
+
+    def solve_fleet(self, fleet: FleetProblem, *, positions: np.ndarray,
+                    mobility, routing: str = "nearest",
+                    frac_tol: float = 1e-4,
+                    maxiter: Optional[int] = None,
+                    warm_start: Optional[np.ndarray] = None,
+                    impl: str = "jnp", on_error: str = "raise") -> Solution:
+        from ..core.mobility import route_cells, validate_mobility
+        from ..core.problem import ES_DISABLED_SENTINEL
+        B = len(fleet)
+        pos = np.asarray(positions, np.float64)
+        if pos.shape != (B, 2):
+            raise ValueError(
+                f"positions must be ({B}, 2) to match the fleet; got "
+                f"{pos.shape}")
+        validate_mobility(mobility, n_devices=B,
+                          n_servers=mobility.n_cells,    # 1 server / cell
+                          mode="replay", routing=routing)
+        cell, covered, link_factor = (
+            np.asarray(a) for a in route_cells(
+                pos, mobility, np.zeros(mobility.n_cells), routing))
+        p_es = fleet.p_es * link_factor[:, None]
+        p_es = np.where((~covered[:, None]) & fleet.real_mask,
+                        ES_DISABLED_SENTINEL, p_es)
+        routed = FleetProblem(p_ed=fleet.p_ed, p_es=p_es, acc=fleet.acc,
+                              T=fleet.T, real_mask=fleet.real_mask)
+        sol = AMR2Solver().solve_fleet(
+            routed, frac_tol=frac_tol, maxiter=maxiter,
+            warm_start=warm_start, impl=impl, on_error=on_error)
+        # report against the CALLER's (unrouted) problem, tagged with the
+        # routing outcome so serving layers can book per-cell admission
+        sol.problem = fleet
+        sol.solver = np.full(B, "routed", dtype=object)
+        sol.cell = cell.astype(np.int64)
+        sol.link_factor = link_factor
+        return sol
+
+
+@register_solver(
     "amdp", batched=True, exact_on_identical=True,
     supports_es_disabled=True,
     description="exact pseudo-polynomial DP for identical jobs (paper §VI)")

@@ -38,3 +38,8 @@ from .dual import (dual_schedule, dual_schedule_batch,  # noqa: E402
                    dual_schedule_batch_arrays)  # beyond-paper fast scheduler
 __all__ += ["dual_schedule", "dual_schedule_batch",
             "dual_schedule_batch_arrays"]
+from .mobility import (MobilityModel, admit_mask_segmented,  # noqa: E402
+                       admit_mask_cells_np, route_cells,
+                       validate_mobility)  # multi-cell mobility (PR 8)
+__all__ += ["MobilityModel", "admit_mask_segmented", "admit_mask_cells_np",
+            "route_cells", "validate_mobility"]

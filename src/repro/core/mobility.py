@@ -1,0 +1,319 @@
+"""Multi-cell mobility: geometry, traced routing, and the segmented
+per-cell admission scan.
+
+The paper assumes one ED talking to one ES.  This module generalizes the
+engine to S *cells* (base stations), each fronting ``servers_per_cell``
+ES tiers, with devices moving through a 2-D plane:
+
+``MobilityModel``
+    A pytree describing the geometry and the motion: cell positions +
+    per-cell nominal link rates, a coverage ``radius``, the
+    distance->link-slowdown coefficient ``link_alpha``, and either a
+    replayed position trace (``trace`` (H, D, 2) — the parity mode, same
+    contract as the replayed arrival/fault streams) or a random walk
+    (``walk_sigma`` steps drawn from a folded ``mobility_seed`` stream
+    inside the traced step, per-device GLOBAL-id folds so sharded and
+    unsharded walks agree).  All float64 leaves, no static aux: sweeping
+    geometry reuses one compiled rollout.
+``route_cells``
+    The cheap traced routing pass: each device picks its serving cell
+    under the coverage radius — ``"nearest"`` (min distance) or
+    ``"min_time"`` (min estimated response: link factor x last period's
+    cell load) — and gets a per-(device, chosen-cell) link factor that
+    scales its ES latencies.  Out-of-coverage devices route to cell -1
+    and are planned as if their ES link were in outage.
+``admit_mask_segmented``
+    The per-cell admission scan, with NO sequential pass at all.  The
+    host pool's semantics — ascending demand (device id on ties),
+    least-loaded server first-fit — have two exploitable structural
+    properties *within a cell*:
+
+      1. processing ascending demands least-loaded-first is equivalent
+         to ROUND-ROBIN placement (induction on the cyclic load order:
+         after placing items 0..i-1 of the ascending order on servers
+         ``j mod k``, server ``i mod k`` is a least-loaded argmin; ties
+         only permute equal loads, and admission depends only on the
+         load multiset);
+      2. rejections form a SUFFIX of the ascending order (loads never
+         decrease and demands ascend, so once the least-loaded server
+         cannot fit a demand it cannot fit any later one).
+
+    So admission reduces to: lexsort by (cell, demand, id), place by
+    position-mod-k, compute each server chain's inclusive running load
+    with one global cumsum minus per-chain offsets, and admit exactly the
+    devices before their cell's first capacity violation.  O(D log D)
+    parallel sort/scan work instead of the O(D x servers) sequential
+    `lax.scan` — the ROADMAP's "segmented/hierarchical admission scan"
+    rung, and the entire 100k-device gap.  The global scan
+    (`repro.api.engine.admit_mask_jnp`) is kept as the S=1 oracle;
+    `admit_mask_cells_np` is the NumPy per-cell twin for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MobilityModel", "validate_mobility", "route_cells",
+    "admit_mask_segmented", "admit_mask_cells_np",
+    "ROUTING_MODES", "MOBILITY_MODES",
+]
+
+MOBILITY_MODES = ("off", "replay", "walk")
+ROUTING_MODES = ("nearest", "min_time")
+
+_MOBILITY_FIELDS = ("cell_xy", "cell_rate", "radius", "link_alpha",
+                    "walk_sigma", "trace")
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityModel:
+    """Cell geometry + device motion (pytree; every field a float64
+    leaf, no static aux — sweeping geometry reuses one compiled rollout).
+
+    ``trace`` carries the replayed positions ((H, D, 2); periods beyond H
+    cycle).  In walk mode only ``trace[0]`` is read (the initial
+    positions) and subsequent steps integrate ``walk_sigma`` Gaussian
+    increments from the folded mobility stream.  ``radius=inf`` means
+    every device is always covered and — because ``d / inf == 0`` —
+    every link factor is EXACTLY 1.0, which is what makes the S=1
+    reduction to the single-pool engine bitwise."""
+
+    cell_xy: np.ndarray      # (S, 2) cell positions
+    cell_rate: np.ndarray    # (S,) nominal link-rate multipliers (> 0)
+    radius: np.ndarray       # ()   coverage radius (inf: always covered)
+    link_alpha: np.ndarray   # ()   slowdown per unit normalized distance
+    walk_sigma: np.ndarray   # ()   random-walk step stddev (walk mode)
+    trace: np.ndarray        # (H, D, 2) replayed positions / initial pos
+
+    @property
+    def n_cells(self) -> int:
+        return self.cell_xy.shape[0]
+
+    @classmethod
+    def none(cls) -> "MobilityModel":
+        """The null geometry: one cell at the origin, infinite radius —
+        carried by every `EngineParams` so the pytree structure is stable
+        whether or not mobility is armed."""
+        return cls(cell_xy=np.zeros((1, 2), np.float64),
+                   cell_rate=np.ones(1, np.float64),
+                   radius=np.float64(np.inf),
+                   link_alpha=np.float64(0.0),
+                   walk_sigma=np.float64(0.0),
+                   trace=np.zeros((1, 1, 2), np.float64))
+
+    @classmethod
+    def make(cls, *, cell_xy, trace, cell_rate=None, radius=np.inf,
+             link_alpha: float = 0.0,
+             walk_sigma: float = 0.0) -> "MobilityModel":
+        """Keyword constructor with float64 coercion.  ``trace`` is
+        (H, D, 2) (walk mode passes (1, D, 2) initial positions)."""
+        cell_xy = np.asarray(cell_xy, np.float64)
+        trace = np.asarray(trace, np.float64)
+        if cell_xy.ndim != 2 or cell_xy.shape[1] != 2:
+            raise ValueError(f"cell_xy must be (S, 2); got {cell_xy.shape}")
+        if trace.ndim != 3 or trace.shape[2] != 2:
+            raise ValueError(f"trace must be (H, D, 2); got {trace.shape}")
+        S = cell_xy.shape[0]
+        rate = (np.ones(S, np.float64) if cell_rate is None
+                else np.asarray(cell_rate, np.float64))
+        return cls(cell_xy=cell_xy, cell_rate=rate,
+                   radius=np.float64(radius),
+                   link_alpha=np.float64(link_alpha),
+                   walk_sigma=np.float64(walk_sigma), trace=trace)
+
+    def is_null(self) -> bool:
+        return (self.n_cells == 1 and self.trace.shape[1] == 1
+                and not np.any(np.asarray(self.cell_xy))
+                and np.isinf(np.asarray(self.radius)))
+
+
+def _mobility_unflatten(aux, children):
+    # bypass __init__ so tracers survive the round-trip (the `_register`
+    # idiom in repro.api.engine)
+    obj = object.__new__(MobilityModel)
+    for f, v in zip(_MOBILITY_FIELDS, children):
+        object.__setattr__(obj, f, v)
+    return obj
+
+
+jax.tree_util.register_pytree_node(
+    MobilityModel,
+    lambda mm: (tuple(getattr(mm, f) for f in _MOBILITY_FIELDS), None),
+    _mobility_unflatten)
+
+
+def validate_mobility(model: MobilityModel, *, n_devices: int,
+                      n_servers: int, mode: str, routing: str) -> None:
+    """The geometry guard `EngineParams.from_fleet`/`with_mobility` run:
+    reject non-f64 leaves, non-positive link rates, and mismatched
+    (D, S) shapes with named `ValueError`s instead of downstream NaN
+    makespans."""
+    if mode not in MOBILITY_MODES:
+        raise ValueError(f"unknown mobility_mode {mode!r}; expected one "
+                         f"of {MOBILITY_MODES}")
+    if routing not in ROUTING_MODES:
+        raise ValueError(f"unknown routing {routing!r}; expected one of "
+                         f"{ROUTING_MODES}")
+    if mode == "off":
+        return
+    for f in dataclasses.fields(MobilityModel):
+        leaf = np.asarray(getattr(model, f.name))
+        if leaf.dtype != np.float64:
+            raise ValueError(
+                f"mobility.{f.name} is {leaf.dtype} but the engine is "
+                f"float64-only; build geometry arrays as float64")
+    cell_xy = np.asarray(model.cell_xy)
+    trace = np.asarray(model.trace)
+    rate = np.asarray(model.cell_rate)
+    S = cell_xy.shape[0]
+    if cell_xy.ndim != 2 or cell_xy.shape[1] != 2:
+        raise ValueError(f"mobility.cell_xy must be (S, 2); got "
+                         f"{cell_xy.shape}")
+    if rate.shape != (S,):
+        raise ValueError(
+            f"mobility.cell_rate must be ({S},) to match the "
+            f"{S}-cell geometry; got {rate.shape}")
+    if not np.all(rate > 0):
+        raise ValueError(
+            f"mobility.cell_rate must be strictly positive (a zero or "
+            f"negative link rate prices an infinite/negative ES latency); "
+            f"got min {rate.min()}")
+    if trace.ndim != 3 or trace.shape[1] != n_devices \
+            or trace.shape[2] != 2:
+        raise ValueError(
+            f"mobility.trace must be (H, {n_devices}, 2) for this "
+            f"{n_devices}-device fleet; got {trace.shape}")
+    r = float(np.asarray(model.radius))
+    if not r > 0:
+        raise ValueError(f"mobility.radius must be positive; got {r}")
+    if float(np.asarray(model.link_alpha)) < 0:
+        raise ValueError("mobility.link_alpha must be >= 0")
+    if mode == "walk" and float(np.asarray(model.walk_sigma)) < 0:
+        raise ValueError("mobility.walk_sigma must be >= 0")
+    if n_servers % S:
+        raise ValueError(
+            f"n_servers={n_servers} must be divisible by the "
+            f"{S}-cell geometry (servers_per_cell = n_servers // n_cells)")
+
+
+# ---------------------------------------------------------------------------
+# traced routing
+# ---------------------------------------------------------------------------
+def route_cells(pos, model: MobilityModel, load_frac, routing: str):
+    """One traced routing pass: ``pos`` (D, 2) -> ``(cell (D,) int32,
+    covered (D,) bool, link_factor (D,) f64)``.
+
+    ``"nearest"`` picks the min-distance covered cell; ``"min_time"``
+    weights each covered cell's link factor by ``1 + load_frac`` (last
+    period's per-cell utilization — a one-period-stale response-time
+    estimate, so routing stays a cheap pure map with no fixed point).
+    The link factor of the chosen cell is
+    ``(1 + link_alpha * dist / radius) / cell_rate`` — exactly 1.0 under
+    an infinite radius with unit rates.  Uncovered devices get cell -1
+    and factor 1.0 (their ES column is disabled upstream, the factor is
+    never priced)."""
+    diff = pos[:, None, :] - model.cell_xy[None, :, :]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))        # (D, S)
+    covered_per = dist <= model.radius
+    lf = (1.0 + model.link_alpha * (dist / model.radius)) \
+        / model.cell_rate[None, :]
+    if routing == "nearest":
+        score = dist
+    else:                                                  # "min_time"
+        score = lf * (1.0 + load_frac)[None, :]
+    score = jnp.where(covered_per, score, jnp.inf)
+    cell = jnp.argmin(score, axis=1).astype(jnp.int32)
+    covered = covered_per.any(axis=1)
+    link = jnp.take_along_axis(lf, cell[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+    return (jnp.where(covered, cell, jnp.int32(-1)), covered,
+            jnp.where(covered, link, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# segmented per-cell admission (no sequential scan)
+# ---------------------------------------------------------------------------
+def admit_mask_segmented(demands, cell, T, n_cells: int,
+                         servers_per_cell: int):
+    """Per-cell first-fit admission as pure sort/cumsum work.
+
+    ``demands`` (D,) ES seconds (<= 0: not offloading); ``cell`` (D,)
+    int32 serving cell per device (-1: uncovered, never admitted).
+    Returns ``(admitted (D,) bool, loads (n_cells, servers_per_cell))``
+    with exactly the host pool's per-cell semantics: ascending demand
+    (device id on ties), least-loaded server first — see the module
+    docstring for why round-robin placement + suffix rejection make this
+    exact.  Per-server loads may be permuted within a cell relative to
+    the sequential scan when equal demands tie, but the admitted set and
+    every per-cell load multiset match."""
+    D = demands.shape[0]
+    k = servers_per_cell
+    active = (demands > 0) & (cell >= 0)
+    eff = jnp.where(active, demands, jnp.inf)
+    # segment id: inactive devices into phantom cell `n_cells`
+    ckey = jnp.where(active, cell, jnp.int32(n_cells))
+    # lexsort by (cell, demand, id): two stable argsorts
+    ord1 = jnp.argsort(eff, stable=True)
+    order = ord1[jnp.argsort(ckey[ord1], stable=True)]
+    sc = ckey[order]                                   # ascending cells
+    sd = jnp.where(active[order], demands[order], 0.0)
+    # position within cell -> round-robin server chain
+    seg_start = jnp.searchsorted(sc, jnp.arange(n_cells + 1,
+                                                dtype=sc.dtype))
+    pos = jnp.arange(D, dtype=jnp.int32) \
+        - seg_start[jnp.clip(sc, 0, n_cells)].astype(jnp.int32)
+    srv = pos % k
+    gid = sc.astype(jnp.int32) * k + srv               # server-chain id
+    # inclusive running load per chain: stable sort by chain, one global
+    # cumsum, minus each chain's prefix offset
+    ord3 = jnp.argsort(gid, stable=True)
+    gsorted = gid[ord3]
+    dsorted = sd[ord3]
+    cums = jnp.cumsum(dsorted)
+    n_groups = (n_cells + 1) * k
+    start = jnp.searchsorted(gsorted, jnp.arange(n_groups,
+                                                 dtype=gsorted.dtype))
+    start_c = jnp.clip(start, 0, D - 1)
+    base = jnp.where(start < D, cums[start_c] - dsorted[start_c], 0.0)
+    inc3 = cums - base[gsorted]
+    inc = jnp.zeros(D, demands.dtype).at[ord3].set(inc3)  # back to `order`
+    fits = inc <= T + 1e-12
+    # suffix rule: everything at/after the cell's first violation is out
+    big = jnp.int32(D)
+    viol_pos = jnp.where(active[order] & ~fits, pos, big)
+    sc_c = jnp.clip(sc, 0, max(n_cells - 1, 0)).astype(jnp.int32)
+    first_viol = jnp.full(max(n_cells, 1), big, jnp.int32).at[sc_c].min(
+        jnp.where(sc < n_cells, viol_pos, big))
+    adm_sorted = active[order] & fits & (pos < first_viol[sc_c])
+    admitted = jnp.zeros(D, bool).at[order].set(adm_sorted)
+    loads = jnp.zeros(max(n_cells, 1) * k, demands.dtype).at[
+        jnp.clip(gid, 0, max(n_cells, 1) * k - 1)].add(
+        jnp.where(adm_sorted, sd, 0.0))
+    return admitted, loads.reshape(max(n_cells, 1), k)
+
+
+def admit_mask_cells_np(demands, cell, T, n_cells: int,
+                        servers_per_cell: int):
+    """NumPy oracle for `admit_mask_segmented`: the host pool's
+    sequential first-fit run independently inside each cell."""
+    demands = np.asarray(demands, np.float64)
+    cell = np.asarray(cell)
+    D = len(demands)
+    mask = np.zeros(D, bool)
+    loads = np.zeros((max(n_cells, 1), servers_per_cell))
+    eff = np.where((demands > 0) & (cell >= 0), demands, np.inf)
+    order = np.argsort(eff, kind="stable")
+    for d in order:
+        if not np.isfinite(eff[d]):
+            break                      # the +inf tail: non-offloaders
+        need = float(demands[d])
+        c = int(cell[d])
+        slot = int(np.argmin(loads[c]))
+        if loads[c, slot] + need <= T + 1e-12:
+            loads[c, slot] += need
+            mask[d] = True
+    return mask, loads

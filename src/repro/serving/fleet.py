@@ -181,6 +181,7 @@ class FleetPeriodStats:
     n_fallback_local: int = 0   # ladder rung 2: local-model completions
     n_dropped: int = 0          # ladder rung 3: accuracy-0 drops
     realized_makespan: float = 0.0  # max realized device wall (seconds)
+    n_es_audit_updates: int = 0  # ES-latency beliefs EMA-inflated (chaos)
 
 
 class EdgeServerPool:
@@ -292,6 +293,13 @@ class FleetConfig:
     faults: Optional[FaultModel] = None
     max_retries: int = 2
     fault_seed: int = 0
+    # multi-cell mobility (pure-functional engine only — the host period
+    # pipeline has no position state; see repro.core.mobility).  None
+    # disarms; `EngineParams.from_config` picks these up for rollouts.
+    mobility: Optional[object] = None       # core.mobility.MobilityModel
+    mobility_mode: str = "replay"
+    routing: str = "nearest"
+    mobility_seed: int = 0
     # "raise" (default): an uncertified-LP period raises
     # UnsolvedPeriodError (carrying partial stats); "warn": warn and book
     # the period — its unsolved lanes were re-planned local-only by the
@@ -339,6 +347,15 @@ class FleetEngine:
     def from_config(cls, config: FleetConfig) -> "FleetEngine":
         """Build the engine a `FleetConfig` describes (same fleet, queue,
         and policy as the equivalent manual construction)."""
+        if config.mobility is not None \
+                and not getattr(config.mobility, "is_null", lambda: True)():
+            # positions/cells/handover live in the traced EngineState scan;
+            # there is no host twin of the routing + segmented admission
+            raise ValueError(
+                "multi-cell mobility runs on the pure-functional engine "
+                "only: build EngineParams.from_config(config) and use "
+                "repro.api.engine.rollout / rollout_sharded instead of "
+                "FleetEngine")
         return cls(config.build_devices(), config.build_queue(),
                    n_servers=config.n_servers, T=config.T,
                    policy=config.policy, backend=config.backend,
@@ -443,6 +460,11 @@ class FleetEngine:
             qcls = np.asarray(queue.classes)
             self._v2_qorder = np.argsort(qcls, kind="stable")
             self._v2_qsorted = qcls[self._v2_qorder]
+            # chaos-audited ES-latency belief (mirrors the scan's
+            # EngineState.p_es_belief leaf; == p_es until the realized-
+            # execution audit inflates rows)
+            self._v2_es_belief = np.array(
+                np.asarray(self._v2_params.p_es), dtype=np.float64)
         if faults is not None and not faults.is_null() \
                 and self._v2_params is None:
             # the ladder lives in the traced period core; there is no
@@ -522,8 +544,11 @@ class FleetEngine:
                 import jax as _jax
                 fault_key = _jax.random.fold_in(
                     _jax.random.PRNGKey(params.fault_seed), np.int32(t))
-            _belief2, new_warm, upd, factor, m = _period_jit(
-                belief, warm, ci, take, drift, outage, params, fault_key)
+            (_belief2, new_warm, upd, factor, new_es_belief, _cload,
+             m) = _period_jit(belief, warm, ci, take, drift, outage,
+                              params, fault_key,
+                              es_belief=self._v2_es_belief)
+        self._v2_es_belief = np.asarray(new_es_belief, dtype=np.float64)
         m = {k: np.asarray(v) for k, v in m.items()}
         plan_seconds = _time.perf_counter() - t0
         if int(m["n_unsolved"]):
@@ -575,7 +600,8 @@ class FleetEngine:
             n_retries=int(m["n_retries"]),
             n_fallback_local=int(m["n_fallback_local"]),
             n_dropped=int(m["n_dropped"]),
-            realized_makespan=float(m["realized_makespan"]))
+            realized_makespan=float(m["realized_makespan"]),
+            n_es_audit_updates=int(m["n_es_audit_updates"]))
         self.history.append(stats)
         return stats
 

@@ -35,7 +35,8 @@ def _problems(insts):
 # registry
 # ---------------------------------------------------------------------------
 def test_registry_lists_all_solvers():
-    assert api.solver_names() == ["amdp", "amr2", "dual", "greedy", "lp"]
+    assert api.solver_names() == ["amdp", "amr2", "dual", "greedy", "lp",
+                                  "routed"]
     infos = api.solvers()
     assert infos["amdp"].exact_on_identical
     assert not infos["greedy"].batched

@@ -455,7 +455,8 @@ def test_rollout_donate_is_bitwise_invisible():
 
 
 _STATE_FIELDS_TEST = ("period", "key", "p_ed", "pending", "head",
-                      "warm_basis", "n_updates")
+                      "warm_basis", "n_updates", "pos", "cell",
+                      "cell_load", "p_es_belief")
 
 
 def test_engine_rejects_float32_state_and_params():
