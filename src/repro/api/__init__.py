@@ -14,6 +14,16 @@ every planning algorithm plugs into:
 
 The legacy `serving.plan*` entry points are deprecation shims over this
 module; new code (and every repo-internal call site) uses `api` directly.
+
+The differentiable serving stack rides on the same surface: arm a params
+value with ``EngineParams.with_differentiable()`` and the epoch becomes a
+`jax.grad`-able function of the continuous knobs (ES capacity ``p_es``,
+deadline ``T``, ladder mix ``acc``):
+
+    >>> armed = params.with_differentiable(smooth_mode="soft")
+    >>> val, g = api.rollout_value_and_grad(engine.init_state(armed),
+    ...                                     armed, periods)
+    >>> g["p_es"].shape == params.p_es.shape
 """
 from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED,
                             SOLUTION_STATUS_NAMES, FleetProblem, Problem,
@@ -23,6 +33,8 @@ from .registry import (Solver, SolverInfo, get_solver, register_solver,
                        solver_names, solver_table, solvers)
 from . import solvers as _builtin_solvers  # noqa: F401  (register entries)
 from . import engine  # pure-functional EngineState/step/rollout/shard
+from .engine import (GRAD_LEAVES, combine_diff, partition_diff,
+                     rollout_grad, rollout_value_and_grad)
 
 __all__ = [
     "Problem", "FleetProblem", "Solution",
@@ -31,4 +43,6 @@ __all__ = [
     "Solver", "SolverInfo", "register_solver", "get_solver",
     "solver_names", "solvers", "solver_table",
     "engine",
+    "GRAD_LEAVES", "rollout_grad", "rollout_value_and_grad",
+    "partition_diff", "combine_diff",
 ]

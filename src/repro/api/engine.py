@@ -65,13 +65,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.amr2 import build_lp_arrays_jnp, round_relaxation_jnp
+from ..core.amr2 import (build_lp_arrays_jnp, round_relaxation_jnp,
+                         soft_assignment_weights, straight_through_weights)
 from ..core.dual import _dual_one
 from ..core.faults import (FaultModel, greedy_local_fill,
                            realize_execution, sample_realization)
-from ..core.lp import _bucket_maxiter, simplex_batch_core
-from ..core.mobility import (MobilityModel, admit_mask_segmented,
-                             route_cells, validate_mobility)
+from ..core.lp import (_bucket_maxiter, simplex_batch_core,
+                       simplex_batch_grad)
+from ..core.mobility import (MobilityModel, admit_mask_pool,
+                             admit_mask_segmented, route_cells,
+                             validate_mobility)
 from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED as
                             _ST_UNSOLVED, FleetProblem)
 
@@ -184,6 +187,22 @@ class EngineParams:
     n_cells: int = 1
     mobility_seed: int = 0
     shard_by_cell: bool = False
+    # differentiable rollout (static; False keeps the forward trace
+    # byte-identical to an engine without the gradient subsystem).
+    # ``smooth_mode`` picks the relaxation of the two discrete stages:
+    # "st" (straight-through: forward = the hard Algorithm-2 rounding +
+    # first-fit admission, backward = the smoothed Jacobians) or "soft"
+    # (forward itself runs the temperature-softened blend — the mode
+    # finite-difference checks validate, since the hard forward is
+    # piecewise constant).  ``smooth_tau`` tempers the assignment softmax
+    # (`core.amr2.soft_assignment_weights`), ``admit_tau`` the sigmoid
+    # capacity test (in units of T).  ``grad_leaves`` names the default
+    # EngineParams leaves `rollout_grad` differentiates.
+    differentiable: bool = False
+    smooth_mode: str = "st"
+    smooth_tau: float = 0.25
+    admit_tau: float = 0.05
+    grad_leaves: Tuple[str, ...] = ("p_es", "T", "acc")
 
     @property
     def n_devices(self) -> int:
@@ -369,6 +388,52 @@ class EngineParams:
                            else mobility_seed),
             shard_by_cell=shard_by_cell)
 
+    def with_differentiable(self, enabled: bool = True, *,
+                            smooth_mode: str = "st",
+                            smooth_tau: float = 0.25,
+                            admit_tau: float = 0.05,
+                            grad_leaves: Optional[Tuple[str, ...]] = None
+                            ) -> "EngineParams":
+        """Arm (or disarm) the differentiable rollout on an existing
+        params value.  Differentiability needs the traced amr2 LP path
+        (the implicit VJP lives at the simplex's converged basis) and a
+        deterministic accuracy pipeline, so chaos and mobility must be
+        disarmed; the sharded entry points reject it (gradients run on
+        the single-host trace).  See the class docstring for the
+        ``smooth_mode``/``smooth_tau``/``admit_tau`` knobs."""
+        if enabled:
+            if self.policy != "amr2":
+                raise ValueError(
+                    f"differentiable rollouts need policy='amr2' (the LP "
+                    f"relaxation carries the gradient); got "
+                    f"{self.policy!r}")
+            if self.chaos:
+                raise ValueError(
+                    "differentiable rollouts need chaos disarmed: the "
+                    "fault ladder's retry/drop counters are discrete and "
+                    "the realized-execution pass is not relaxed")
+            if self.mobility_mode != "off":
+                raise ValueError(
+                    "differentiable rollouts need mobility off: routing "
+                    "and the per-cell admission are not relaxed yet")
+            if smooth_mode not in ("st", "soft"):
+                raise ValueError(f"unknown smooth_mode {smooth_mode!r}; "
+                                 f"expected 'st' or 'soft'")
+            if not (smooth_tau > 0 and admit_tau > 0):
+                raise ValueError("smooth_tau and admit_tau must be > 0")
+            gl = tuple(grad_leaves) if grad_leaves is not None \
+                else self.grad_leaves
+            bad = [f for f in gl if f not in GRAD_LEAVES]
+            if bad:
+                raise ValueError(
+                    f"grad_leaves {bad} not differentiable; the "
+                    f"continuous EngineParams knobs are {GRAD_LEAVES}")
+        else:
+            gl = self.grad_leaves
+        return dataclasses.replace(
+            self, differentiable=enabled, smooth_mode=smooth_mode,
+            smooth_tau=smooth_tau, admit_tau=admit_tau, grad_leaves=gl)
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineState:
@@ -446,7 +511,13 @@ _PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
               "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
               "tol", "lp_method", "chaos", "max_retries", "fault_seed",
               "mobility_mode", "routing", "n_cells", "mobility_seed",
-              "shard_by_cell")
+              "shard_by_cell", "differentiable", "smooth_mode",
+              "smooth_tau", "admit_tau", "grad_leaves")
+
+# EngineParams leaves `rollout_grad` may differentiate: the continuous
+# fleet knobs.  Integer/bool leaves (counts, stream, outage, classes) and
+# the replayed schedules are bookkeeping — `partition_diff` fences them.
+GRAD_LEAVES = ("p_es", "base_p_ed", "acc", "T")
 
 _register(EngineParams, _PARAM_LEAVES, _PARAM_AUX)
 _register(EngineState, _STATE_FIELDS)
@@ -539,7 +610,12 @@ def _plan_flat(params: EngineParams, fp: FleetProblem, warm_basis,
     amr2: warm-or-cold batched simplex + vectorized rounding — per-lane
     bit-comparable with the host `solve(..., policy="amr2")` dispatch.
     dual: the vmapped bisection (`core.dual._dual_one`).  Returns
-    ``(assignment (D, n) int32, status (D,) int32, basis (D, R) int32)``.
+    ``(assignment (D, n) int32, status (D,) int32, basis (D, R) int32)``
+    — plus the LP relaxation ``xbar (D, n, m+1)`` as a fourth element
+    when the ``differentiable`` aux is armed (amr2 only): the smoothed
+    accuracy blend needs the fractional solution, and the solve routes
+    through `lp.simplex_batch_grad` so cotangents reach ``A/b/c`` via
+    the implicit KKT solve instead of dying at the pivot while_loop.
     """
     D, n = fp.p_es.shape
     m = fp.p_ed.shape[2]
@@ -547,7 +623,9 @@ def _plan_flat(params: EngineParams, fp: FleetProblem, warm_basis,
         A, b, c_full = build_lp_arrays_jnp(fp.p_ed, fp.p_es, fp.acc, fp.T)
         maxiter = params.maxiter if params.maxiter is not None else \
             _bucket_maxiter(50 * (A.shape[1] + 2))
-        x, _fun, st, _ni, basis, _ok = simplex_batch_core(
+        solve = simplex_batch_grad if params.differentiable \
+            else simplex_batch_core
+        x, _fun, st, _ni, basis, _ok = solve(
             A, b, c_full, warm_basis, nv=n * (m + 1), maxiter=maxiter,
             tol=params.tol, lane_mask=lane_mask,
             method=params.lp_method)
@@ -555,8 +633,9 @@ def _plan_flat(params: EngineParams, fp: FleetProblem, warm_basis,
         assign, sched_status, _nf = round_relaxation_jnp(
             fp.p_ed, fp.p_es, fp.acc, fp.T, xbar, st,
             frac_tol=params.frac_tol)
-        return (assign.astype(jnp.int32), sched_status.astype(jnp.int32),
-                basis.astype(jnp.int32))
+        out = (assign.astype(jnp.int32), sched_status.astype(jnp.int32),
+               basis.astype(jnp.int32))
+        return out + (xbar,) if params.differentiable else out
     # dual: no basis to carry; status 0 = ok / 1 = fallback (the shared
     # SOLUTION_STATUS_NAMES codes)
     assign, st = jax.vmap(partial(_dual_one, iters=params.iters))(
@@ -640,7 +719,10 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                                             params.acc, Tvec, mask)
 
     # ---- plan the whole (local) fleet in one traced solve ---------------
-    assign, status, basis = _plan(params, fp, warm_basis)
+    diff = params.differentiable and params.policy == "amr2"
+    plan_out = _plan(params, fp, warm_basis)
+    assign, status, basis = plan_out[:3]
+    xbar = plan_out[3] if diff else None
     unsolved_lane = status == _ST_UNSOLVED
     n_unsolved = unsolved_lane.astype(jnp.int32)
     # per-lane recovery: unsolved lanes fall back to a greedy local-only
@@ -650,21 +732,24 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                                params.acc, params.T)
 
     # ---- ES-pool admission on the GLOBAL demand vector ------------------
-    # S=1 keeps the sequential global scan (the bitwise-pinned oracle);
-    # multi-cell fleets run the segmented per-cell formulation — pure
+    # S=1 runs the one-cell fast path of the segmented admission
+    # (`core.mobility.admit_mask_pool` — bitwise-pinned to the retired
+    # sequential `admit_mask_jnp` scan, ceil(D/k) scan steps instead of
+    # D); multi-cell fleets run the segmented per-cell formulation — pure
     # sort/cumsum work, no O(D) sequential pass (core.mobility).  Under
     # `shard_by_cell` the all_gather is elided outright: each shard admits
     # its own cells locally and only the per-cell loads are psum-merged.
     demand = jnp.where(mask & (assign == m), p_es_jobs, 0.0).sum(axis=1)
     use_cells = params.mobility_mode != "off" and params.n_cells > 1
+    inc = None          # inclusive chain loads (the admission relaxation)
     if axis_name is None:
         if use_cells:
             admitted, cloads = admit_mask_segmented(
                 demand, cell, params.T, params.n_cells,
                 params.servers_per_cell)
         else:
-            admitted, loads = admit_mask_jnp(demand, params.T,
-                                             params.n_servers)
+            admitted, loads, inc = admit_mask_pool(demand, params.T,
+                                                   params.n_servers)
     elif use_cells and params.shard_by_cell:
         admitted, cloads = admit_mask_segmented(
             demand, cell, params.T, params.n_cells,
@@ -680,8 +765,8 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         admitted = jax.lax.dynamic_slice_in_dim(admitted_g, idx * D, D)
     else:
         demand_g = jax.lax.all_gather(demand, axis_name, tiled=True)
-        admitted_g, loads = admit_mask_jnp(demand_g, params.T,
-                                           params.n_servers)
+        admitted_g, loads, _inc_g = admit_mask_pool(demand_g, params.T,
+                                                    params.n_servers)
         idx = jax.lax.axis_index(axis_name)
         admitted = jax.lax.dynamic_slice_in_dim(admitted_g, idx * D, D)
     if use_cells:
@@ -701,24 +786,41 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
     # a per-shard scalar, so sharded and unsharded runs agree: a shard
     # with no bumped devices skips a solve whose result its jnp.where
     # would have discarded anyway.
-    def _replan(assign):
+    def _bp_problem():
         p_es_crippled = jnp.where(mask, ES_DISABLED_SENTINEL, 0.0)
-        fp_bp = FleetProblem.from_arrays_unchecked(
+        return FleetProblem.from_arrays_unchecked(
             p_ed_jobs, p_es_crippled, params.acc, Tvec, mask)
-        assign_bp, st_bp, _ = _plan(
-            params, fp_bp, None,
-            lane_mask=bumped if params.policy == "amr2" else None)
-        unsolved_bp_lane = bumped & (st_bp == _ST_UNSOLVED)
-        assign_bp = _recover_unsolved(assign_bp, unsolved_bp_lane,
-                                      p_ed_jobs, mask, params.acc,
-                                      params.T)
-        return (jnp.where(bumped[:, None], assign_bp, assign),
-                unsolved_bp_lane.astype(jnp.int32))
 
-    assign, unsolved_bp = jax.lax.cond(
-        bumped.any(), _replan,
-        lambda a: (a, jnp.zeros_like(n_unsolved)), assign)
-    n_unsolved = n_unsolved + unsolved_bp
+    if diff and axis_name is None:
+        # Differentiable mode: the smoothed admission gives EVERY
+        # offloader partial weight on its ES-disabled alternative, so the
+        # replan runs unconditionally (lane_mask widened from `bumped` to
+        # `offl`) — the hard assignment merge below still only reads the
+        # bumped lanes, so the hard forward numbers are unchanged.
+        bp4 = _plan(params, _bp_problem(), None, lane_mask=offl)
+        assign_bp, st_bp, _bas_bp, xbar_bp = bp4
+        unsolved_bp = bumped & (st_bp == _ST_UNSOLVED)
+        assign_bp = _recover_unsolved(assign_bp, unsolved_bp, p_ed_jobs,
+                                      mask, params.acc, params.T)
+        assign_pre = assign                     # primary plan, post-recovery
+        assign = jnp.where(bumped[:, None], assign_bp, assign)
+        n_unsolved = n_unsolved + unsolved_bp.astype(jnp.int32)
+    else:
+        def _replan(assign):
+            assign_bp, st_bp = _plan(
+                params, _bp_problem(), None,
+                lane_mask=bumped if params.policy == "amr2" else None)[:2]
+            unsolved_bp_lane = bumped & (st_bp == _ST_UNSOLVED)
+            assign_bp = _recover_unsolved(assign_bp, unsolved_bp_lane,
+                                          p_ed_jobs, mask, params.acc,
+                                          params.T)
+            return (jnp.where(bumped[:, None], assign_bp, assign),
+                    unsolved_bp_lane.astype(jnp.int32))
+
+        assign, unsolved_bp = jax.lax.cond(
+            bumped.any(), _replan,
+            lambda a: (a, jnp.zeros_like(n_unsolved)), assign)
+        n_unsolved = n_unsolved + unsolved_bp
 
     # ---- pricing, violations, straggler audit ---------------------------
     def _sum(x):
@@ -789,7 +891,44 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
             "n_es_audit_updates": _sum(es_upd.astype(jnp.int32)),
         }
     else:
-        total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
+        if diff and axis_name is None:
+            # ---- smoothed accuracy: the differentiable twin -------------
+            # Two discrete stages get relaxed: Algorithm-2 rounding
+            # (temperature-softened assignment weights over the LP
+            # relaxation) and first-fit admission (a sigmoid capacity
+            # test on each offloader's inclusive chain load `inc` — the
+            # EXACT value the hard first-fit compared against T).  Per
+            # device: accP from the primary plan, accBP from the
+            # ES-disabled replan, blended by the admission weight; the
+            # "st" mode forwards the HARD decisions (one-hot weights,
+            # boolean admission) and routes gradients through the soft
+            # ones, so served numbers match the hard path while the
+            # cotangents stay alive.
+            if params.smooth_mode == "st":
+                wP = straight_through_weights(xbar, assign_pre,
+                                              tau=params.smooth_tau)
+                wBP = straight_through_weights(xbar_bp, assign_bp,
+                                               tau=params.smooth_tau)
+            else:
+                wP = soft_assignment_weights(xbar, tau=params.smooth_tau)
+                wBP = soft_assignment_weights(xbar_bp,
+                                              tau=params.smooth_tau)
+            accP = jnp.where(mask, jnp.einsum("dsi,di->ds", wP,
+                                              params.acc), 0.0).sum(axis=1)
+            accBP = jnp.where(mask, jnp.einsum("dsi,di->ds", wBP,
+                                               params.acc), 0.0).sum(axis=1)
+            adm_soft = jax.nn.sigmoid(
+                (params.T + 1e-12 - inc) / (params.admit_tau * params.T))
+            if params.smooth_mode == "st":
+                adm_use = adm_soft + jax.lax.stop_gradient(
+                    admitted.astype(adm_soft.dtype) - adm_soft)
+            else:
+                adm_use = adm_soft
+            dev_acc = jnp.where(offl, adm_use * accP
+                                + (1.0 - adm_use) * accBP, accP)
+            total_acc = jnp.sum(dev_acc)
+        else:
+            total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
         wall = jnp.maximum(ed_wall, es_wall)
         ed_audit = ed_wall
         new_es_belief = es_tbl
@@ -1055,6 +1194,123 @@ def rollout(state: EngineState, params: EngineParams, periods: int,
 
 
 # --------------------------------------------------------------------------
+# differentiation: pytree partition + rollout gradients
+# --------------------------------------------------------------------------
+# Placeholder for the non-selected half of a partitioned pytree.  None on
+# purpose: jax treats None as an EMPTY subtree, so `jax.grad` over the
+# diff half traces ONLY the float leaves (an opaque sentinel object would
+# be rejected as "not a valid JAX type" the moment the half crosses a
+# jit/grad boundary).  `combine_diff` re-materializes the placeholders as
+# leaves via ``is_leaf`` when zipping the halves back together.
+_NONDIFF = None
+
+
+def partition_diff(tree):
+    """Split a pytree into (diff, nondiff) halves by leaf dtype.
+
+    Inexact (float) leaves keep their value in the ``diff`` half and
+    become ``None`` in ``nondiff``; integer/bool/key leaves — warm basis
+    labels, stream cursors, PRNG keys, fault counters — go the other
+    way.  Both halves keep the ORIGINAL node structure, so ``jax.grad``
+    over the diff half traces only continuous leaves (a naive grad over
+    a full `EngineState` dies on the int32 bookkeeping) and
+    `combine_diff` reassembles losslessly."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    isf = [jnp.issubdtype(getattr(l, "dtype", np.asarray(l).dtype),
+                          jnp.inexact) for l in leaves]
+    diff = treedef.unflatten(
+        [l if f else _NONDIFF for l, f in zip(leaves, isf)])
+    nondiff = treedef.unflatten(
+        [_NONDIFF if f else l for l, f in zip(leaves, isf)])
+    return diff, nondiff
+
+
+def combine_diff(diff, nondiff):
+    """Inverse of `partition_diff`: merge the two halves back into one
+    pytree (each leaf comes from whichever half is not the ``None``
+    placeholder).  ``is_leaf`` keeps the placeholders visible to the
+    zip — without it each None is an empty subtree and the two halves
+    would not share a structure."""
+    return jax.tree_util.tree_map(
+        lambda d, n: d if n is _NONDIFF else n, diff, nondiff,
+        is_leaf=lambda x: x is _NONDIFF)
+
+
+def _vag_impl(leaf_vals, state, params, periods: int, wrt: tuple):
+    """Differentiable rollout objective: total served accuracy over the
+    epoch as a function of the selected `EngineParams` leaves.
+
+    The belief tables are re-rooted at the (differentiated) nominal
+    tables — `_period_impl` PRICES from `state.p_ed`/`state.p_es_belief`,
+    not the params leaves, so without the rebinding every cotangent
+    w.r.t. ``p_es``/``base_p_ed`` would be zero.  With chaos disarmed
+    (the `with_differentiable` contract) the rebinding is semantically
+    what `init_state` does anyway."""
+    params = dataclasses.replace(params, **dict(zip(wrt, leaf_vals)))
+    state = dataclasses.replace(
+        state, p_ed=jnp.asarray(params.base_p_ed, jnp.float64),
+        p_es_belief=jnp.asarray(params.p_es, jnp.float64))
+    _, metrics = _rollout_impl(state, params, periods)
+    return jnp.sum(metrics.total_accuracy)
+
+
+_vag_jit = partial(jax.jit, static_argnames=("periods", "wrt"))(
+    jax.value_and_grad(_vag_impl))
+
+
+def _grad_entry(state, params, periods, wrt):
+    if not params.differentiable:
+        raise ValueError(
+            "rollout_grad/rollout_value_and_grad need "
+            "params.with_differentiable() — with the flag off the "
+            "forward trace is the hard (piecewise-constant) path and "
+            "every gradient would be zero")
+    _require_f64("state", state)
+    _require_f64("params", params)
+    _check_horizon(state, params, int(periods))
+    wrt = tuple(wrt) if wrt is not None else tuple(params.grad_leaves)
+    bad = [f for f in wrt if f not in GRAD_LEAVES]
+    if bad:
+        raise ValueError(f"wrt {bad} not differentiable; the continuous "
+                         f"EngineParams knobs are {GRAD_LEAVES}")
+    # the leaves are float64 already (checked above); materializing them
+    # with jnp.asarray OUTSIDE an enable_x64 scope would downcast
+    leaf_vals = tuple(getattr(params, f) for f in wrt)
+    return leaf_vals, wrt
+
+
+def rollout_value_and_grad(state: EngineState, params: EngineParams,
+                           periods: int, *,
+                           wrt: Optional[Tuple[str, ...]] = None):
+    """``(value, grads)`` of the rolled-out TOTAL ACCURACY w.r.t. the
+    named continuous `EngineParams` leaves (default: the params'
+    ``grad_leaves`` aux — ES capacity ``p_es``, deadline ``T``, ladder
+    mix ``acc``).  ``grads`` is a dict keyed by leaf name, each entry
+    shaped like the leaf.
+
+    The whole epoch runs as the same single `lax.scan` as `rollout`,
+    with the LP differentiated implicitly at its converged basis and the
+    rounding/admission stages smoothed per the params' ``smooth_mode``
+    ("st": value == the hard rollout's served accuracy; "soft": value is
+    the softened surrogate the finite-difference gates check).  Requires
+    `EngineParams.with_differentiable`; sharded rollouts are not
+    differentiable (run gradients on the single-host trace)."""
+    from jax.experimental import enable_x64
+    leaf_vals, wrt = _grad_entry(state, params, periods, wrt)
+    with enable_x64():
+        val, grads = _vag_jit(leaf_vals, state, params,
+                              periods=int(periods), wrt=wrt)
+    return val, dict(zip(wrt, grads))
+
+
+def rollout_grad(state: EngineState, params: EngineParams, periods: int,
+                 *, wrt: Optional[Tuple[str, ...]] = None):
+    """`rollout_value_and_grad` without the value (same one compiled
+    pass — `jax.value_and_grad` underneath)."""
+    return rollout_value_and_grad(state, params, periods, wrt=wrt)[1]
+
+
+# --------------------------------------------------------------------------
 # sharding: device_put the fleet axis, run step/rollout under shard_map
 # --------------------------------------------------------------------------
 def fleet_mesh(n_shards: Optional[int] = None):
@@ -1162,12 +1418,26 @@ def _aux_of(params: EngineParams) -> tuple:
     return tuple(getattr(params, f) for f in _PARAM_AUX)
 
 
+def _reject_diff_sharded(params: EngineParams) -> None:
+    """The `with_differentiable` contract: gradients run on the
+    single-host trace.  The smoothed pricing and the unconditional
+    replan only exist on the ``axis_name is None`` branch of
+    `_period_impl`, so a sharded "differentiable" rollout would silently
+    run the hard forward — reject instead of letting the flag lie."""
+    if params.differentiable:
+        raise ValueError(
+            "sharded entry points do not support differentiable params; "
+            "disarm with with_differentiable(False) or run "
+            "rollout_value_and_grad on the single-host trace")
+
+
 def step_sharded(state: EngineState, params: EngineParams, mesh
                  ) -> Tuple[EngineState, PeriodMetrics]:
     """`step` under `shard_map`: the fleet axis stays partitioned across
     the mesh; admission gathers the (D,) demand vector and metrics are
     psum-reduced, so the output matches the unsharded `step`."""
     from jax.experimental import enable_x64
+    _reject_diff_sharded(params)
     _require_f64("state", state)
     _require_f64("params", params)
     _check_horizon(state, params, 1)
@@ -1182,6 +1452,7 @@ def rollout_sharded(state: EngineState, params: EngineParams,
     throughout — the ROADMAP's 10k+-device shape.  ``donate=True``
     consumes the input state's shards (see `rollout`)."""
     from jax.experimental import enable_x64
+    _reject_diff_sharded(params)
     _require_f64("state", state)
     _require_f64("params", params)
     _check_horizon(state, params, periods)

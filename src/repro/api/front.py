@@ -17,6 +17,13 @@ Dispatch rules (the same table the legacy planner used, now in one place):
     huge p_es on real jobs): the backpressure / ES-outage replan path.
     Identical-job detection then looks at the *real* (non-phantom) jobs
     only, exactly like the legacy batched replan.
+
+This front door is a HOST boundary: solutions come back as NumPy arrays
+and nothing here is differentiable.  Capacity-planning gradients run on
+the traced engine instead — `EngineParams.with_differentiable()` +
+`repro.api.rollout_value_and_grad` differentiate a whole rolled-out
+epoch (implicit-gradient simplex, smoothed rounding/admission) w.r.t.
+the continuous knobs; see `repro.api.engine`.
 """
 from __future__ import annotations
 

@@ -507,6 +507,37 @@ def round_relaxation_jnp(p_ed, p_es, acc, T, xbar, status, *,
     return assignment, sched_status, n_frac
 
 
+def soft_assignment_weights(xbar, *, tau: float = 0.25):
+    """Smoothed twin of Algorithm 2's rounding: temperature-sharpened
+    assignment weights ``w (B, n, m+1)`` from the LP relaxation ``xbar``.
+
+    ``softmax(log(clip(xbar)) / tau)`` — at ``tau=1`` this is exactly
+    ``xbar`` renormalized (softmax of a log is the identity on the
+    simplex); as ``tau -> 0`` it hardens to the same argmax the hard
+    rounding takes on integral rows.  Rows the LP left fractional (<= 2
+    per lane, Lemma 1) keep mass on both candidates, which is what makes
+    the relaxation differentiable where `round_relaxation_jnp`'s case
+    tree is piecewise constant.  Gradients flow w.r.t. ``xbar`` only —
+    the clip floor (1e-12) zeroes them where the LP put exactly no mass."""
+    import jax
+    import jax.numpy as jnp
+    lx = jnp.log(jnp.clip(xbar, 1e-12, 1.0))
+    return jax.nn.softmax(lx / tau, axis=2)
+
+
+def straight_through_weights(xbar, assignment, *, tau: float = 0.25):
+    """Straight-through twin: FORWARD is the exact one-hot of the hard
+    Algorithm-2 ``assignment`` (including its sub-ILP fix-ups), BACKWARD
+    is `soft_assignment_weights`' Jacobian — the classic ST estimator, so
+    a differentiable rollout can keep the served accuracy numbers of the
+    hard path while still producing a usable gradient signal."""
+    import jax
+    import jax.numpy as jnp
+    soft = soft_assignment_weights(xbar, tau=tau)
+    hard = jax.nn.one_hot(assignment, xbar.shape[2], dtype=xbar.dtype)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
 def amr2_batch(batch: InstanceBatch, *,
                frac_tol: float = _FRAC_TOL) -> "list[Schedule]":
     """AMR^2 over a fleet of B same-shape instances.

@@ -66,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -811,6 +811,86 @@ def simplex_batch_core(A, b, c_full, basis0, *, nv: int, maxiter: int,
         tabA, rhs, bas, b, c_full, nv=nv, maxiter=maxiter, tol=tol,
         bland_after=bland_after, impl=impl, lane_mask=lane_mask)
     return x, fun, status, niter, bases, warm_ok
+
+
+# --------------------------------------------------------------------------
+# Implicit differentiation: custom VJP at the converged basis
+# --------------------------------------------------------------------------
+class _ImplicitCfg(NamedTuple):
+    """Hashable static config for `_simplex_implicit` (nondiff argnum 0)."""
+    nv: int
+    maxiter: int
+    tol: float
+    bland_after: int
+    impl: str
+    method: str
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _simplex_implicit(cfg: _ImplicitCfg, A, b, c_full, basis0, lane_mask):
+    return simplex_batch_core(
+        A, b, c_full, basis0, nv=cfg.nv, maxiter=cfg.maxiter, tol=cfg.tol,
+        bland_after=cfg.bland_after, impl=cfg.impl, lane_mask=lane_mask,
+        method=cfg.method)
+
+
+def _simplex_implicit_fwd(cfg, A, b, c_full, basis0, lane_mask):
+    # The pivot loops run UNdifferentiated (they are `lax.while_loop`s and
+    # could not be reverse-differentiated anyway); only their *fixed point*
+    # — the converged basis — feeds the backward pass.
+    out = _simplex_implicit(cfg, A, b, c_full, basis0, lane_mask)
+    _, _, status, _, bases, _ = out
+    return out, (A, b, c_full, bases, status, basis0, lane_mask)
+
+
+def _simplex_implicit_bwd(cfg, res, cts):
+    from ..kernels.simplex_pivot.ref import kkt_vjp_ref
+    gx, gfun = cts[0], cts[1]        # status/niter/bases/warm_ok: int/bool
+    A, b, c_full, bases, status, basis0, lane_mask = res
+    valid = status == OPTIMAL
+    if lane_mask is not None:
+        valid = valid & lane_mask
+    A_bar, b_bar, c_bar = kkt_vjp_ref(
+        A, b, c_full, bases, gx, gfun, valid, nv=cfg.nv)
+    f0 = jax.dtypes.float0
+    b0_bar = None if basis0 is None else np.zeros(basis0.shape, f0)
+    lm_bar = None if lane_mask is None else np.zeros(lane_mask.shape, f0)
+    return A_bar, b_bar, c_bar, b0_bar, lm_bar
+
+
+_simplex_implicit.defvjp(_simplex_implicit_fwd, _simplex_implicit_bwd)
+
+
+def simplex_batch_grad(A, b, c_full, basis0, *, nv: int, maxiter: int,
+                       tol: float = 1e-7, bland_after: int = BLAND_AFTER,
+                       impl: str = "jnp", lane_mask=None,
+                       method: str = "tableau"):
+    """`simplex_batch_core` with an implicit-function VJP attached.
+
+    Forward pass is the SAME traced warm-or-cold two-phase simplex (bitwise
+    identical outputs); the backward pass never differentiates the pivot
+    loops.  Instead, at the converged basis ``B`` the optimum is locally
+    ``x_B = B^{-1} b`` (active-set / KKT view), so cotangents w.r.t.
+    ``(A, b, c_full)`` come from one adjoint (R, R) solve per lane
+    (`kernels.simplex_pivot.ref.kkt_vjp_ref`) against the SAME basis factor
+    the revised method carries.  Integer bookkeeping — ``basis0`` warm
+    labels, ``lane_mask`` — gets symbolic-zero (float0) cotangents, and the
+    ``status``/``niter``/``bases``/``warm_ok`` outputs are gradient fences:
+    nothing differentiable flows through them.
+
+    Caveats (documented, by design):
+      * Non-OPTIMAL or masked lanes contribute exactly-zero cotangents
+        (their basis is meaningless; the engine layer must not rely on
+        gradients through failed lanes).
+      * At a DEGENERATE optimal basis the optimum is not differentiable;
+        the VJP returns the subgradient selected by the converged basis —
+        fine for optimization, not for exact sensitivity audits.
+      * The host-dispatched `solve_lp_batch` (NumPy boundary) is NOT
+        covered: differentiable callers must stay on this traced path.
+    """
+    cfg = _ImplicitCfg(nv=nv, maxiter=maxiter, tol=tol,
+                       bland_after=bland_after, impl=impl, method=method)
+    return _simplex_implicit(cfg, A, b, c_full, basis0, lane_mask)
 
 
 def _warm_np(A, b, c_full, nv, basis0, maxiter, tol, bland_after):

@@ -58,7 +58,7 @@ import numpy as np
 
 __all__ = [
     "MobilityModel", "validate_mobility", "route_cells",
-    "admit_mask_segmented", "admit_mask_cells_np",
+    "admit_mask_segmented", "admit_mask_pool", "admit_mask_cells_np",
     "ROUTING_MODES", "MOBILITY_MODES",
 ]
 
@@ -294,6 +294,66 @@ def admit_mask_segmented(demands, cell, T, n_cells: int,
         jnp.clip(gid, 0, max(n_cells, 1) * k - 1)].add(
         jnp.where(adm_sorted, sd, 0.0))
     return admitted, loads.reshape(max(n_cells, 1), k)
+
+
+def admit_mask_pool(demands, T, n_servers: int):
+    """The ONE-CELL fast path of the segmented admission — bitwise-equal
+    to the sequential `repro.api.engine.admit_mask_jnp` scan it retires
+    from the S=1 hot path, in both the admitted mask AND the per-server
+    loads.
+
+    Why bitwise (not just set-equal like `admit_mask_segmented`): the
+    sequential scan's argmin tie-break (FIRST least-loaded server) makes
+    its placement EXACTLY round-robin on the physical server index.
+    Induction over the ascending-demand order: after placing sorted items
+    ``0..i-1`` on servers ``j mod k``, chain ``j``'s load is the
+    fl-sum of ``(d_j, d_{j+k}, ...)`` which is termwise dominated by
+    chain ``j+1``'s — and IEEE addition is monotone, so
+    ``load_0 <= load_1 <= ... <= load_{k-1}`` holds in floating point,
+    not just in exact arithmetic, and the first-index argmin lands on
+    server ``i mod k`` exactly.  Rejections freeze the loads, so they
+    form a suffix of the sorted order and the admitted prefix's chain
+    sums are untouched by them.
+
+    The per-chain running loads are therefore reproducible by a
+    `lax.scan` over ROUNDS of a (ceil(D/k), k) demand matrix — each step
+    one vectorized k-wide add, same per-chain fl-addition order as the
+    old D-step scan, ``ceil(D/k)`` sequential steps instead of ``D`` —
+    and the final loads are the per-chain MAX of admitted inclusive
+    values (selection, no re-summation, hence no FP-order ambiguity).
+
+    Returns ``(admitted (D,) bool, loads (n_servers,), inc (D,))`` where
+    ``inc`` is each device's INCLUSIVE chain load at its placement slot
+    (device order; 0 for non-offloaders).  ``inc`` is exactly the value
+    the first-fit test compares against ``T + 1e-12`` — the
+    differentiable-admission relaxation sigmoids it — and is
+    differentiable w.r.t. ``demands`` through the (stop-graded) sort."""
+    D = demands.shape[0]
+    k = n_servers
+    active = demands > 0
+    eff = jnp.where(active, demands, jnp.inf)
+    order = jnp.argsort(eff, stable=True)
+    sd = jnp.where(active[order], demands[order], 0.0)
+    rounds = -(-D // k)
+    mat = jnp.concatenate(
+        [sd, jnp.zeros(rounds * k - D, sd.dtype)]).reshape(rounds, k)
+
+    def body(loads, row):
+        new = loads + row
+        return new, new
+
+    _, incmat = jax.lax.scan(body, jnp.zeros(k, sd.dtype), mat)
+    inc_sorted = incmat.reshape(rounds * k)[:D]
+    fits = inc_sorted <= T + 1e-12
+    posv = jnp.arange(D, dtype=jnp.int32)
+    big = jnp.int32(D)
+    first_viol = jnp.min(jnp.where(active[order] & ~fits, posv, big))
+    adm_sorted = active[order] & fits & (posv < first_viol)
+    admitted = jnp.zeros(D, bool).at[order].set(adm_sorted)
+    loads = jnp.zeros(k, demands.dtype).at[posv % k].max(
+        jnp.where(adm_sorted, inc_sorted, 0.0))
+    inc = jnp.zeros(D, demands.dtype).at[order].set(inc_sorted)
+    return admitted, loads, inc
 
 
 def admit_mask_cells_np(demands, cell, T, n_cells: int,

@@ -1,8 +1,9 @@
 """Pure-jnp references for the batched simplex pivot kernels.
 
-Two ops live here, each the oracle its Pallas kernel is tested against AND
-the default (``impl="jnp"``) implementation the fleet LP path uses — there
-is ONE definition of each update, shared by `core.lp` and the kernel tests:
+Three ops live here, each the oracle its Pallas kernel is tested against
+AND the default (``impl="jnp"``) implementation the fleet LP path uses —
+there is ONE definition of each update, shared by `core.lp` and the kernel
+tests:
 
   * `pivot_update_ref` — the dense rank-1 tableau update used by
     `core.lp._phase_batched` (the legacy full-tableau path).
@@ -12,6 +13,12 @@ is ONE definition of each update, shared by `core.lp` and the kernel tests:
     (R, R) basis inverse and the basic solution are updated; entering
     columns are priced on demand from the original (R, C0) column data, so
     the C0-wide tableau is never materialized.
+  * `basis_columns_ref` / `kkt_vjp_ref` — the per-lane basis gather and
+    the KKT adjoint solve behind the implicit-gradient simplex
+    (`core.lp` ``differentiable=True``): at a converged basis the optimum
+    is ``x_B = B^{-1} b``, so the whole VJP is two (R, R) triangular-ish
+    solves per lane against the same basis factor the revised method
+    carries — no differentiation through the pivot loops.
 """
 from __future__ import annotations
 
@@ -119,3 +126,78 @@ def reduced_pivot_ref(A, c_phase, Binv, xB, basis, use_bland, may_pivot,
     basis = jnp.where(do[:, None] & is_r, j[:, None], basis)
     return (F[:, :, :R], F[:, :, R], basis.astype(jnp.int32),
             has_enter, unbounded, rmin <= tol)
+
+
+def basis_columns_ref(A, basis):
+    """Gather each lane's basis matrix out of the original column data.
+
+    A: (B, R, C0); basis: (B, R) labels.  Labels >= C0 are VIRTUAL
+    artificials (the `core.lp` convention: the column for label ``C0 + r``
+    is the unit vector ``e_r``, never materialized) — they come back as
+    unit columns here.  Returns ``(Bmat (B, R, R), real (B, R) bool)``
+    with ``real`` marking non-artificial basis members.
+
+    The sign a warm-repair flip gave an artificial's virtual column is
+    deliberately dropped: the KKT adjoint zeroes artificial cotangent
+    entries (`kkt_vjp_ref`), and flipping column ``j`` of ``Bmat`` only
+    rescales the adjoint component that multiplies that zero.
+    """
+    B, R, C0 = A.shape
+    real = basis < C0
+    basJ = jnp.clip(basis, 0, C0 - 1)
+    cols = jnp.take_along_axis(A, basJ[:, None, :], axis=2)     # (B, R, R)
+    art_row = jnp.clip(basis - C0, 0, R - 1)
+    unit = (jnp.arange(R)[None, :, None]
+            == art_row[:, None, :]).astype(A.dtype)             # e_{b-C0}
+    return jnp.where(real[:, None, :], cols, unit), real
+
+
+def kkt_vjp_ref(A, b, c_full, basis, gx, gfun, valid, *, nv: int):
+    """The implicit-function VJP of a converged simplex optimum.
+
+    At an optimal basis ``B`` the active-set system is ``B x_B = b`` with
+    every nonbasic variable pinned at 0, so (away from degenerate bases,
+    where any subgradient is returned) the solution map is locally
+    ``x_B = B^{-1} b`` and ``fun = c_B^T x_B``.  Given output cotangents
+    ``gx`` (B, nv) and ``gfun`` (B,), one adjoint solve per lane yields
+    every input cotangent:
+
+        g_B   = gather(gx)[basis] + gfun * c_B          (artificials: 0)
+        y     = B^{-T} g_B                              (KKT adjoint)
+        b-bar = y
+        A-bar = -y (x_B scattered to basic columns)^T   (rank-1 per lane)
+        c-bar = gfun * x_B scattered to basic columns
+
+    ``valid`` (B,) bool gates lanes whose basis is meaningful (status
+    OPTIMAL, lane unmasked): invalid lanes get an identity factor BEFORE
+    the solve — gating after it would leak ``NaN * 0`` from singular
+    garbage factors — and exactly-zero cotangents.
+
+    A: (B, R, C0); b: (B, R); c_full: (B, C0); basis: (B, R) labels
+    (>= C0 virtual); gx: (B, nv); gfun: (B,).  Returns ``(A_bar, b_bar,
+    c_bar)`` with the primal shapes.
+    """
+    B, R, C0 = A.shape
+    dtype = A.dtype
+    Bmat, real = basis_columns_ref(A, basis)
+    eye = jnp.broadcast_to(jnp.eye(R, dtype=dtype), (B, R, R))
+    Bsafe = jnp.where(valid[:, None, None], Bmat, eye)
+    basJ = jnp.clip(basis, 0, C0 - 1)
+
+    xB = jnp.linalg.solve(Bsafe, b[..., None])[..., 0]          # (B, R)
+    gxp = jnp.concatenate(
+        [gx, jnp.zeros((B, C0 - nv), dtype)], axis=1)           # slack: 0
+    gB = jnp.take_along_axis(gxp, basJ, axis=1) \
+        + gfun[:, None] * jnp.take_along_axis(c_full, basJ, axis=1)
+    gB = jnp.where(real & valid[:, None], gB, 0.0)
+    y = jnp.linalg.solve(jnp.swapaxes(Bsafe, 1, 2),
+                         gB[..., None])[..., 0]                  # (B, R)
+
+    w = jnp.where(real & valid[:, None], xB, 0.0)
+    b_bar = jnp.where(valid[:, None], y, 0.0)
+    lanes = jnp.arange(B)[:, None]
+    wcol = jnp.zeros((B, C0), dtype).at[lanes, basJ].add(w)      # (B, C0)
+    A_bar = -b_bar[:, :, None] * wcol[:, None, :]
+    c_bar = jnp.zeros((B, C0), dtype).at[lanes, basJ].add(
+        gfun[:, None] * w)
+    return A_bar, b_bar, c_bar
