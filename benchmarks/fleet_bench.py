@@ -47,6 +47,15 @@ Sections:
     differences over every continuous knob, gated >= 5x and FD
     spot-checked to rtol 1e-4; also records the reverse-mode overhead
     vs the plain forward rollout.
+  * ``fleet/hi/B`` — online hierarchical inference
+    (``FLEET_BENCH_HI_DEVICES`` / ``FLEET_BENCH_HI_PERIODS``): every
+    decision rule rolls the IDENTICAL replayed confidence stream over a
+    fleet with heterogeneous per-device ES accuracies — a 9-point
+    fixed-threshold sweep on ONE compiled rollout (``theta0`` is a
+    leaf), the OGD threshold learner, UCB/EXP3 — and records cumulative
+    pseudo-regret trajectories against the offline clairvoyant (gated
+    exactly 0.0); at horizons >= 32 periods the learner must beat the
+    best fixed grid point.
 
 Every section also folds its numbers into ``BENCH_fleet.json`` (repo root;
 override with ``BENCH_FLEET_JSON``).  Sections merge dict-into-dict (one
@@ -1264,8 +1273,131 @@ def grad():
         f"speedup_vs_fd={speedup_x:.0f}x;fd_checks={checked}")]
 
 
+def hi():
+    """Online hierarchical inference vs the offline clairvoyant
+    (``FLEET_BENCH_HI_DEVICES`` / ``FLEET_BENCH_HI_PERIODS``, default
+    256 x 64).
+
+    The fleet gets HETEROGENEOUS per-device ES accuracies (drawn in
+    [0.65, 0.92] — the regime of the online problem, where no shared
+    threshold can be right for every device), and every rule replays the
+    IDENTICAL confidence stream (one ``hi_seed``; the stream folds its
+    own key, so rules differ only in their decisions):
+
+      * a fixed-threshold sweep over the 9-point bandit grid — scalar
+        ``theta0`` is a pytree leaf, so all 9 points reuse ONE compiled
+        rollout;
+      * the OGD threshold learner, UCB, and EXP3;
+      * the clairvoyant (rule="fixed" with per-device ``theta0 =
+        clip(acc_es - beta, 0, 1)``), whose cumulative pseudo-regret is
+        gated EXACTLY 0.0 — the regret metric's floor is the offline
+        per-sample optimum, the role AMR^2 plays for the planned path.
+
+    Gates: the clairvoyant floor, the per-period serving identity
+    (n_hi_offloaded + n_hi_local_final == n_jobs), and — at any horizon
+    >= 32 periods — the threshold learner's cumulative regret beating
+    the BEST fixed grid point's (sublinear vs linear growth; the learner
+    converges per device, a shared threshold cannot)."""
+    import dataclasses
+
+    from repro.api import engine as E
+    from repro.core.hi import HIModel
+    from repro.serving import FleetConfig
+
+    n = int(os.environ.get("FLEET_BENCH_HI_DEVICES", _BIG))
+    periods = int(os.environ.get("FLEET_BENCH_HI_PERIODS", 64))
+    beta, hi_seed = 0.15, 7
+    cfg = FleetConfig(
+        n_devices=n, T=1.2, n_servers=max(1, n // 16), policy="amr2",
+        rate=10.0, batch_max=PARITY_JOBS, horizon=periods + 2, seed=7)
+    base = E.EngineParams.from_config(cfg, horizon=periods + 2)
+    acc = np.asarray(base.acc, np.float64).copy()
+    rng = np.random.default_rng(7)
+    acc[:, base.m] = rng.uniform(0.65, 0.92, n)
+    het = dataclasses.replace(base, acc=acc)
+    theta_star = np.clip(acc[:, base.m] - beta, 0.0, 1.0)
+    ck = sorted({max(0, p - 1) for p in (8, 16, 32, periods)
+                 if p <= periods})
+
+    def _roll(params):
+        t0 = time.perf_counter()
+        state, M = E.rollout(E.init_state(params), params, periods)
+        reg = np.asarray(M.hi_regret, np.float64)
+        off = np.asarray(M.n_hi_offloaded, np.int64)
+        loc = np.asarray(M.n_hi_local_final, np.int64)
+        jobs = np.asarray(M.n_jobs, np.int64)
+        assert np.array_equal(off + loc, jobs), \
+            "per-period HI serving identity broke"
+        return {
+            "regret": float(reg[-1]),
+            "regret_trajectory": {str(t + 1): float(reg[t]) for t in ck},
+            "offload_rate": float(off.sum() / max(jobs.sum(), 1)),
+            "acc_per_job": float(
+                np.asarray(M.total_accuracy).sum() / max(jobs.sum(), 1)),
+            "wall_s": time.perf_counter() - t0,
+        }, state
+
+    grid = np.linspace(0.1, 0.9, 9)
+    sweep = {}
+    for th in grid:                       # one compiled rollout, 9 leaves
+        p = het.with_hi(HIModel.make(theta0=float(th),
+                                     offload_cost=beta),
+                        rule="fixed", hi_seed=hi_seed)
+        sweep[f"{th:.1f}"], _ = _roll(p)
+    best_th, best_fixed = min(((k, v["regret"]) for k, v in sweep.items()),
+                              key=lambda kv: kv[1])
+
+    rules = {}
+    theta_err = None
+    for rule in ("threshold", "ucb", "exp3"):
+        p = het.with_hi(HIModel.make(offload_cost=beta), rule=rule,
+                        hi_seed=hi_seed)
+        rules[rule], state = _roll(p)
+        if rule == "threshold":
+            theta_err = float(np.abs(
+                np.asarray(state.hi.theta) - theta_star).mean())
+
+    clair = het.with_hi(HIModel.make(theta0=theta_star,
+                                     offload_cost=beta),
+                        rule="fixed", hi_seed=hi_seed)
+    rules["clairvoyant"], _ = _roll(clair)
+    assert rules["clairvoyant"]["regret"] == 0.0, \
+        f"the clairvoyant fixed rule accrued nonzero pseudo-regret " \
+        f"{rules['clairvoyant']['regret']} (floor broken)"
+
+    learner = rules["threshold"]["regret"]
+    if periods >= 32:
+        assert learner < best_fixed, \
+            f"threshold learner regret {learner:.1f} did not beat the " \
+            f"best fixed grid point (theta={best_th}: {best_fixed:.1f}) " \
+            f"at a {periods}-period horizon"
+
+    wall = rules["threshold"]["wall_s"]
+    entry = {
+        "devices": n, "periods": periods, "hi_seed": hi_seed,
+        "offload_cost": beta,
+        "acc_es_range": [float(acc[:, base.m].min()),
+                         float(acc[:, base.m].max())],
+        "fixed_sweep": sweep,
+        "best_fixed_theta": float(best_th),
+        "best_fixed_regret": best_fixed,
+        "rules": rules,
+        "learner_theta_abs_err": theta_err,
+        "learner_beats_best_fixed": bool(learner < best_fixed),
+        "assertions": "passed",
+    }
+    _record("hi", {str(n): entry})
+    return [(
+        f"fleet/hi/{n}", wall / (n * periods) * 1e6,
+        f"devices={n};periods={periods};"
+        f"learner_regret={learner:.1f};best_fixed={best_fixed:.1f}"
+        f"@{best_th};ucb={rules['ucb']['regret']:.1f};"
+        f"exp3={rules['exp3']['regret']:.1f};clairvoyant=0;"
+        f"theta_err={theta_err:.3f}")]
+
+
 ALL = [parity, warm_cold, scaling, speedup, rollout, sharded, chaos,
-       mobility, grad]
+       mobility, grad, hi]
 
 
 def main():

@@ -33,6 +33,7 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 
 
 def main() -> int:
+    import jax
     import numpy as np
 
     from repro.api import engine as E
@@ -76,7 +77,9 @@ def main() -> int:
     for f in E._METRIC_FIELDS:
         check(f"determinism/{f}", getattr(m_a, f), getattr(m_b, f))
     for f in E._STATE_FIELDS:
-        check(f"determinism/state/{f}", getattr(s_a, f), getattr(s_b, f))
+        for i, (a, b) in enumerate(zip(jax.tree.leaves(getattr(s_a, f)),
+                                       jax.tree.leaves(getattr(s_b, f)))):
+            check(f"determinism/state/{f}[{i}]", a, b)
     if int(np.asarray(m_a.n_handover).sum()) == 0:
         failures.append("no handovers fired (vacuous mobility smoke); "
                         "loosen the trace")

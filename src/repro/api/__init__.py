@@ -24,6 +24,15 @@ deadline ``T``, ladder mix ``acc``):
     >>> val, g = api.rollout_value_and_grad(engine.init_state(armed),
     ...                                     armed, periods)
     >>> g["p_es"].shape == params.p_es.shape
+
+Online hierarchical inference (the ``online`` registry capability) rides
+there too: arm with ``EngineParams.with_hi()`` and the rollout runs
+per-sample confidence-gated offloading with the learner inside the scan:
+
+    >>> armed = params.with_hi(HIModel.from_profiles(params.base_p_ed),
+    ...                        rule="threshold")
+    >>> _, metrics = engine.rollout(engine.init_state(armed), armed, 64)
+    >>> metrics.hi_regret[-1]         # cumulative pseudo-regret vs theta*
 """
 from ..core.problem import (ES_DISABLED_SENTINEL, ST_UNSOLVED,
                             SOLUTION_STATUS_NAMES, FleetProblem, Problem,
@@ -35,6 +44,7 @@ from . import solvers as _builtin_solvers  # noqa: F401  (register entries)
 from . import engine  # pure-functional EngineState/step/rollout/shard
 from .engine import (GRAD_LEAVES, combine_diff, partition_diff,
                      rollout_grad, rollout_value_and_grad)
+from ..core.hi import HILearnerState, HIModel
 
 __all__ = [
     "Problem", "FleetProblem", "Solution",
@@ -45,4 +55,5 @@ __all__ = [
     "engine",
     "GRAD_LEAVES", "rollout_grad", "rollout_value_and_grad",
     "partition_diff", "combine_diff",
+    "HIModel", "HILearnerState",
 ]

@@ -70,6 +70,8 @@ from ..core.amr2 import (build_lp_arrays_jnp, round_relaxation_jnp,
 from ..core.dual import _dual_one
 from ..core.faults import (FaultModel, greedy_local_fill,
                            realize_execution, sample_realization)
+from ..core.hi import (HILearnerState, HIModel, hi_period,
+                       sample_confidence, validate_hi)
 from ..core.lp import (_bucket_maxiter, simplex_batch_core,
                        simplex_batch_grad)
 from ..core.mobility import (MobilityModel, admit_mask_pool,
@@ -150,6 +152,11 @@ class EngineParams:
     # the leaves but never reads them)
     mobility: MobilityModel = dataclasses.field(
         default_factory=MobilityModel.none)
+    # online hierarchical inference: calibration curves + learner
+    # hyper-parameters (all-float64-leaf pytree like `faults`; only
+    # consulted when the static ``hi_rule`` aux is not "off" — the
+    # planned trace carries the leaves but never reads them)
+    hi: HIModel = dataclasses.field(default_factory=HIModel.none)
     # ---- static aux -----------------------------------------------------
     policy: str = "amr2"
     arrivals: str = "replay"
@@ -187,6 +194,19 @@ class EngineParams:
     n_cells: int = 1
     mobility_seed: int = 0
     shard_by_cell: bool = False
+    # online hierarchical inference (static): ``hi_rule`` "off" keeps the
+    # byte-identical planned trace; "fixed"/"threshold"/"ucb"/"exp3"
+    # replace the LP plan with the per-sample confidence gate
+    # (`core.hi`).  ``hi_stream`` picks fold-keyed ("fold", from
+    # ``hi_seed`` — independent of the arrival PRNG, like ``fault_seed``)
+    # or replayed ("replay", from ``hi.conf_trace``) confidences;
+    # ``hi_arms`` sizes the bandit rules' threshold grid; ``hi_local``
+    # names the local model every sample runs on.
+    hi_rule: str = "off"
+    hi_stream: str = "fold"
+    hi_arms: int = 9
+    hi_seed: int = 0
+    hi_local: int = 0
     # differentiable rollout (static; False keeps the forward trace
     # byte-identical to an engine without the gradient subsystem).
     # ``smooth_mode`` picks the relaxation of the two discrete stages:
@@ -221,6 +241,11 @@ class EngineParams:
     def servers_per_cell(self) -> int:
         """ES tiers fronted by each cell (the whole pool when S=1)."""
         return self.n_servers // max(self.n_cells, 1)
+
+    @property
+    def hi_armed(self) -> bool:
+        """Online hierarchical inference replaces the LP plan."""
+        return self.hi_rule != "off"
 
     # ---- constructors ----------------------------------------------------
     @classmethod
@@ -352,7 +377,13 @@ class EngineParams:
             mobility=getattr(config, "mobility", None),
             mobility_mode=getattr(config, "mobility_mode", "replay"),
             routing=getattr(config, "routing", "nearest"),
-            mobility_seed=getattr(config, "mobility_seed", 0))
+            mobility_seed=getattr(config, "mobility_seed", 0)).with_hi(
+                getattr(config, "hi", None),
+                rule=getattr(config, "hi_rule", "threshold"),
+                stream=getattr(config, "hi_stream", "fold"),
+                n_arms=getattr(config, "hi_arms", 9),
+                hi_seed=getattr(config, "hi_seed", 0),
+                local_model=getattr(config, "hi_local", 0))
 
     def with_faults(self, faults: Optional[FaultModel], *,
                     max_retries: Optional[int] = None,
@@ -361,6 +392,12 @@ class EngineParams:
         existing params value, keeping the static ``chaos`` flag
         consistent with the model's nullness."""
         fm = faults if faults is not None else FaultModel.none()
+        if self.hi_armed and not fm.is_null():
+            raise ValueError(
+                "chaos needs HI disarmed (hi_rule='off'): the realized-"
+                "execution ladder re-decides admitted samples and would "
+                "corrupt the learner's feedback; disarm with "
+                "with_hi(None) first")
         return dataclasses.replace(
             self, faults=fm, chaos=not fm.is_null(),
             max_retries=(self.max_retries if max_retries is None
@@ -378,6 +415,11 @@ class EngineParams:
         ``mobility_mode``/``n_cells`` aux consistent with the model."""
         mob = mobility if mobility is not None else MobilityModel.none()
         mob_mode = mode if mobility is not None else "off"
+        if self.hi_armed and mob_mode != "off":
+            raise ValueError(
+                "mobility needs HI disarmed (hi_rule='off'): per-cell "
+                "admission of confidence-gated offloads is a later rung; "
+                "disarm with with_hi(None) first")
         validate_mobility(mob, n_devices=self.n_devices,
                           n_servers=self.n_servers, mode=mob_mode,
                           routing=routing)
@@ -416,6 +458,12 @@ class EngineParams:
                 raise ValueError(
                     "differentiable rollouts need mobility off: routing "
                     "and the per-cell admission are not relaxed yet")
+            if self.hi_armed:
+                raise ValueError(
+                    "differentiable rollouts need HI disarmed "
+                    "(hi_rule='off'): the per-sample threshold gate and "
+                    "the learner's argmax/draw updates are discrete and "
+                    "not relaxed; disarm with with_hi(None) first")
             if smooth_mode not in ("st", "soft"):
                 raise ValueError(f"unknown smooth_mode {smooth_mode!r}; "
                                  f"expected 'st' or 'soft'")
@@ -433,6 +481,46 @@ class EngineParams:
         return dataclasses.replace(
             self, differentiable=enabled, smooth_mode=smooth_mode,
             smooth_tau=smooth_tau, admit_tau=admit_tau, grad_leaves=gl)
+
+    def with_hi(self, hi: Optional[HIModel], *, rule: str = "threshold",
+                stream: str = "fold", n_arms: int = 9,
+                hi_seed: Optional[int] = None,
+                local_model: int = 0) -> "EngineParams":
+        """Arm (or disarm, with ``None``) online hierarchical inference
+        on an existing params value.  Armed, the per-sample confidence
+        gate REPLACES the LP plan: every sample runs the ``local_model``
+        on-device and is additionally offloaded iff its calibrated
+        confidence falls below the rule's threshold (`core.hi`); the
+        learner state rides along as an `EngineState` leaf.  HI composes
+        with drift/outage and the ES-pool admission but not (yet) with
+        chaos, mobility, or the differentiable relaxation — arming
+        raises while any of those is armed, mirroring their own guards."""
+        if hi is None:
+            return dataclasses.replace(
+                self, hi=HIModel.none(), hi_rule="off", hi_stream="fold")
+        if self.chaos:
+            raise ValueError(
+                "HI needs chaos disarmed: the realized-execution ladder "
+                "re-decides admitted samples and would corrupt the "
+                "learner's feedback; disarm with with_faults(None) first")
+        if self.mobility_mode != "off":
+            raise ValueError(
+                "HI needs mobility off: per-cell admission of confidence-"
+                "gated offloads is a later rung; disarm with "
+                "with_mobility(None) first")
+        if self.differentiable:
+            raise ValueError(
+                "HI needs the differentiable relaxation disarmed: the "
+                "threshold gate and learner updates are discrete; disarm "
+                "with with_differentiable(False) first")
+        validate_hi(hi, n_devices=self.n_devices,
+                    n_classes=self.base_p_ed.shape[1], n_models=self.m,
+                    rule=rule, stream=stream, n_arms=n_arms,
+                    local_model=local_model, batch_max=self.batch_max)
+        return dataclasses.replace(
+            self, hi=hi, hi_rule=rule, hi_stream=stream, hi_arms=n_arms,
+            hi_seed=self.hi_seed if hi_seed is None else hi_seed,
+            hi_local=local_model)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -453,6 +541,11 @@ class EngineState:
     # ES-latency belief (chaos audit state; == params.p_es until the
     # realized-execution audit inflates it, handover resets rows)
     p_es_belief: jnp.ndarray  # (D, c)
+    # online hierarchical inference: the learner's evolving state
+    # (threshold / per-arm statistics / cumulative regret, `core.hi`).
+    # Always populated by `init_state`; carried untouched while
+    # ``hi_rule == "off"`` so the planned trace is unchanged.
+    hi: HILearnerState = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -499,19 +592,31 @@ class PeriodMetrics:
     # mobility: devices that switched serving cells this period (handover
     # count; exact zero while mobility is off or S=1)
     n_handover: jnp.ndarray
+    # online hierarchical inference (`core.hi`): samples that actually
+    # consulted the ES (admitted offloads) vs samples served by the local
+    # model alone — every sample runs the local model, so the accounting
+    # identity ``n_hi_offloaded + n_hi_local_final == n_jobs`` holds per
+    # period by construction (admission-bumped intended offloads land in
+    # the local count) — plus the fleet's cumulative pseudo-regret vs the
+    # clairvoyant threshold.  Exact zeros while HI is off.
+    n_hi_offloaded: jnp.ndarray
+    n_hi_local_final: jnp.ndarray
+    hi_regret: jnp.ndarray
 
 
 _STATE_FIELDS = ("period", "key", "p_ed", "pending", "head", "warm_basis",
-                 "n_updates", "pos", "cell", "cell_load", "p_es_belief")
+                 "n_updates", "pos", "cell", "cell_load", "p_es_belief",
+                 "hi")
 _METRIC_FIELDS = tuple(f.name for f in dataclasses.fields(PeriodMetrics))
 _PARAM_LEAVES = ("classes", "base_p_ed", "p_es", "acc", "T", "rate",
                  "class_probs", "drift", "outage", "counts", "stream",
-                 "faults", "mobility")
+                 "faults", "mobility", "hi")
 _PARAM_AUX = ("policy", "arrivals", "n_servers", "batch_max",
               "straggler_threshold", "ema", "frac_tol", "iters", "maxiter",
               "tol", "lp_method", "chaos", "max_retries", "fault_seed",
               "mobility_mode", "routing", "n_cells", "mobility_seed",
-              "shard_by_cell", "differentiable", "smooth_mode",
+              "shard_by_cell", "hi_rule", "hi_stream", "hi_arms",
+              "hi_seed", "hi_local", "differentiable", "smooth_mode",
               "smooth_tau", "admit_tau", "grad_leaves")
 
 # EngineParams leaves `rollout_grad` may differentiate: the continuous
@@ -541,7 +646,8 @@ def init_state(params: EngineParams, *, seed: int = 0) -> EngineState:
              else np.zeros((D, 2), np.float64)),
         cell=np.full(D, -1 if armed else 0, np.int32),
         cell_load=np.zeros(S, np.float64),
-        p_es_belief=np.array(params.p_es, np.float64))
+        p_es_belief=np.array(params.p_es, np.float64),
+        hi=HILearnerState.init(D, params.hi_arms, params.hi.theta0))
 
 
 # --------------------------------------------------------------------------
@@ -668,7 +774,8 @@ def _recover_unsolved(assign, unsolved, p_ed_jobs, mask, acc, T):
 def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
                  params: EngineParams, axis_name: Optional[str] = None,
                  fault_key=None, es_belief=None, link_factor=None,
-                 covered=None, cell=None):
+                 covered=None, cell=None, hi_key=None, hi_state=None,
+                 hi_t=None):
     """The pure period core shared by `step`, the sharded step, and the
     host `FleetEngine.run_period` delegation: everything AFTER arrivals
     (the released job-class indices ``ci`` (D, n) + counts ``take`` (D,))
@@ -687,8 +794,15 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
     (D,) int32 routes admission through the segmented per-cell scan when
     the static ``n_cells`` aux is > 1.
 
+    HI plumbing (consulted only when the static ``hi_rule`` aux is not
+    "off"): ``hi_key`` is the period's confidence/arm key
+    (`fold_in(PRNGKey(hi_seed), period)` — independent of the arrival
+    PRNG), ``hi_state`` the incoming `HILearnerState`, ``hi_t`` the
+    period index (step-size decay + replay-trace cursor).
+
     Returns ``(new_belief_p_ed, new_warm_basis, upd (D,) bool,
-    audit_factor (D,), new_es_belief (D, c), cell_load (S,), metrics)``
+    audit_factor (D,), new_es_belief (D, c), cell_load (S,),
+    new_hi_state, metrics)``
     with ``metrics`` a dict of scalars (no period/backlog — the callers
     own those).  ``audit_factor`` is the EMA rescale each updated
     device's belief was multiplied by — the host `FleetEngine` delegation
@@ -720,16 +834,47 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
 
     # ---- plan the whole (local) fleet in one traced solve ---------------
     diff = params.differentiable and params.policy == "amr2"
-    plan_out = _plan(params, fp, warm_basis)
-    assign, status, basis = plan_out[:3]
-    xbar = plan_out[3] if diff else None
-    unsolved_lane = status == _ST_UNSOLVED
-    n_unsolved = unsolved_lane.astype(jnp.int32)
-    # per-lane recovery: unsolved lanes fall back to a greedy local-only
-    # plan (no ES demand) instead of racing uncertified roundings into
-    # the admission scan
-    assign = _recover_unsolved(assign, unsolved_lane, p_ed_jobs, mask,
-                               params.acc, params.T)
+    hi_armed = params.hi_armed
+    if hi_armed:
+        # ---- online hierarchical inference: the confidence gate IS the
+        # plan (core.hi).  Every sample runs ``hi_local`` on-device; the
+        # gate additionally offloads the low-confidence ones.  The LP
+        # never runs — there is no accuracy table to plan from in the
+        # online problem — so basis/unsolved are inert passthroughs.
+        lm = params.hi_local
+        acc_es_col = params.acc[:, m]
+        kc, ka = jax.random.split(hi_key)
+        uni = (jnp.take(params.hi.conf_trace,
+                        hi_t % params.hi.conf_trace.shape[0], axis=0)
+               if params.hi_stream == "replay" else None)
+        conf, correct_local, correct_es = sample_confidence(
+            kc, params.hi, params.acc[:, lm], acc_es_col, ci,
+            uniforms=uni, axis_name=axis_name)
+        offload_int, _theta_t, new_hi, _reg = hi_period(
+            params.hi_rule, params.hi, hi_state, conf, correct_local,
+            correct_es, mask, acc_es_col, hi_t, ka, params.hi_arms,
+            axis_name=axis_name)
+        assign = jnp.where(offload_int, jnp.int32(m),
+                           jnp.int32(lm)).astype(jnp.int32)
+        basis = (jnp.asarray(warm_basis, jnp.int32)
+                 if warm_basis is not None
+                 else jnp.full((D, params.n_basis_rows), -1, jnp.int32))
+        n_unsolved = jnp.zeros(D, jnp.int32)
+        # an outage period needs no special-casing: the ES column prices
+        # at the disabled sentinel, so intended offloads carry infeasible
+        # demand, lose admission, and fall back local below
+    else:
+        new_hi = hi_state
+        plan_out = _plan(params, fp, warm_basis)
+        assign, status, basis = plan_out[:3]
+        xbar = plan_out[3] if diff else None
+        unsolved_lane = status == _ST_UNSOLVED
+        n_unsolved = unsolved_lane.astype(jnp.int32)
+        # per-lane recovery: unsolved lanes fall back to a greedy
+        # local-only plan (no ES demand) instead of racing uncertified
+        # roundings into the admission scan
+        assign = _recover_unsolved(assign, unsolved_lane, p_ed_jobs, mask,
+                                   params.acc, params.T)
 
     # ---- ES-pool admission on the GLOBAL demand vector ------------------
     # S=1 runs the one-cell fast path of the segmented admission
@@ -791,7 +936,13 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         return FleetProblem.from_arrays_unchecked(
             p_ed_jobs, p_es_crippled, params.acc, Tvec, mask)
 
-    if diff and axis_name is None:
+    if hi_armed:
+        # backpressure under HI needs no second LP: a bumped device's
+        # intended offloads simply stay on the local model (the sample
+        # already ran it — hierarchical inference's graceful fallback)
+        assign = jnp.where(bumped[:, None] & mask, jnp.int32(params.hi_local),
+                           assign)
+    elif diff and axis_name is None:
         # Differentiable mode: the smoothed admission gives EVERY
         # offloader partial weight on its ES-disabled alternative, so the
         # replan runs unconditionally (lane_mask widened from `bumped` to
@@ -834,14 +985,21 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
     acc_jobs = params.acc[rows, assign]
     n_jobs = _sum(mask.astype(jnp.int32))
 
-    on_ed = mask & (assign < m)
-    picked = jnp.clip(assign, 0, m - 1)[..., None]
-    ed_pred = jnp.where(
-        on_ed, jnp.take_along_axis(p_ed_jobs, picked, axis=2)[..., 0],
-        0.0).sum(axis=1)
-    ed_wall = jnp.where(
-        on_ed, jnp.take_along_axis(base_jobs, picked, axis=2)[..., 0],
-        0.0).sum(axis=1) * drift_t
+    if hi_armed:
+        # hierarchical: EVERY masked sample runs the local model (the
+        # offloaded ones too), so the ED load prices the full batch at
+        # ``hi_local`` regardless of the final assignment
+        ed_pred = p_ed_jobs[..., params.hi_local].sum(axis=1)
+        ed_wall = base_jobs[..., params.hi_local].sum(axis=1) * drift_t
+    else:
+        on_ed = mask & (assign < m)
+        picked = jnp.clip(assign, 0, m - 1)[..., None]
+        ed_pred = jnp.where(
+            on_ed, jnp.take_along_axis(p_ed_jobs, picked, axis=2)[..., 0],
+            0.0).sum(axis=1)
+        ed_wall = jnp.where(
+            on_ed, jnp.take_along_axis(base_jobs, picked, axis=2)[..., 0],
+            0.0).sum(axis=1) * drift_t
     es_wall = jnp.where(admitted, demand, 0.0)
     es_samp = mask & (assign == m)       # admitted offloads (post-replan)
 
@@ -927,6 +1085,12 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
             dev_acc = jnp.where(offl, adm_use * accP
                                 + (1.0 - adm_use) * accBP, accP)
             total_acc = jnp.sum(dev_acc)
+        elif hi_armed:
+            # expected served accuracy under perfect calibration: an
+            # admitted offload scores the ES accuracy, a locally-served
+            # sample its own confidence (E[correct | conf] == conf)
+            total_acc = _sum(jnp.where(
+                mask, jnp.where(es_samp, acc_es_col[:, None], conf), 0.0))
         else:
             total_acc = _sum(jnp.where(mask, acc_jobs, 0.0))
         wall = jnp.maximum(ed_wall, es_wall)
@@ -964,8 +1128,18 @@ def _period_impl(belief_p_ed, warm_basis, ci, take, drift_t, outage_t,
         "realized_makespan": _max(wall),
         **ladder,
     }
+    if hi_armed:
+        metrics.update(
+            n_hi_offloaded=_sum(es_samp.astype(jnp.int32)),
+            n_hi_local_final=_sum((mask & (assign != m)
+                                   ).astype(jnp.int32)),
+            hi_regret=_sum(new_hi.cum_regret))
+    else:
+        metrics.update(n_hi_offloaded=jnp.zeros((), jnp.int32),
+                       n_hi_local_final=jnp.zeros((), jnp.int32),
+                       hi_regret=jnp.zeros((), jnp.float64))
     return (new_belief, new_warm.astype(jnp.int32), upd, factor,
-            new_es_belief, cell_load_out, metrics)
+            new_es_belief, cell_load_out, new_hi, metrics)
 
 
 def _arrivals(state: EngineState, params: EngineParams,
@@ -1065,11 +1239,16 @@ def _step_impl(state: EngineState, params: EngineParams,
     # delegation can reproduce the exact same draw per period
     fkey = (jax.random.fold_in(jax.random.PRNGKey(params.fault_seed), t)
             if params.chaos else None)
-    new_belief, new_warm, upd, _factor, new_es_belief, cell_load, m = \
-        _period_impl(
-            state.p_ed, warm0, ci, take, drift_t, outage_t, params,
-            axis_name=axis_name, fault_key=fkey, es_belief=es_belief0,
-            link_factor=link_factor, covered=covered, cell=cell_t)
+    # the confidence stream is replayed the same way — folded from its
+    # own seed — so arming HI never perturbs arrivals either
+    hikey = (jax.random.fold_in(jax.random.PRNGKey(params.hi_seed), t)
+             if params.hi_armed else None)
+    (new_belief, new_warm, upd, _factor, new_es_belief, cell_load,
+     new_hi, m) = _period_impl(
+        state.p_ed, warm0, ci, take, drift_t, outage_t, params,
+        axis_name=axis_name, fault_key=fkey, es_belief=es_belief0,
+        link_factor=link_factor, covered=covered, cell=cell_t,
+        hi_key=hikey, hi_state=state.hi, hi_t=t)
     backlog = jnp.sum(pending)
     if axis_name:
         backlog = jax.lax.psum(backlog, axis_name)
@@ -1086,7 +1265,7 @@ def _step_impl(state: EngineState, params: EngineParams,
         pending=pending, head=head, warm_basis=new_warm,
         n_updates=(state.n_updates + upd.astype(jnp.int32)),
         pos=pos_t, cell=cell_t.astype(jnp.int32), cell_load=cell_load,
-        p_es_belief=new_es_belief)
+        p_es_belief=new_es_belief, hi=new_hi)
     return new_state, metrics
 
 
@@ -1097,16 +1276,20 @@ def _step_jit(state, params):
 
 @jax.jit
 def _period_jit(belief, warm_basis, ci, take, drift_t, outage_t, params,
-                fault_key=None, es_belief=None):
+                fault_key=None, es_belief=None, hi_key=None,
+                hi_state=None, hi_t=None):
     """The host `FleetEngine.run_period` delegation target: the same
     period core `step` scans over, minus the arrival/state bookkeeping
     (the host engine owns its queue and stats).  ``fault_key`` replays
     one period of the fault stream (`fold_in(PRNGKey(fault_seed),
     period)` — the exact draw `step` makes), or None when chaos is
     disarmed.  ``es_belief`` threads the chaos-audited ES price table
-    between host periods (None prices from the nominal `params.p_es`)."""
+    between host periods (None prices from the nominal `params.p_es`).
+    ``hi_key``/``hi_state``/``hi_t`` replay one period of the HI stream
+    and thread the learner state the same way (None while disarmed)."""
     return _period_impl(belief, warm_basis, ci, take, drift_t, outage_t,
-                        params, fault_key=fault_key, es_belief=es_belief)
+                        params, fault_key=fault_key, es_belief=es_belief,
+                        hi_key=hi_key, hi_state=hi_state, hi_t=hi_t)
 
 
 def _rollout_impl(state, params, periods: int):
@@ -1332,7 +1515,10 @@ def _state_specs():
     dev = P(FLEET_AXIS)
     return EngineState(period=P(), key=P(), p_ed=dev, pending=dev,
                        head=dev, warm_basis=dev, n_updates=dev,
-                       pos=dev, cell=dev, cell_load=P(), p_es_belief=dev)
+                       pos=dev, cell=dev, cell_load=P(), p_es_belief=dev,
+                       hi=HILearnerState(theta=dev, arm=dev, arms_sum=dev,
+                                         arms_cnt=dev, es_sum=dev,
+                                         es_cnt=dev, cum_regret=dev))
 
 
 def _param_specs(params: EngineParams):
@@ -1351,11 +1537,15 @@ def _param_specs(params: EngineParams):
         walk_sigma=P(),
         trace=(P(None, FLEET_AXIS) if params.mobility_mode != "off"
                else P()))
+    # armed HI never reaches the sharded entries (`_reject_hi_sharded`),
+    # so the null model's placeholder leaves just replicate
+    hi_specs = HIModel(
+        **{f.name: P() for f in dataclasses.fields(HIModel)})
     return dataclasses.replace(
         params, classes=P(), base_p_ed=dev, p_es=dev, acc=dev, T=P(),
         rate=dev, class_probs=P(), drift=dev, outage=dev,
         counts=P(None, FLEET_AXIS), stream=dev, faults=fault_specs,
-        mobility=mobility_specs)
+        mobility=mobility_specs, hi=hi_specs)
 
 
 def _metric_specs():
@@ -1372,6 +1562,7 @@ def shard(state: EngineState, params: EngineParams, mesh
     must divide the mesh."""
     from jax.experimental import enable_x64
     from jax.sharding import NamedSharding
+    _reject_hi_sharded(params)
     _require_f64("state", state)
     _require_f64("params", params)
     D = params.n_devices
@@ -1431,6 +1622,19 @@ def _reject_diff_sharded(params: EngineParams) -> None:
             "rollout_value_and_grad on the single-host trace")
 
 
+def _reject_hi_sharded(params: EngineParams) -> None:
+    """Armed HI carries learner state whose replay-trace slicing and
+    per-arm bookkeeping have not been validated under `shard_map` yet —
+    reject instead of silently diverging from the unsharded trajectory
+    (the confidence stream itself already folds GLOBAL device ids, so
+    this rung is small; see ROADMAP)."""
+    if params.hi_armed:
+        raise ValueError(
+            "sharded entry points do not support armed HI "
+            f"(hi_rule={params.hi_rule!r}); disarm with with_hi(None) or "
+            "run the single-host rollout")
+
+
 def step_sharded(state: EngineState, params: EngineParams, mesh
                  ) -> Tuple[EngineState, PeriodMetrics]:
     """`step` under `shard_map`: the fleet axis stays partitioned across
@@ -1438,6 +1642,7 @@ def step_sharded(state: EngineState, params: EngineParams, mesh
     psum-reduced, so the output matches the unsharded `step`."""
     from jax.experimental import enable_x64
     _reject_diff_sharded(params)
+    _reject_hi_sharded(params)
     _require_f64("state", state)
     _require_f64("params", params)
     _check_horizon(state, params, 1)
@@ -1453,6 +1658,7 @@ def rollout_sharded(state: EngineState, params: EngineParams,
     consumes the input state's shards (see `rollout`)."""
     from jax.experimental import enable_x64
     _reject_diff_sharded(params)
+    _reject_hi_sharded(params)
     _require_f64("state", state)
     _require_f64("params", params)
     _check_horizon(state, params, periods)

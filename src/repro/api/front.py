@@ -281,6 +281,7 @@ def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
         _merge_basis(idxs, sub.basis)
         _merge_lp_acc(idxs, sub.lp_accuracy)
     rest = np.nonzero(~ident)[0]
+    sub = None
     if len(rest):
         name = _fallback_name(policy)
         solver = get_solver(name)
@@ -292,9 +293,18 @@ def _solve_fleet(fleet: FleetProblem, policy: str, backend: str,
         solver_tag[rest] = name
         _merge_basis(rest, sub.basis)
         _merge_lp_acc(rest, sub.lp_accuracy)
-    return Solution(problem=fleet, assignment=assignment, status=status,
-                    solver=solver_tag, basis=basis, lp_accuracy=lp_acc,
-                    plan_seconds=time.perf_counter() - t0)
+    out = Solution(problem=fleet, assignment=assignment, status=status,
+                   solver=solver_tag, basis=basis, lp_accuracy=lp_acc,
+                   plan_seconds=time.perf_counter() - t0)
+    if sub is not None and len(rest) == B:
+        # solver-attached extras (routed's cell/link_factor, the HI
+        # entries' learner state) survive the front door when one solver
+        # handled the whole fleet — per-row merging of opaque extras
+        # across the auto/amdp split is not defined
+        for extra in ("cell", "link_factor", "hi_state", "hi_theta"):
+            if hasattr(sub, extra):
+                setattr(out, extra, getattr(sub, extra))
+    return out
 
 
 def _solve_fleet_es_disabled(fleet: FleetProblem, policy: str, backend: str,

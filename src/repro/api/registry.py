@@ -30,6 +30,9 @@ class SolverInfo:
     supports_es_disabled: bool    # usable for backpressure/outage replans
     bound_only: bool = False      # yields an upper bound, not a schedule
     warm_start: bool = False      # accepts warm_start= (Solution.basis)
+    online: bool = False          # learns per-sample in-stream (no prior
+    #                               accuracy knowledge; pair with
+    #                               EngineParams.with_hi for rollouts)
     description: str = ""
 
 
@@ -55,7 +58,7 @@ _REGISTRY: Dict[str, Solver] = {}
 
 def register_solver(name: str, *, batched: bool, exact_on_identical: bool,
                     supports_es_disabled: bool, bound_only: bool = False,
-                    warm_start: bool = False,
+                    warm_start: bool = False, online: bool = False,
                     description: str = "") -> Callable:
     """Class decorator: instantiate and register a solver under ``name``."""
     def deco(cls):
@@ -64,7 +67,7 @@ def register_solver(name: str, *, batched: bool, exact_on_identical: bool,
             name=name, batched=batched,
             exact_on_identical=exact_on_identical,
             supports_es_disabled=supports_es_disabled,
-            bound_only=bound_only, warm_start=warm_start,
+            bound_only=bound_only, warm_start=warm_start, online=online,
             description=description)
         _REGISTRY[name] = solver
         return cls
@@ -92,15 +95,16 @@ def solvers() -> Dict[str, SolverInfo]:
 def solver_table() -> str:
     """The registry rendered as a markdown capability table."""
     rows = ["| solver | batched | exact on identical | es-disabled | "
-            "warm-start | description |",
+            "warm-start | online | description |",
             "|--------|---------|--------------------|-------------|"
-            "------------|-------------|"]
+            "------------|--------|-------------|"]
     for name, info in solvers().items():
         rows.append(
             f"| `{name}` | {'yes' if info.batched else 'no'} "
             f"| {'yes' if info.exact_on_identical else 'no'} "
             f"| {'yes' if info.supports_es_disabled else 'no'} "
             f"| {'yes' if info.warm_start else 'no'} "
+            f"| {'yes' if info.online else 'no'} "
             f"| {info.description}"
             f"{' (bound only)' if info.bound_only else ''} |")
     return "\n".join(rows)

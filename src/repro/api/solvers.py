@@ -129,6 +129,118 @@ class RoutedSolver:
         return sol
 
 
+class _HISolverBase:
+    """Shared host front-end for the online hierarchical-inference rules
+    (`core.hi`): one period of per-sample decisions from an observed
+    confidence matrix, with the learner advanced IN-STREAM when the
+    caller feeds back the realized outcomes.
+
+    Unlike every offline entry, the decision needs no accuracy table —
+    ``fleet.acc`` is consulted only for the regret metric the engine
+    books, never by the rule itself.  The traced twin lives inside the
+    engine's scan (`EngineParams.with_hi` + `rollout`); this entry is
+    the single-period host mirror, `RoutedSolver`-style (solve_fleet
+    only)."""
+
+    rule = "fixed"
+
+    def solve_fleet(self, fleet: FleetProblem, *, confidence: np.ndarray,
+                    hi=None, state=None, observed_local=None,
+                    observed_es=None, t: int = 0, seed: int = 0,
+                    n_arms: int = 9, local_model: int = 0) -> Solution:
+        """Decide this period's assignments from ``confidence`` (B, n).
+
+        ``hi`` is a `core.hi.HIModel` (default: `HIModel.make()`),
+        ``state`` the incoming `HILearnerState` (default: fresh at the
+        model's ``theta0``).  Passing BOTH ``observed_local`` and
+        ``observed_es`` (B, n) bool outcome matrices advances the
+        learner; without them the period is decide-only and the state is
+        returned unchanged.  The updated state and the served threshold
+        ride on the returned Solution as ``sol.hi_state`` /
+        ``sol.hi_theta``."""
+        import jax as _jax
+        from jax.experimental import enable_x64
+
+        from ..core.hi import (HILearnerState, HIModel, hi_period,
+                               validate_hi)
+        B, n = fleet.p_es.shape
+        m = fleet.p_ed.shape[2]
+        hm = hi if hi is not None else HIModel.make()
+        # the host mirror receives confidences directly (it never samples
+        # the calibration curves), so spread's class count is its own
+        validate_hi(hm, n_devices=B,
+                    n_classes=np.asarray(hm.spread).shape[0], n_models=m,
+                    rule=self.rule, stream="fold", n_arms=n_arms,
+                    local_model=local_model)
+        conf = np.asarray(confidence, np.float64)
+        if conf.shape != (B, n):
+            raise ValueError(
+                f"confidence must be ({B}, {n}) to match the fleet; got "
+                f"{conf.shape}")
+        hst = state if state is not None else HILearnerState.init(
+            B, n_arms, hm.theta0)
+        have_obs = observed_local is not None and observed_es is not None
+        cl = (np.asarray(observed_local, bool) if have_obs
+              else np.zeros((B, n), bool))
+        ces = (np.asarray(observed_es, bool) if have_obs
+               else np.zeros((B, n), bool))
+        acc_es = np.asarray(fleet.acc, np.float64)[:, m]
+        with enable_x64():
+            key = _jax.random.fold_in(_jax.random.PRNGKey(seed),
+                                      np.int32(t))
+            offload, theta_t, new_hst, _reg = hi_period(
+                self.rule, hm, hst, conf, cl, ces, fleet.real_mask,
+                acc_es, np.int32(t), key, n_arms)
+        offload = np.asarray(offload)
+        # phantoms follow the fleet convention: free ES columns
+        assignment = np.where(offload | ~fleet.real_mask, m, local_model
+                              ).astype(np.int64)
+        sol = Solution(problem=fleet, assignment=assignment,
+                       status=np.full(B, _STATUS_CODE["ok"], np.int64),
+                       solver=np.full(B, self.info.name, dtype=object))
+        # decide-only calls keep the incoming state: the update above ran
+        # on all-False placeholder outcomes and must not be persisted
+        sol.hi_state = (_jax.tree.map(np.asarray, new_hst) if have_obs
+                        else hst)
+        sol.hi_theta = np.asarray(theta_t)
+        return sol
+
+
+@register_solver(
+    "hi_threshold", batched=True, exact_on_identical=False,
+    supports_es_disabled=False, online=True,
+    description="online hierarchical inference: offload sample j iff "
+                "conf_j < theta, theta learned in-stream by OGD "
+                "(arXiv 2304.00891); engine twin: "
+                "EngineParams.with_hi(rule='threshold')")
+class HIThresholdSolver(_HISolverBase):
+    rule = "threshold"
+
+
+@register_solver(
+    "hi_bandit", batched=True, exact_on_identical=False,
+    supports_es_disabled=False, online=True,
+    description="online hierarchical inference: UCB over discretized "
+                "thresholds (rule='ucb'; EXP3 via rule='exp3'); engine "
+                "twin: EngineParams.with_hi(rule='ucb')")
+class HIBanditSolver(_HISolverBase):
+    rule = "ucb"
+
+    def solve_fleet(self, fleet: FleetProblem, *,
+                    confidence: np.ndarray, rule: str = "ucb", hi=None,
+                    state=None, observed_local=None, observed_es=None,
+                    t: int = 0, seed: int = 0, n_arms: int = 9,
+                    local_model: int = 0) -> Solution:
+        if rule not in ("ucb", "exp3"):
+            raise ValueError(f"hi_bandit rule must be 'ucb' or 'exp3'; "
+                             f"got {rule!r}")
+        self.rule = rule
+        return super().solve_fleet(
+            fleet, confidence=confidence, hi=hi, state=state,
+            observed_local=observed_local, observed_es=observed_es, t=t,
+            seed=seed, n_arms=n_arms, local_model=local_model)
+
+
 @register_solver(
     "amdp", batched=True, exact_on_identical=True,
     supports_es_disabled=True,

@@ -17,6 +17,8 @@ from .fleet import (DeviceSpec, EdgeServerPool, FleetConfig, FleetEngine,
                     paper_style_profile, roofline_style_profile)
 from .faults import (FaultModel, FaultRealization, greedy_local_fill,
                      realize_execution, sample_realization)
+from .hi import (HILearnerState, HIModel, arm_grid, hi_period,
+                 presample_stream, sample_confidence)
 from . import engine_v2  # pure-functional EngineState/step/rollout/shard
 
 __all__ = [
@@ -38,6 +40,9 @@ __all__ = [
     # chaos: fault injection + the degradation ladder
     "FaultModel", "FaultRealization", "sample_realization",
     "greedy_local_fill", "realize_execution",
+    # online hierarchical inference (confidence-gated offloading)
+    "HIModel", "HILearnerState", "arm_grid", "sample_confidence",
+    "presample_stream", "hi_period",
     # pure-functional engine (EngineState pytree + step/rollout/shard)
     "engine_v2",
 ]

@@ -182,6 +182,12 @@ class FleetPeriodStats:
     n_dropped: int = 0          # ladder rung 3: accuracy-0 drops
     realized_makespan: float = 0.0  # max realized device wall (seconds)
     n_es_audit_updates: int = 0  # ES-latency beliefs EMA-inflated (chaos)
+    # online hierarchical inference (repro.serving.hi) — every sample
+    # runs the local model, so n_hi_offloaded + n_hi_local_final ==
+    # n_jobs per period; exact zeros while HI is disarmed
+    n_hi_offloaded: int = 0      # samples that consulted the ES
+    n_hi_local_final: int = 0    # samples served by the local model alone
+    hi_regret: float = 0.0       # fleet cumulative pseudo-regret vs theta*
 
 
 class EdgeServerPool:
@@ -300,6 +306,16 @@ class FleetConfig:
     mobility_mode: str = "replay"
     routing: str = "nearest"
     mobility_seed: int = 0
+    # online hierarchical inference (engine-v2 delegation only; see
+    # repro.serving.hi).  None disarms; armed, ``hi_rule`` picks the
+    # per-sample decision rule and the confidence gate replaces the LP
+    # plan.  `EngineParams.from_config` picks these up for rollouts.
+    hi: Optional[object] = None             # core.hi.HIModel
+    hi_rule: str = "threshold"
+    hi_stream: str = "fold"
+    hi_arms: int = 9
+    hi_seed: int = 0
+    hi_local: int = 0
     # "raise" (default): an uncertified-LP period raises
     # UnsolvedPeriodError (carrying partial stats); "warn": warn and book
     # the period — its unsolved lanes were re-planned local-only by the
@@ -362,14 +378,20 @@ class FleetEngine:
                    straggler_threshold=config.straggler_threshold,
                    ema=config.ema, delegate=config.delegate,
                    faults=config.faults, max_retries=config.max_retries,
-                   fault_seed=config.fault_seed, strict=config.strict)
+                   fault_seed=config.fault_seed, strict=config.strict,
+                   hi=config.hi, hi_rule=config.hi_rule,
+                   hi_stream=config.hi_stream, hi_arms=config.hi_arms,
+                   hi_seed=config.hi_seed, hi_local=config.hi_local)
 
     def __init__(self, devices: Sequence[DeviceSpec], queue: RequestQueue, *,
                  n_servers: int = 1, T: float, policy: str = "auto",
                  backend: str = "jax", straggler_threshold: float = 1.5,
                  ema: float = 0.5, delegate: bool = True,
                  faults: Optional[FaultModel] = None, max_retries: int = 2,
-                 fault_seed: int = 0, strict: str = "raise"):
+                 fault_seed: int = 0, strict: str = "raise",
+                 hi: Optional[object] = None, hi_rule: str = "threshold",
+                 hi_stream: str = "fold", hi_arms: int = 9,
+                 hi_seed: int = 0, hi_local: int = 0):
         if queue.n_devices != len(devices):
             raise ValueError("queue.n_devices must match the fleet size")
         if strict not in ("raise", "warn"):
@@ -465,6 +487,15 @@ class FleetEngine:
             # execution audit inflates rows)
             self._v2_es_belief = np.array(
                 np.asarray(self._v2_params.p_es), dtype=np.float64)
+            if hi is not None:
+                # arm online hierarchical inference on the delegated
+                # params (validates interplay: chaos must be disarmed)
+                # and mirror the scan's EngineState.hi learner leaf
+                self._v2_params = self._v2_params.with_hi(
+                    hi, rule=hi_rule, stream=hi_stream, n_arms=hi_arms,
+                    hi_seed=hi_seed, local_model=hi_local)
+                self._v2_hi_state = _engine_v2.HILearnerState.init(
+                    len(devices), hi_arms, hi.theta0)
         if faults is not None and not faults.is_null() \
                 and self._v2_params is None:
             # the ladder lives in the traced period core; there is no
@@ -474,6 +505,14 @@ class FleetEngine:
                 "backend, amr2/dual policy, one profile shape group, "
                 "delegate=True); this engine would run the host period "
                 "pipeline")
+        if hi is not None and self._v2_params is None:
+            # the confidence gate + learner live in the traced period
+            # core; there is no host twin of the per-sample decision pass
+            raise ValueError(
+                "online hierarchical inference needs the engine-v2 "
+                "delegation (jax backend, amr2/dual policy, one profile "
+                "shape group, delegate=True); this engine would run the "
+                "host period pipeline")
 
     # ------------------------------------------------------------------
     def run(self, periods: int) -> List[FleetPeriodStats]:
@@ -544,11 +583,26 @@ class FleetEngine:
                 import jax as _jax
                 fault_key = _jax.random.fold_in(
                     _jax.random.PRNGKey(params.fault_seed), np.int32(t))
+            hi_key = hi_state = hi_t = None
+            if params.hi_armed:
+                # same idiom for the confidence stream: the exact
+                # per-period fold step() makes, plus the learner state
+                # threaded between host periods like the ES belief
+                import jax as _jax
+                hi_key = _jax.random.fold_in(
+                    _jax.random.PRNGKey(params.hi_seed), np.int32(t))
+                hi_state = self._v2_hi_state
+                hi_t = np.int32(t)
             (_belief2, new_warm, upd, factor, new_es_belief, _cload,
-             m) = _period_jit(belief, warm, ci, take, drift, outage,
-                              params, fault_key,
-                              es_belief=self._v2_es_belief)
+             new_hi, m) = _period_jit(belief, warm, ci, take, drift,
+                                      outage, params, fault_key,
+                                      es_belief=self._v2_es_belief,
+                                      hi_key=hi_key, hi_state=hi_state,
+                                      hi_t=hi_t)
         self._v2_es_belief = np.asarray(new_es_belief, dtype=np.float64)
+        if params.hi_armed:
+            import jax as _jax
+            self._v2_hi_state = _jax.tree.map(np.asarray, new_hi)
         m = {k: np.asarray(v) for k, v in m.items()}
         plan_seconds = _time.perf_counter() - t0
         if int(m["n_unsolved"]):
@@ -601,7 +655,10 @@ class FleetEngine:
             n_fallback_local=int(m["n_fallback_local"]),
             n_dropped=int(m["n_dropped"]),
             realized_makespan=float(m["realized_makespan"]),
-            n_es_audit_updates=int(m["n_es_audit_updates"]))
+            n_es_audit_updates=int(m["n_es_audit_updates"]),
+            n_hi_offloaded=int(m["n_hi_offloaded"]),
+            n_hi_local_final=int(m["n_hi_local_final"]),
+            hi_regret=float(m["hi_regret"]))
         self.history.append(stats)
         return stats
 

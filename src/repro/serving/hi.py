@@ -1,0 +1,30 @@
+"""`repro.serving.hi` — the serving-layer name for online hierarchical
+inference (confidence-gated per-sample offloading with in-rollout
+learning).
+
+The implementation lives in `repro.core.hi` (pure-numerics territory:
+calibrated confidence streams, the threshold/bandit learners, and the
+regret accounting are array math with no serving dependencies — which
+also keeps `repro.api.engine`, which consumes it inside the traced
+period step, free of an import cycle through this package).  This module
+re-exports it under the serving namespace so HI config reads naturally
+next to `FleetEngine` (the `faults`/`engine_v2` idiom):
+
+    from repro.serving import hi
+    hm = hi.HIModel.from_profiles(profile.p_ed, offload_cost=0.15)
+    eng = FleetEngine.from_config(
+        dataclasses.replace(cfg, hi=hm, hi_rule="threshold"))
+
+`HIModel.none()` is the null model; a rollout carrying it with
+``hi_rule="off"`` is bitwise-identical to one without the subsystem.
+"""
+from ..core.hi import (EXP3_GAMMA, HI_RULES, HI_STREAMS, HILearnerState,
+                       HIModel, arm_grid, hi_period, presample_stream,
+                       sample_confidence, validate_hi)
+
+__all__ = [
+    "HI_RULES", "HI_STREAMS", "EXP3_GAMMA",
+    "HIModel", "HILearnerState",
+    "arm_grid", "sample_confidence", "presample_stream", "hi_period",
+    "validate_hi",
+]

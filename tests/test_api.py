@@ -35,7 +35,8 @@ def _problems(insts):
 # registry
 # ---------------------------------------------------------------------------
 def test_registry_lists_all_solvers():
-    assert api.solver_names() == ["amdp", "amr2", "dual", "greedy", "lp",
+    assert api.solver_names() == ["amdp", "amr2", "dual", "greedy",
+                                  "hi_bandit", "hi_threshold", "lp",
                                   "routed"]
     infos = api.solvers()
     assert infos["amdp"].exact_on_identical
@@ -43,6 +44,10 @@ def test_registry_lists_all_solvers():
     assert infos["lp"].bound_only and not infos["lp"].supports_es_disabled
     for name in ("amr2", "amdp", "dual", "lp"):
         assert infos[name].batched
+        assert not infos[name].online
+    for name in ("hi_threshold", "hi_bandit"):
+        assert infos[name].online and infos[name].batched
+        assert not infos[name].supports_es_disabled
     # the table renders one row per solver
     assert api.solver_table().count("\n") == len(infos) + 1
 

@@ -322,8 +322,9 @@ def test_partition_diff_regression():
     diff, nondiff = E.partition_diff(state)
     back = E.combine_diff(diff, nondiff)
     for f in E._STATE_FIELDS:
-        np.testing.assert_array_equal(np.asarray(getattr(back, f)),
-                                      np.asarray(getattr(state, f)), f)
+        for a, b in zip(jax.tree.leaves(getattr(back, f)),
+                        jax.tree.leaves(getattr(state, f))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), f)
 
     g = jax.grad(
         lambda d: jnp.sum(E.combine_diff(d, nondiff).p_ed))(diff)
@@ -356,6 +357,11 @@ def test_with_differentiable_validators():
         from repro.core.faults import FaultModel
         params.with_faults(FaultModel.make(es_crash_prob=0.1),
                            fault_seed=1).with_differentiable()
+    # armed HI is discrete per-sample gating: the relaxation must refuse
+    with pytest.raises(ValueError, match="HI disarmed"):
+        from repro.core.hi import HIModel
+        params.with_hi(HIModel.make(),
+                       rule="threshold").with_differentiable()
 
     # disarm round-trips to a hard-path params value
     off = params.with_differentiable().with_differentiable(False)

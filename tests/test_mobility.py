@@ -9,6 +9,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import jax
 import jax.numpy as jnp
 
 from repro.api import engine as E
@@ -75,8 +76,9 @@ def test_step_sequence_equals_rollout_with_mobility():
     for _ in range(periods):
         s, _ = E.step(s, p3)
     for f in E._STATE_FIELDS:
-        np.testing.assert_array_equal(np.asarray(getattr(s, f)),
-                                      np.asarray(getattr(s_roll, f)), f)
+        for a, b in zip(jax.tree.leaves(getattr(s, f)),
+                        jax.tree.leaves(getattr(s_roll, f))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), f)
     assert int(np.asarray(m.n_handover).sum()) > 0
 
 
